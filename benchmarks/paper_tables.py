@@ -1,0 +1,97 @@
+"""Benchmarks reproducing the paper's tables.
+
+T1-T4: nets A-D accuracy before/after per-layer PVQ (paper §VII).
+T5-T8: pulse distribution + bits/weight per layer (paper §VI/§VII).
+Additionally: the §III op-count claim and §II enumeration sizes.
+
+Fast mode (default) trains short; --full uses the EXPERIMENTS.md settings.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+
+
+def bench_tables_1_to_4(steps: Dict[str, int] | None = None, refine: bool = False) -> List[dict]:
+    from repro.paper.experiment import run_net
+
+    steps = steps or {"A": 300, "B": 250, "C": 250, "D": 150}
+    rows = []
+    for net_id, n in steps.items():
+        t0 = time.time()
+        r = run_net(net_id, steps=n, check_fold=(net_id in "AB"),
+                    refine_steps=(100 if refine else 0))
+        rows.append({
+            "table": {"A": "T1", "B": "T2", "C": "T3", "D": "T4"}[net_id],
+            "net": net_id,
+            "acc_before_pct": round(100 * r.acc_before, 2),
+            "acc_after_pct": round(100 * r.acc_after, 2),
+            "drop_pts": round(r.drop_pct, 2),
+            "acc_ls_pct": round(100 * r.acc_after_ls, 2),
+            "acc_refined_pct": round(100 * r.acc_refined, 2) if r.acc_refined else None,
+            "fold_rel_err": (r.fold_check or {}).get("rel_err"),
+            "us_per_call": round(1e6 * (time.time() - t0), 1),
+        })
+    return rows
+
+
+def bench_tables_5_to_8() -> List[dict]:
+    """Pulse statistics at the paper's N/K ratios on Laplacian weights."""
+    from repro.core.codes import compression_report, pulse_histogram
+    from repro.core.pvq import pvq_encode_np
+
+    rows = []
+    rng = np.random.default_rng(0)
+    for n, n_over_k, label in (
+        (401920, 5.0, "T5:FC0(A)"),
+        (9248, 1.0, "T6:CONV1(B)"),
+        (2097664, 4.0, "T6:FC4(B)"),
+        (401920, 2.5, "T7:FC0(C)"),
+        (896, 0.4, "T8:CONV0(D)"),
+    ):
+        t0 = time.time()
+        w = rng.laplace(size=n)
+        k = max(int(round(n / n_over_k)), 1)
+        y, _ = pvq_encode_np(w, k)
+        h = pulse_histogram(y)
+        rep = compression_report(y)
+        rows.append({
+            "table": label, "N": n, "K": k,
+            "zeros_pct": round(h["0_pct"], 2),
+            "pm1_pct": round(h["+-1_pct"], 2),
+            "pm23_pct": round(h["+-2..3_pct"], 2),
+            "golomb_bits_per_weight": round(rep["golomb_bits_per_weight"], 3),
+            "rle_bits_per_weight": round(rep["rle_bits_per_weight"], 3),
+            "us_per_call": round(1e6 * (time.time() - t0), 1),
+        })
+    return rows
+
+
+def bench_opcount_claim() -> List[dict]:
+    """§III: dot product cost K-1 adds + 1 mul; §II: N_p(8,4)=2816."""
+    import jax.numpy as jnp
+
+    from repro.core import dot_op_counts, index_bits, num_points, pvq_encode
+
+    t0 = time.time()
+    rows = []
+    for n, k in ((1024, 128), (4096, 512), (256, 256)):
+        w = jnp.asarray(np.random.default_rng(n).laplace(size=n).astype(np.float32))
+        code = pvq_encode(w, k)
+        c = dot_op_counts(code)
+        rows.append({
+            "table": "S3:opcount", "N": n, "K": k,
+            "pvq_adds": c["pvq_adds"], "pvq_muls": c["pvq_muls"],
+            "naive_adds": c["naive_adds"], "naive_muls": c["naive_muls"],
+            "mult_reduction": round(c["naive_muls"] / max(c["pvq_muls"], 1), 1),
+            "us_per_call": round(1e6 * (time.time() - t0), 1),
+        })
+    rows.append({
+        "table": "S2:enumeration", "N": 8, "K": 4,
+        "num_points": num_points(8, 4), "bits": index_bits(8, 4),
+        "expected": 2816, "us_per_call": round(1e6 * (time.time() - t0), 1),
+    })
+    return rows

@@ -1,0 +1,52 @@
+"""Benchmark harness: one function per paper table + kernel/system benches.
+
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only PREFIX]
+
+Prints ``name,us_per_call,derived`` CSV rows (one per benchmark), then a
+human-readable table dump.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="EXPERIMENTS.md-scale settings")
+    ap.add_argument("--only", default="", help="run only benches whose name starts with this")
+    args = ap.parse_args()
+
+    from benchmarks import kernel_bench, paper_tables
+
+    all_rows = []
+
+    def run(name, fn, *fa, **fk):
+        if args.only and not name.startswith(args.only):
+            return
+        print(f"[bench] {name} ...", file=sys.stderr, flush=True)
+        rows = fn(*fa, **fk)
+        for r in rows:
+            r["bench_group"] = name
+        all_rows.extend(rows)
+
+    steps = {"A": 600, "B": 400, "C": 400, "D": 250} if args.full else {"A": 300, "B": 250, "C": 250, "D": 150}
+    run("paper_tables_1_4", paper_tables.bench_tables_1_to_4, steps, args.full)
+    run("paper_tables_5_8", paper_tables.bench_tables_5_to_8)
+    run("paper_opcount", paper_tables.bench_opcount_claim)
+    run("kernel_pvq_matmul", kernel_bench.bench_pvq_matmul)
+    run("kernel_pvq_encode", kernel_bench.bench_pvq_encode)
+
+    # CSV contract: name,us_per_call,derived
+    print("name,us_per_call,derived")
+    for r in all_rows:
+        name = r.get("bench") or f"{r['bench_group']}:{r.get('table', r.get('net', ''))}"
+        us = r.get("us_per_call", "")
+        derived = {k: v for k, v in r.items() if k not in ("bench_group", "bench", "us_per_call")}
+        print(f"{name},{us},{json.dumps(derived, default=str).replace(',', ';')}")
+
+
+if __name__ == "__main__":
+    main()

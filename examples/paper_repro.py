@@ -1,0 +1,36 @@
+"""Reproduce the paper's §VII experiments (nets A-D) end to end.
+
+    PYTHONPATH=src python examples/paper_repro.py [--nets A,C] [--steps 600]
+        [--refine 150]
+
+Trains each net on the synthetic MNIST/CIFAR stand-ins (offline container),
+applies the paper's per-layer PVQ procedure, and prints the Tables 1-8
+equivalents: accuracy before/after, pulse histograms, bits/weight, and the
+§V integer-net folding check.
+"""
+
+import argparse
+
+from repro.paper.experiment import format_result, run_net
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--nets", default="A,B,C,D")
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--refine", type=int, default=0)
+    args = ap.parse_args()
+
+    for net_id in args.nets.split(","):
+        r = run_net(
+            net_id.strip(),
+            steps=args.steps,
+            check_fold=(net_id in "AB"),  # ReLU nets: homogeneous folding
+            refine_steps=args.refine,
+        )
+        print(format_result(r))
+        print()
+
+
+if __name__ == "__main__":
+    main()

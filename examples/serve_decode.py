@@ -1,0 +1,14 @@
+"""Batched serving example (deliverable (b)): prefill + autoregressive decode
+with KV/SSM caches, optionally with PVQ-quantized weights — the paper's
+inference story (compressed weights, cheap dot products) on the serving path.
+
+    PYTHONPATH=src python examples/serve_decode.py --arch smollm-360m --reduced --pvq
+    PYTHONPATH=src python examples/serve_decode.py --arch rwkv6-1.6b --reduced
+"""
+
+import sys
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,18 @@
+"""End-to-end LM training driver (deliverable (b)): trains a ~100M-class
+model for a few hundred steps on the synthetic token task with the full
+substrate — AdamW, deterministic sharded data pipeline, async checkpointing,
+fault-tolerant runner — and optionally the paper's PVQ-QAT.
+
+    # fast smoke (reduced config):
+    PYTHONPATH=src python examples/train_lm.py --steps 60 --reduced
+
+    # real ~360M model, a few hundred steps (slow on CPU):
+    PYTHONPATH=src python examples/train_lm.py --arch smollm-360m --steps 300
+"""
+
+import sys
+
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    sys.exit(main())

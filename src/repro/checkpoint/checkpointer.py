@@ -1,0 +1,190 @@
+"""Checkpointing: atomic, async, restart-safe; optional PVQ-compressed
+weight storage (paper §VI applied to the checkpoint/network path).
+
+Layout:  <dir>/step_<N>/  with one .npy per leaf (flat-keyed), a manifest
+json, and a COMMIT marker written last — restore only trusts committed
+steps, so a mid-write crash can never be restored from (fault tolerance).
+
+``compress='pvq'`` stores matrix leaves as PVQ codes (int8 pulses +
+f32 group scales + Golomb-packed bitstream size report); restore
+dequantizes.  This is *lossy* for the weights (exactly the paper's trade)
+and bit-exact for everything else (moments, step counters).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from pathlib import Path
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import pvq_encode_grouped, pvq_decode_grouped
+from repro.core.codes import golomb_encode
+from repro.core.packing import pack_nibbles, unpack_nibbles
+
+
+def _flatten(tree: Any) -> Dict[str, np.ndarray]:
+    flat = {}
+
+    def visit(path, leaf):
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        flat[key] = np.asarray(leaf)
+        return leaf
+
+    jax.tree_util.tree_map_with_path(visit, tree)
+    return flat
+
+
+def _unflatten_into(tree: Any, flat: Dict[str, np.ndarray]) -> Any:
+    def visit(path, leaf):
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        arr = flat[key]
+        return jnp.asarray(arr).astype(leaf.dtype).reshape(leaf.shape)
+
+    return jax.tree_util.tree_map_with_path(visit, tree)
+
+
+class Checkpointer:
+    def __init__(
+        self,
+        directory: str | Path,
+        *,
+        keep: int = 3,
+        compress: Optional[str] = None,  # None | 'pvq'
+        pvq_n_over_k: float = 1.0,
+        pvq_group: int = 256,
+        min_compress_size: int = 4096,
+    ):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self.compress = compress
+        self.pvq_n_over_k = pvq_n_over_k
+        self.pvq_group = pvq_group
+        self.min_compress_size = min_compress_size
+        self._async_thread: Optional[threading.Thread] = None
+
+    # ------------------------------------------------------------------ save
+
+    def save(self, step: int, state: Any, *, block: bool = True) -> Path:
+        """Write checkpoint for ``step``. With block=False, runs in a thread
+        (async checkpointing: the step loop keeps running)."""
+        host_state = jax.tree.map(np.asarray, state)  # snapshot off-device now
+        if block:
+            return self._write(step, host_state)
+        self.wait()
+        self._async_thread = threading.Thread(target=self._write, args=(step, host_state), daemon=True)
+        self._async_thread.start()
+        return self.dir / f"step_{step:09d}"
+
+    def wait(self):
+        if self._async_thread is not None:
+            self._async_thread.join()
+            self._async_thread = None
+
+    def _write(self, step: int, state: Any) -> Path:
+        final = self.dir / f"step_{step:09d}"
+        tmp = self.dir / f".tmp_step_{step:09d}_{os.getpid()}"
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+        flat = _flatten(state)
+        manifest: Dict[str, Any] = {"step": step, "leaves": {}, "compress": self.compress}
+        for key, arr in flat.items():
+            fname = key.replace("/", "__")
+            entry: Dict[str, Any] = {"shape": list(arr.shape), "dtype": str(arr.dtype)}
+            is_float = str(arr.dtype) in ("float32", "float16", "bfloat16")
+            if (
+                self.compress == "pvq"
+                and arr.ndim >= 2
+                and arr.size >= self.min_compress_size
+                and is_float
+            ):
+                code = pvq_encode_grouped(
+                    jnp.asarray(arr, jnp.float32).reshape(-1),
+                    group=self.pvq_group,
+                    k=max(int(round(self.pvq_group / self.pvq_n_over_k)), 1),
+                    scale_mode="ls",
+                )
+                pulses = np.asarray(code.pulses)
+                if np.abs(pulses).max(initial=0) <= 7:
+                    packed, pshape = pack_nibbles(pulses)
+                    np.save(tmp / f"{fname}.pulses.npy", packed)
+                    entry["pulse_format"] = "nibble"
+                    entry["pulse_shape"] = list(pshape)
+                else:
+                    np.save(tmp / f"{fname}.pulses.npy", pulses.astype(np.int8))
+                    entry["pulse_format"] = "int8"
+                    entry["pulse_shape"] = list(pulses.shape)
+                np.save(tmp / f"{fname}.scales.npy", np.asarray(code.scale, np.float32))
+                entry["codec"] = "pvq"
+                entry["k"] = int(code.k)
+                entry["group"] = self.pvq_group
+                # report-only entropy estimate (bits/weight under Golomb)
+                _, nbits = golomb_encode(pulses.ravel()[: min(pulses.size, 65536)])
+                entry["golomb_bits_per_weight_est"] = nbits / min(pulses.size, 65536)
+            else:
+                save_arr = arr
+                if str(arr.dtype) == "bfloat16":
+                    save_arr = arr.astype(np.float32)
+                    entry["stored_dtype"] = "float32"
+                np.save(tmp / f"{fname}.npy", save_arr)
+                entry["codec"] = "raw"
+            manifest["leaves"][key] = entry
+        (tmp / "manifest.json").write_text(json.dumps(manifest, indent=1))
+        (tmp / "COMMIT").write_text(str(time.time()))
+        if final.exists():
+            shutil.rmtree(final)
+        tmp.rename(final)
+        self._gc()
+        return final
+
+    def _gc(self):
+        steps = sorted(self.all_steps())
+        for s in steps[: -self.keep] if self.keep else []:
+            shutil.rmtree(self.dir / f"step_{s:09d}", ignore_errors=True)
+
+    # --------------------------------------------------------------- restore
+
+    def all_steps(self):
+        out = []
+        for p in self.dir.glob("step_*"):
+            if (p / "COMMIT").exists():
+                out.append(int(p.name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, target: Any, step: Optional[int] = None) -> Tuple[Any, int]:
+        """Restore into the structure/dtypes of ``target``; returns (state, step)."""
+        if step is None:
+            step = self.latest_step()
+            if step is None:
+                raise FileNotFoundError(f"no committed checkpoints under {self.dir}")
+        d = self.dir / f"step_{step:09d}"
+        manifest = json.loads((d / "manifest.json").read_text())
+        flat: Dict[str, np.ndarray] = {}
+        for key, entry in manifest["leaves"].items():
+            fname = key.replace("/", "__")
+            if entry["codec"] == "pvq":
+                raw = np.load(d / f"{fname}.pulses.npy")
+                if entry["pulse_format"] == "nibble":
+                    pulses = unpack_nibbles(raw, tuple(entry["pulse_shape"]))
+                else:
+                    pulses = raw.astype(np.int64)
+                scales = np.load(d / f"{fname}.scales.npy")
+                w = (pulses.astype(np.float32) * scales[..., None]).reshape(-1)
+                n = int(np.prod(entry["shape"]))
+                flat[key] = w[:n].reshape(entry["shape"])
+            else:
+                flat[key] = np.load(d / f"{fname}.npy")
+        return _unflatten_into(target, flat), step

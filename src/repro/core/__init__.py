@@ -1,0 +1,44 @@
+"""PVQ core: the paper's contribution as composable JAX modules."""
+
+from .pvq import (
+    PVQCode,
+    pvq_encode,
+    pvq_decode,
+    pvq_encode_grouped,
+    pvq_decode_grouped,
+    pvq_quantize_direction,
+    pvq_dot,
+    pvq_encode_np,
+    dot_op_counts,
+)
+from .enumeration import num_points, index_bits, vector_to_index, index_to_vector
+from .quantize import QuantPolicy, quantize_tree, quantize_array, tree_compression_report, total_bits, k_for
+from .qat import pvq_ste, bsign, k_annealing_stages
+from .fold import fold_codes, check_homogeneity
+
+__all__ = [
+    "PVQCode",
+    "pvq_encode",
+    "pvq_decode",
+    "pvq_encode_grouped",
+    "pvq_decode_grouped",
+    "pvq_quantize_direction",
+    "pvq_dot",
+    "pvq_encode_np",
+    "dot_op_counts",
+    "num_points",
+    "index_bits",
+    "vector_to_index",
+    "index_to_vector",
+    "QuantPolicy",
+    "quantize_tree",
+    "quantize_array",
+    "tree_compression_report",
+    "total_bits",
+    "k_for",
+    "pvq_ste",
+    "bsign",
+    "k_annealing_stages",
+    "fold_codes",
+    "check_homogeneity",
+]

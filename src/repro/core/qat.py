@@ -1,0 +1,138 @@
+"""PVQ-aware training: STE projection, mixed optimization, K-annealing (paper §IV).
+
+The paper sketches three recipes beyond post-training quantization:
+  (a) mixed optimization with w constrained to rho * P(N,K)  — we implement the
+      standard projected/straight-through relaxation: forward uses the
+      quantized weights, backward passes gradients straight through to the
+      latent float weights (Hinton STE, the same device the paper uses for
+      bsign nets, eq. 18);
+  (b) hybrid: train float -> PVQ -> continue training with (a) as refinement;
+  (c) K-annealing: start from a large K (low quantization noise) and anneal
+      down to the target.
+
+Also provides the bsign activation with STE (paper eqs. 17-18) used by the
+binary PVQ nets C and D.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .pvq import pvq_decode_grouped, pvq_encode, pvq_encode_grouped
+
+
+# ---------------------------------------------------------------------------
+# Straight-through PVQ projection
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3))
+def pvq_ste(w: jax.Array, k: int, group: Optional[int] = None, scale_mode: str = "paper") -> jax.Array:
+    """Quantize-dequantize with identity gradient (straight-through)."""
+    return _pvq_qdq(w, k, group, scale_mode)
+
+
+def _pvq_qdq(w, k, group, scale_mode):
+    flat = w.reshape(-1)
+    if group is None:
+        code = pvq_encode(flat, k, scale_mode)
+        deq = code.dequantize()
+    else:
+        code = pvq_encode_grouped(flat, group, k, scale_mode)
+        deq = pvq_decode_grouped(code, flat.shape[0])
+    return deq.reshape(w.shape).astype(w.dtype)
+
+
+def _pvq_ste_fwd(w, k, group, scale_mode):
+    return _pvq_qdq(w, k, group, scale_mode), None
+
+
+def _pvq_ste_bwd(k, group, scale_mode, res, g):
+    return (g,)
+
+
+pvq_ste.defvjp(_pvq_ste_fwd, _pvq_ste_bwd)
+
+
+# ---------------------------------------------------------------------------
+# bsign with STE (paper eqs. 17-18)
+# ---------------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def bsign(x: jax.Array) -> jax.Array:
+    """+1 if x >= 0 else -1, with d/dx := 1 (straight-through estimator)."""
+    return jnp.where(x >= 0, 1.0, -1.0).astype(x.dtype)
+
+
+def _bsign_fwd(x):
+    return bsign(x), None
+
+
+def _bsign_bwd(res, g):
+    return (g,)
+
+
+bsign.defvjp(_bsign_fwd, _bsign_bwd)
+
+
+def bsign_clipped_ste(x: jax.Array) -> jax.Array:
+    """bsign with the hardtanh-window STE (gradient zero for |x|>1) — the
+    refinement used by BinaryNet/QNN; beyond-paper option."""
+
+    @jax.custom_vjp
+    def f(x):
+        return jnp.where(x >= 0, 1.0, -1.0).astype(x.dtype)
+
+    def fwd(x):
+        return f(x), x
+
+    def bwd(x, g):
+        return (g * (jnp.abs(x) <= 1.0).astype(g.dtype),)
+
+    f.defvjp(fwd, bwd)
+    return f(x)
+
+
+# ---------------------------------------------------------------------------
+# K-annealing schedule (paper §IV)
+# ---------------------------------------------------------------------------
+
+
+def k_annealing_schedule(k_start: int, k_target: int, n_steps: int):
+    """Geometric anneal from k_start down to k_target over n_steps.
+
+    Returns step -> K (python int; K is a static quantization parameter, so
+    the training loop re-jits on each distinct K — use few distinct stages).
+    """
+    if k_start < k_target:
+        raise ValueError("k_start must be >= k_target")
+    stages = max(n_steps, 1)
+
+    def k_at(step: int) -> int:
+        t = min(max(step, 0), stages) / stages
+        k = k_start * (k_target / k_start) ** t
+        return max(int(round(k)), k_target)
+
+    return k_at
+
+
+def k_annealing_stages(k_start: int, k_target: int, n_stages: int):
+    """Discrete stage list [(K, fraction_of_steps)] — bounded re-jit count."""
+    ks = []
+    for i in range(n_stages):
+        t = i / max(n_stages - 1, 1)
+        k = int(round(k_start * (k_target / k_start) ** t))
+        ks.append(max(k, k_target))
+    # dedupe while preserving order
+    seen, out = set(), []
+    for k in ks:
+        if k not in seen:
+            seen.add(k)
+            out.append(k)
+    frac = 1.0 / len(out)
+    return [(k, frac) for k in out]

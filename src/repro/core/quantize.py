@@ -1,0 +1,157 @@
+"""Pytree-level PVQ quantization API (paper §IV procedure + §VII recipe).
+
+The paper's per-layer procedure:
+  1. extract weights+bias of a layer, flatten+concat into one N-vector
+  2. PVQ-encode with budget K (reported as the ratio N/K)
+  3. split/reshape back, replace the originals
+
+``quantize_tree`` generalizes this to arbitrary pytrees with a policy mapping
+parameter paths to (n_over_k, group) choices.  ``group=None`` reproduces the
+paper exactly (whole tensor = one PVQ vector, one rho); integer groups give
+the per-group-rho variant our TPU kernel consumes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import codes as codes_lib
+from .pvq import PVQCode, pvq_decode_grouped, pvq_encode, pvq_encode_grouped
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantPolicy:
+    """Which tensors to quantize and how.
+
+    rules: list of (path_regex, n_over_k, group). First match wins.
+      n_over_k: the paper's N/K ratio (K = max(round(N / n_over_k), 1)).
+      group:    None -> whole-tensor single rho (paper-faithful);
+                int  -> per-group rho (kernel format).
+    scale_mode: 'paper' (rho = ||w||/||y||) or 'ls' (least squares).
+    skip_regex: tensors never quantized (norm scales, ssm decay params, ...).
+    """
+
+    rules: Tuple[Tuple[str, float, Optional[int]], ...] = (("", 1.0, None),)
+    scale_mode: str = "paper"
+    skip_regex: str = (
+        r"(norm|scale|bias_only|rope|decay|a_log|dt_bias|time_|ln_)"
+    )
+
+    def match(self, path: str) -> Optional[Tuple[float, Optional[int]]]:
+        if re.search(self.skip_regex, path):
+            return None
+        for pat, n_over_k, group in self.rules:
+            if re.search(pat, path):
+                return (n_over_k, group)
+        return None
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def k_for(n: int, n_over_k: float) -> int:
+    return max(int(round(n / n_over_k)), 1)
+
+
+def quantize_array(
+    w: jax.Array, n_over_k: float, group: Optional[int], scale_mode: str = "paper"
+) -> Tuple[jax.Array, PVQCode, Dict[str, Any]]:
+    """Quantize one tensor. Returns (dequantized float array, code, stats)."""
+    flat = w.reshape(-1)
+    n = flat.shape[0]
+    if group is None:
+        k = k_for(n, n_over_k)
+        code = pvq_encode(flat, k, scale_mode)
+        deq = code.dequantize().reshape(w.shape).astype(w.dtype)
+        eff_n = n
+    else:
+        k = k_for(group, n_over_k)
+        code = pvq_encode_grouped(flat, group, k, scale_mode)
+        deq = pvq_decode_grouped(code, n).reshape(w.shape).astype(w.dtype)
+        eff_n = group
+    err = jnp.linalg.norm(deq.astype(jnp.float32) - w.astype(jnp.float32))
+    ref = jnp.linalg.norm(w.astype(jnp.float32))
+    stats = {
+        "N": eff_n,
+        "K": k,
+        "n_over_k": n_over_k,
+        "rel_err": float(err / jnp.maximum(ref, 1e-30)),
+        "numel": int(n),
+    }
+    return deq, code, stats
+
+
+def quantize_tree(
+    params: Any, policy: QuantPolicy
+) -> Tuple[Any, Dict[str, PVQCode], Dict[str, Dict[str, Any]]]:
+    """PVQ-quantize every matching leaf. Returns (dequantized tree, codes, stats)."""
+    codes: Dict[str, PVQCode] = {}
+    stats: Dict[str, Dict[str, Any]] = {}
+
+    def visit(path, leaf):
+        if not isinstance(leaf, (jax.Array, np.ndarray)) or leaf.ndim == 0:
+            return leaf
+        pstr = _path_str(path)
+        m = policy.match(pstr)
+        if m is None or leaf.size < 8:
+            return leaf
+        n_over_k, group = m
+        deq, code, st = quantize_array(jnp.asarray(leaf), n_over_k, group, policy.scale_mode)
+        codes[pstr] = code
+        stats[pstr] = st
+        return deq
+
+    qtree = jax.tree_util.tree_map_with_path(visit, params)
+    return qtree, codes, stats
+
+
+def tree_compression_report(codes: Dict[str, PVQCode]) -> Dict[str, Dict[str, float]]:
+    """Paper §VI/§VII: per-tensor pulse histograms + bits/weight estimates."""
+    out = {}
+    for path, code in codes.items():
+        pulses = np.asarray(code.pulses).ravel()
+        rep = codes_lib.pulse_histogram(pulses)
+        rep.update(codes_lib.compression_report(pulses))
+        out[path] = rep
+    return out
+
+
+def total_bits(codes: Dict[str, PVQCode], scheme: str = "golomb") -> Dict[str, float]:
+    """Aggregate compressed size across a model (weights only, + scales at f32)."""
+    total_w_bits = 0.0
+    total_scale_bits = 0.0
+    numel = 0
+    for code in codes.values():
+        pulses = np.asarray(code.pulses).ravel()
+        numel += pulses.size
+        if scheme == "golomb":
+            total_w_bits += float(codes_lib.golomb_length(pulses).sum())
+        elif scheme == "rle":
+            _, nbits, _ = codes_lib.rle_encode(pulses)
+            total_w_bits += nbits
+        else:
+            raise ValueError(scheme)
+        total_scale_bits += 32.0 * np.prod(np.asarray(code.scale).shape)
+    return {
+        "numel": numel,
+        "weight_bits": total_w_bits,
+        "scale_bits": total_scale_bits,
+        "bits_per_weight": (total_w_bits + total_scale_bits) / max(numel, 1),
+        "vs_fp32_ratio": 32.0 * numel / max(total_w_bits + total_scale_bits, 1),
+        "vs_bf16_ratio": 16.0 * numel / max(total_w_bits + total_scale_bits, 1),
+    }

@@ -1,0 +1,4 @@
+from .synthetic import TokenTask, ClassifyTask
+from .pipeline import TokenLoader, Prefetcher
+
+__all__ = ["TokenTask", "ClassifyTask", "TokenLoader", "Prefetcher"]

@@ -1,0 +1,38 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+On a CPU host (this container) kernels run with ``interpret=True`` — the
+kernel body executes in Python on CPU, validating logic against ref.py; on a
+TPU backend the same calls compile to Mosaic.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .pvq_encode import pvq_encode_batch as _encode_kernel
+from .pvq_matmul import pvq_matmul as _matmul_kernel
+from . import ref as ref_lib
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def pvq_matmul(x, w_pulses, scales, *, group: int = 128, interpret: bool | None = None, **tiles):
+    """Fused dequant matmul; see kernels.pvq_matmul for the tiling contract."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    return _matmul_kernel(x, w_pulses, scales, group=group, interpret=interpret, **tiles)
+
+
+def pvq_encode(w, *, k_pulses: int, bg: int = 8, interpret: bool | None = None):
+    """Batched exact greedy PVQ projection onto P(N, K)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    return _encode_kernel(w, k_pulses=k_pulses, bg=bg, interpret=interpret)
+
+
+# re-export oracles for test convenience
+pvq_matmul_ref = ref_lib.pvq_matmul_ref
+pvq_encode_ref = ref_lib.pvq_encode_ref

@@ -1,0 +1,36 @@
+"""Pure-jnp oracles for the Pallas kernels (the allclose targets)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def pvq_matmul_ref(
+    x: jax.Array,  # (m, k) activations
+    w_pulses: jax.Array,  # (k, n) int8 PVQ pulses
+    scales: jax.Array,  # (k // group, n) f32 per-group rho
+    *,
+    group: int,
+) -> jax.Array:
+    """y = x @ (scales-expanded * pulses). Groups tile the contraction dim."""
+    k, n = w_pulses.shape
+    assert k % group == 0
+    w = w_pulses.astype(jnp.float32) * jnp.repeat(scales, group, axis=0)
+    return (x.astype(jnp.float32) @ w).astype(x.dtype)
+
+
+def pvq_encode_ref(w: jax.Array, k_pulses: int) -> tuple[jax.Array, jax.Array]:
+    """Batched exact greedy PVQ projection; returns (pulses i32 (g,n), rho_ls f32 (g,)).
+
+    Same algorithm as repro.core.pvq (presearch + greedy top-up), kept
+    dependency-free here as the kernel oracle.
+    """
+    from repro.core.pvq import _greedy_topup, _presearch, _scales
+
+    absw = jnp.abs(w.astype(jnp.float32))
+    y = _presearch(absw, k_pulses)
+    y = _greedy_topup(absw, y, k_pulses)
+    pulses = (jnp.sign(w) * y).astype(jnp.int32)
+    rho = _scales(w, pulses, "ls")
+    return pulses, rho

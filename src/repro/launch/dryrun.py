@@ -1,0 +1,259 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production meshes and record memory/cost/roofline terms.
+
+    PYTHONPATH=src python -m repro.launch.dryrun [--arch A] [--shape S]
+        [--mesh single|multi|both] [--out experiments/dryrun] [--skip-existing]
+
+The two lines above MUST stay the first statements in this module: jax locks
+the device count on first init, and the dry-run needs 512 placeholder CPU
+devices to build the 16x16 and 2x16x16 meshes.  (Smoke tests / benches never
+import this module and keep seeing 1 device.)
+"""
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+from pathlib import Path  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro.configs import ARCHS, SHAPES, cell_applicable, get_config  # noqa: E402
+from repro.launch import roofline as roofline_lib  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.steps import make_step  # noqa: E402
+from repro.nn.models import build_model  # noqa: E402
+from repro.parallel import ShardingPolicy  # noqa: E402
+
+
+def _memory_analysis_dict(compiled) -> dict:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception as e:  # backend may not support it
+        return {"error": str(e)}
+    out = {}
+    for field in (
+        "argument_size_in_bytes",
+        "output_size_in_bytes",
+        "temp_size_in_bytes",
+        "alias_size_in_bytes",
+        "generated_code_size_in_bytes",
+    ):
+        v = getattr(ma, field, None)
+        if v is not None:
+            out[field] = int(v)
+    if not out:
+        out["repr"] = str(ma)
+    return out
+
+
+def _depth_variants(cfg):
+    """Two reduced-depth configs differing by exactly +1 scan repeat in every
+    scanned segment, plus the number of additional repeats in the full model.
+
+    XLA's HloCostAnalysis counts while-loop bodies ONCE regardless of trip
+    count, so flops/bytes/collective-bytes of the full model are recovered by
+    the affine extrapolation  C_full = C_small + extra * (C_big - C_small).
+    """
+    import dataclasses as dc
+
+    if cfg.encoder_layers:  # enc-dec: both stacks scale together
+        small = dc.replace(cfg, n_layers=1, encoder_layers=1, unroll_layers=True)
+        big = dc.replace(cfg, n_layers=2, encoder_layers=2, unroll_layers=True)
+        extra = cfg.n_layers - 1
+    elif cfg.hybrid_period:
+        p = cfg.hybrid_period
+        small = dc.replace(cfg, n_layers=p, unroll_layers=True)
+        big = dc.replace(cfg, n_layers=2 * p, unroll_layers=True)
+        extra = cfg.n_layers // p - 1
+    elif cfg.moe is not None and cfg.first_dense:
+        small = dc.replace(cfg, n_layers=cfg.first_dense + 1, unroll_layers=True)
+        big = dc.replace(cfg, n_layers=cfg.first_dense + 2, unroll_layers=True)
+        extra = (cfg.n_layers - cfg.first_dense) - 1
+    else:
+        small = dc.replace(cfg, n_layers=1, unroll_layers=True)
+        big = dc.replace(cfg, n_layers=2, unroll_layers=True)
+        extra = cfg.n_layers - 1
+    return small, big, extra
+
+
+def _cost_and_coll(cfg, shape, mesh, policy, opt_level=0):
+    """(cost dict, collective-bytes dict) for one lowered+compiled step."""
+    model = build_model(cfg)
+    bundle = make_step(model, mesh, shape, policy, opt_level=opt_level)
+    with mesh:
+        compiled = bundle.lower().compile()
+        cost = {k: float(v) for k, v in compiled.cost_analysis().items()}
+        hlo = compiled.as_text()
+    coll = roofline_lib.collective_bytes(hlo)
+    return cost, coll
+
+
+def extrapolated_costs(cfg, shape, mesh, policy, opt_level=0):
+    """Depth-corrected (flops, hbm_bytes, collective_bytes, coll_detail)."""
+    small_cfg, big_cfg, extra = _depth_variants(cfg)
+    c_small, k_small = _cost_and_coll(small_cfg, shape, mesh, policy, opt_level)
+    c_big, k_big = _cost_and_coll(big_cfg, shape, mesh, policy, opt_level)
+
+    def ext(a, b):
+        return a + extra * (b - a)
+
+    flops = ext(c_small.get("flops", 0.0), c_big.get("flops", 0.0))
+    hbm = ext(c_small.get("bytes accessed", 0.0), c_big.get("bytes accessed", 0.0))
+    coll_total = ext(k_small["total_bytes"], k_big["total_bytes"])
+    per_kind = {
+        k: ext(k_small["per_kind_bytes"][k], k_big["per_kind_bytes"][k])
+        for k in k_small["per_kind_bytes"]
+    }
+    counts = {
+        k: int(ext(k_small["per_kind_counts"][k], k_big["per_kind_counts"][k]))
+        for k in k_small["per_kind_counts"]
+    }
+    return {
+        "flops": max(flops, 0.0),
+        "hbm_bytes": max(hbm, 0.0),
+        "coll": {
+            "total_bytes": max(coll_total, 0.0),
+            "per_kind_bytes": per_kind,
+            "per_kind_counts": counts,
+        },
+    }
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, policy: ShardingPolicy | None = None, opt_level: int = 0) -> dict:
+    cfg = get_config(arch)
+    shape = next(s for s in SHAPES if s.name == shape_name)
+    ok, reason = cell_applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "mesh": "multi" if multi_pod else "single",
+                "status": "skipped", "reason": reason}
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    model = build_model(cfg)
+    bundle = make_step(model, mesh, shape, policy, opt_level=opt_level)
+    with mesh:
+        lowered = bundle.lower()
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        mem = _memory_analysis_dict(compiled)
+        cost = dict(compiled.cost_analysis())
+        try:
+            hlo = compiled.as_text()
+        except Exception:
+            hlo = lowered.as_text()
+    chips = int(mesh.devices.size)
+    # depth-corrected costs (scan bodies counted once by HloCostAnalysis)
+    corrected = extrapolated_costs(cfg, shape, mesh, policy, opt_level)
+
+    # MODEL_FLOPS from active params
+    pshape = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0), max_seq=shape.seq_len))
+    import numpy as np
+
+    def _leaf_count(t):
+        total = 0
+        def visit(path, leaf):
+            nonlocal total
+            pstr = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+            n = int(np.prod(leaf.shape))
+            if cfg.moe is not None and "experts" in pstr and "shared" not in pstr:
+                n = int(n * cfg.moe.top_k / cfg.moe.n_experts)
+            total += n
+            return leaf
+        jax.tree_util.tree_map_with_path(visit, t)
+        return total
+
+    n_active = _leaf_count(pshape)
+    n_total = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(pshape))
+    mf = roofline_lib.model_flops_for(cfg, shape, n_active)
+    roof = roofline_lib.analyze_corrected(
+        flops=corrected["flops"],
+        hbm_bytes=corrected["hbm_bytes"],
+        coll=corrected["coll"],
+        chips=chips,
+        model_flops=mf,
+    )
+
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "multi" if multi_pod else "single",
+        "status": "ok",
+        "chips": chips,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "memory_analysis": mem,
+        "cost_flops_per_chip_raw": float(cost.get("flops", 0.0)),
+        "cost_bytes_per_chip_raw": float(cost.get("bytes accessed", 0.0)),
+        "params_total": n_total,
+        "params_active": n_active,
+        "roofline": roof.as_dict(),
+    }
+    if shape.kind == "decode":
+        rec["analytic_decode"] = roofline_lib.analytic_decode_memory(cfg, shape, mesh, n_total)
+    return rec
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="single arch id (default: all)")
+    ap.add_argument("--shape", default=None, help="single shape name (default: all)")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--seq-shard", action="store_true", help="enable sequence parallelism")
+    ap.add_argument("--opt-level", type=int, default=0, help="§Perf ladder: 0=baseline 1/2=optimized")
+    args = ap.parse_args()
+
+    outdir = Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+    archs = [args.arch] if args.arch else sorted(ARCHS)
+    shapes = [args.shape] if args.shape else [s.name for s in SHAPES]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    failures = []
+    for arch in archs:
+        for shape_name in shapes:
+            for multi in meshes:
+                tag = f"{arch}__{shape_name}__{'multi' if multi else 'single'}"
+                path = outdir / f"{tag}.json"
+                if args.skip_existing and path.exists():
+                    print(f"[dryrun] {tag}: exists, skipping")
+                    continue
+                print(f"[dryrun] {tag}: lowering+compiling ...", flush=True)
+                try:
+                    policy = ShardingPolicy(seq_shard=args.seq_shard) if args.seq_shard else None
+                    rec = run_cell(arch, shape_name, multi, policy, opt_level=args.opt_level)
+                except Exception as e:
+                    rec = {
+                        "arch": arch, "shape": shape_name,
+                        "mesh": "multi" if multi else "single",
+                        "status": "failed", "error": f"{type(e).__name__}: {e}",
+                        "traceback": traceback.format_exc()[-4000:],
+                    }
+                    failures.append(tag)
+                path.write_text(json.dumps(rec, indent=2))
+                status = rec["status"]
+                extra = ""
+                if status == "ok":
+                    r = rec["roofline"]
+                    extra = (
+                        f" compute={r['compute_s']:.3e}s memory={r['memory_s']:.3e}s"
+                        f" coll={r['collective_s']:.3e}s bound={r['bottleneck']}"
+                        f" (lower {rec['lower_s']}s compile {rec['compile_s']}s)"
+                    )
+                elif status == "failed":
+                    extra = " " + rec["error"][:200]
+                elif status == "skipped":
+                    extra = " " + rec["reason"]
+                print(f"[dryrun] {tag}: {status}{extra}", flush=True)
+
+    print(f"[dryrun] done; {len(failures)} failures: {failures}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

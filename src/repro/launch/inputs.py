@@ -1,0 +1,62 @@
+"""ShapeDtypeStruct stand-ins for every model input — the dry-run never
+allocates device memory.  Weak-type-correct and shardable.
+
+``input_specs(cfg, shape)`` returns (kwargs for the step function) keyed by
+the step kind:
+    train   -> {'batch': {tokens, targets, [frames|patches]}}
+    prefill -> {'batch': {tokens, [frames|patches]}}
+    decode  -> {'cache': <zeros-shaped cache>, 'token': (b,1), 'pos': scalar}
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.nn.models import Model
+
+I32 = jnp.int32
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig, *, with_targets: bool) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    act = jnp.dtype(cfg.compute_dtype)
+    batch: Dict[str, Any] = {"tokens": _sds((b, s), I32)}
+    if with_targets:
+        batch["targets"] = _sds((b, s), I32)
+    if cfg.family == "encdec":
+        batch["frames"] = _sds((b, s, cfg.d_model), act)
+    if cfg.family == "vlm":
+        batch["patches"] = _sds((b, cfg.prefix_len, cfg.d_model), act)
+    return batch
+
+
+def params_shape(model: Model, max_seq: int = 0):
+    return jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0), max_seq=max_seq))
+
+
+def cache_shape(model: Model, batch: int, cache_len: int, enc_len: int = 0):
+    return jax.eval_shape(lambda: model.init_cache(batch, cache_len, enc_len))
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, model: Model) -> Dict[str, Any]:
+    if shape.kind == "train":
+        return {"batch": batch_specs(cfg, shape, with_targets=True)}
+    if shape.kind == "prefill":
+        return {"batch": batch_specs(cfg, shape, with_targets=False)}
+    if shape.kind == "decode":
+        b, s = shape.global_batch, shape.seq_len
+        enc_len = s if cfg.family == "encdec" else 0
+        return {
+            "cache": cache_shape(model, b, s, enc_len),
+            "token": _sds((b, 1), I32),
+            "pos": _sds((), I32),
+        }
+    raise ValueError(shape.kind)

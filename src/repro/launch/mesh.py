@@ -1,0 +1,31 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS (not module constants) so importing this module never
+touches jax device state.  The dry-run entry point sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import; smoke tests and benches see the real single CPU device.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """v5e pod meshes: 16x16 = 256 chips/pod; 2 pods = 512 chips.
+
+    Axes: ``pod`` (inter-pod DP / pipeline), ``data`` (DP+FSDP),
+    ``model`` (TP/EP/SP).
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(n_data: int = 1, n_model: int = 1):
+    """Tiny mesh over however many devices exist (tests)."""
+    return jax.make_mesh((n_data, n_model), ("data", "model"))
+
+
+def mesh_chip_count(mesh) -> int:
+    return int(mesh.devices.size)

@@ -1,0 +1,226 @@
+"""Roofline term extraction from compiled dry-run artifacts.
+
+Terms (per chip — the compiled module after SPMD partitioning *is* the
+per-chip program, so chips cancel):
+
+    compute    = HLO_FLOPs_per_chip   / PEAK_FLOPS       (197 TFLOP/s bf16, v5e)
+    memory     = HLO_bytes_per_chip   / HBM_BW           (819 GB/s)
+    collective = coll_bytes_per_chip  / ICI_BW           (~50 GB/s/link)
+
+``cost_analysis`` supplies flops/bytes; collective bytes are parsed from the
+HLO text: for each all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute op we take the largest shape on the line (operand or
+result) as the bytes moved, doubled for all-reduce (reduce-scatter +
+all-gather phases of a ring).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Dict, Optional
+
+import numpy as np
+
+PEAK_FLOPS = 197e12  # bf16 / chip (v5e)
+HBM_BW = 819e9  # bytes/s / chip
+ICI_BW = 50e9  # bytes/s / link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_COLL_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all", "collective-permute")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return _DTYPE_BYTES[dtype] * n
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, Any]:
+    """Sum per-collective bytes from (post-SPMD) HLO text."""
+    per_kind: Dict[str, float] = {k: 0.0 for k in _COLL_KINDS}
+    counts: Dict[str, int] = {k: 0 for k in _COLL_KINDS}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        # match op lines like: %x = bf16[...] all-reduce(...), or fused variants
+        m = re.search(r"=\s*(?:\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^ ]*)\s+([a-z-]+)", stripped)
+        if not m:
+            continue
+        op = m.group(1)
+        kind = next((k for k in _COLL_KINDS if op == k or op.startswith(k + ".")), None)
+        if kind is None:
+            continue
+        sizes = [_shape_bytes(dt, dims) for dt, dims in _SHAPE_RE.findall(stripped)]
+        if not sizes:
+            continue
+        moved = max(sizes)
+        if kind == "all-reduce":
+            moved *= 2  # ring all-reduce = reduce-scatter + all-gather
+        per_kind[kind] += moved
+        counts[kind] += 1
+    total = sum(per_kind.values())
+    return {"total_bytes": total, "per_kind_bytes": per_kind, "per_kind_counts": counts}
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float  # per chip
+    hbm_bytes: float  # per chip
+    coll_bytes: float  # per chip
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    model_flops: float  # global useful flops (6ND / 2ND)
+    chips: int
+    useful_ratio: float  # model_flops / (flops * chips)
+    collectives: Dict[str, Any]
+
+    def as_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+
+def analyze(
+    cost: Dict[str, float],
+    hlo_text: str,
+    *,
+    chips: int,
+    model_flops: float,
+) -> Roofline:
+    flops = float(cost.get("flops", 0.0))
+    hbm = float(cost.get("bytes accessed", 0.0))
+    coll = collective_bytes(hlo_text)
+    compute_s = flops / PEAK_FLOPS
+    memory_s = hbm / HBM_BW
+    collective_s = coll["total_bytes"] / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    return Roofline(
+        flops=flops,
+        hbm_bytes=hbm,
+        coll_bytes=coll["total_bytes"],
+        compute_s=compute_s,
+        memory_s=memory_s,
+        collective_s=collective_s,
+        bottleneck=bottleneck,
+        model_flops=model_flops,
+        chips=chips,
+        useful_ratio=(model_flops / (flops * chips)) if flops else 0.0,
+        collectives=coll,
+    )
+
+
+def analyze_corrected(
+    *, flops: float, hbm_bytes: float, coll: Dict[str, Any], chips: int, model_flops: float
+) -> Roofline:
+    """Roofline from depth-corrected costs (see dryrun.extrapolated_costs)."""
+    compute_s = flops / PEAK_FLOPS
+    memory_s = hbm_bytes / HBM_BW
+    collective_s = coll["total_bytes"] / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    return Roofline(
+        flops=flops,
+        hbm_bytes=hbm_bytes,
+        coll_bytes=coll["total_bytes"],
+        compute_s=compute_s,
+        memory_s=memory_s,
+        collective_s=collective_s,
+        bottleneck=bottleneck,
+        model_flops=model_flops,
+        chips=chips,
+        useful_ratio=(model_flops / (flops * chips)) if flops else 0.0,
+        collectives=coll,
+    )
+
+
+def model_flops_for(cfg, shape, n_active_params: int) -> float:
+    """MODEL_FLOPS: 6*N*D for training, 2*N*D for inference forward."""
+    tokens = shape.global_batch * (shape.seq_len if shape.kind in ("train", "prefill") else 1)
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * n_active_params * tokens
+
+
+# ---------------------------------------------------------------------------
+# Analytic min-traffic model (decode) + PVQ weight streaming
+# ---------------------------------------------------------------------------
+
+# PVQ storage cost per weight under the pvq_matmul kernel contract
+# (int8 pulses + one f32 scale per `group` weights); nibble variant packs two
+# pulses/byte (|pulse| <= 7 — holds for every N/K <= 1 layer measured).
+def pvq_bytes_per_weight(group: int = 256, nibble: bool = False) -> float:
+    return (0.5 if nibble else 1.0) + 4.0 / group
+
+
+def analytic_decode_memory(cfg, shape, mesh, n_params_total: int) -> dict:
+    """Per-chip min HBM traffic for one decode step, and the PVQ variant.
+
+    weights: every live weight is read once per step (weight-memory-bound
+    decode).  Serving layout (opt>=1): experts sharded over all chips,
+    non-experts over TP only.  cache: read once + one-token write.
+    The XLA-derived memory term is an *unfused upper bound* (CPU backend);
+    this analytic floor brackets the truth from below, and is the term the
+    PVQ dequant-matmul kernel moves (2B -> ~1.02B or ~0.52B per weight).
+    """
+    chips = int(mesh.devices.size)
+    tp = int(mesh.shape.get("model", 1))
+    b = shape.global_batch
+    s = shape.seq_len
+    dp = max(chips // tp, 1)
+
+    # weights (bf16), serving layout
+    if cfg.moe is not None:
+        d_exp = cfg.moe.d_expert
+        glu = cfg.moe.activation in ("swiglu", "geglu")
+        n_per_expert = cfg.d_model * d_exp * (3 if glu else 2)
+        n_experts_total = cfg.moe.n_experts * (cfg.n_layers - cfg.first_dense) * (
+            1 if cfg.moe_period == 1 else 1.0 / cfg.moe_period
+        )
+        n_expert_params = int(n_per_expert * n_experts_total)
+        n_rest = n_params_total - n_expert_params
+        weight_bytes = 2.0 * n_expert_params / chips + 2.0 * n_rest / tp
+        n_quantizable = n_params_total
+    else:
+        weight_bytes = 2.0 * n_params_total / tp
+        n_quantizable = n_params_total
+
+    # KV/state cache per chip (batch over dp, seq over tp)
+    if cfg.rwkv is not None:
+        m = cfg.rwkv.head_size
+        cache_bytes = 4.0 * (cfg.d_model // m) * m * m * cfg.n_layers * b / dp
+    elif cfg.mla is not None:
+        per_tok = cfg.mla.kv_lora_rank + cfg.mla.rope_head_dim
+        cache_bytes = 2.0 * b * s * per_tok * cfg.n_layers / chips
+    elif cfg.hybrid_period:
+        attn_layers = cfg.n_layers // cfg.hybrid_period
+        kv = 2.0 * b * s * cfg.n_kv_heads * cfg.resolved_head_dim * 2 * attn_layers / chips
+        ssm_layers = cfg.n_layers - attn_layers
+        d_inner = cfg.ssm.expand * cfg.d_model
+        ssm = 4.0 * b * d_inner * cfg.ssm.d_state * ssm_layers / dp
+        cache_bytes = kv + ssm
+    else:
+        cache_bytes = 2.0 * b * s * cfg.n_kv_heads * cfg.resolved_head_dim * 2 * cfg.n_layers / chips
+
+    pvq_w = weight_bytes * pvq_bytes_per_weight(cfg.pvq.group or 256) / 2.0
+    pvq_w_nib = weight_bytes * pvq_bytes_per_weight(cfg.pvq.group or 256, nibble=True) / 2.0
+    return {
+        "weight_bytes_per_chip": weight_bytes,
+        "cache_bytes_per_chip": cache_bytes,
+        "memory_s_analytic": (weight_bytes + cache_bytes) / HBM_BW,
+        "memory_s_analytic_pvq_int8": (pvq_w + cache_bytes) / HBM_BW,
+        "memory_s_analytic_pvq_nibble": (pvq_w_nib + cache_bytes) / HBM_BW,
+        "pvq_weight_speedup": (weight_bytes + cache_bytes) / (pvq_w + cache_bytes),
+        "pvq_nibble_speedup": (weight_bytes + cache_bytes) / (pvq_w_nib + cache_bytes),
+    }

@@ -1,0 +1,232 @@
+"""Jittable step functions (train / prefill / serve) with their sharding
+assignments.  Used by the real train/serve drivers and by the dry-run."""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.nn.models import Model
+from repro.optim import AdamW
+from repro.parallel import (
+    ShardingPolicy,
+    batch_pspec,
+    cache_shardings,
+    param_shardings,
+    sharding_policy,
+)
+
+from . import inputs as inputs_lib
+
+
+@dataclasses.dataclass
+class StepBundle:
+    """A step function plus its in/out shardings and input specs."""
+
+    fn: Callable
+    in_shardings: Any
+    out_shardings: Any
+    specs: Tuple[Any, ...]
+    donate_argnums: Tuple[int, ...] = ()
+
+    def jit(self):
+        return jax.jit(
+            self.fn,
+            in_shardings=self.in_shardings,
+            out_shardings=self.out_shardings,
+            donate_argnums=self.donate_argnums,
+        )
+
+    def lower(self):
+        return self.jit().lower(*self.specs)
+
+
+def _replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())
+
+
+def _batch_sharding(mesh: Mesh, batch_size: int) -> NamedSharding:
+    """Shard the batch dim over (pod, data) only when divisible."""
+    from repro.parallel.sharding import dp_axes
+    import numpy as np
+
+    axes = dp_axes(mesh)
+    if axes:
+        extent = int(np.prod([mesh.shape[a] for a in axes]))
+        if batch_size % extent == 0:
+            return NamedSharding(mesh, P(axes))
+        if batch_size % mesh.shape.get("data", 1) == 0:
+            return NamedSharding(mesh, P("data"))
+    return NamedSharding(mesh, P())
+
+
+def _tree_of(sharding, tree):
+    return jax.tree.map(lambda _: sharding, tree)
+
+
+# ---------------------------------------------------------------------------
+# Train
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(
+    model: Model,
+    optimizer: AdamW,
+    mesh: Mesh,
+    shape: ShapeConfig,
+    policy: ShardingPolicy = ShardingPolicy(),
+) -> StepBundle:
+    cfg = model.cfg
+
+    def train_step(params, opt_state, batch):
+        with sharding_policy(policy):
+            (loss, metrics), grads = jax.value_and_grad(model.loss, has_aux=True)(params, batch)
+            params, opt_state, gnorm = optimizer.update(grads, opt_state, params)
+            metrics = dict(metrics, loss=loss, grad_norm=gnorm)
+            return params, opt_state, metrics
+
+    with mesh, sharding_policy(policy):
+        pshape = inputs_lib.params_shape(model, max_seq=shape.seq_len)
+        oshape = jax.eval_shape(optimizer.init, pshape)
+        pshard = param_shardings(pshape, mesh, policy)
+        oshard = jax.tree.map(
+            lambda leaf, _=None: None, oshape
+        )  # placeholder; built below
+        # moments share the param sharding; the step counter is replicated
+        mu_shard = param_shardings(oshape.mu, mesh, policy)
+        nu_shard = param_shardings(oshape.nu, mesh, policy)
+        oshard = type(oshape)(step=_replicated(mesh), mu=mu_shard, nu=nu_shard)
+        bs = _batch_sharding(mesh, shape.global_batch)
+        bshard = jax.tree.map(lambda _: bs, inputs_lib.batch_specs(cfg, shape, with_targets=True))
+        metrics_shard = _replicated(mesh)
+
+    specs = (pshape, oshape, inputs_lib.batch_specs(cfg, shape, with_targets=True))
+    return StepBundle(
+        fn=train_step,
+        in_shardings=(pshard, oshard, bshard),
+        out_shardings=(pshard, oshard, None),
+        specs=specs,
+        donate_argnums=(0, 1),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Prefill
+# ---------------------------------------------------------------------------
+
+
+def make_prefill_step(
+    model: Model,
+    mesh: Mesh,
+    shape: ShapeConfig,
+    policy: ShardingPolicy = ShardingPolicy(),
+) -> StepBundle:
+    cfg = model.cfg
+
+    def prefill_step(params, batch):
+        with sharding_policy(policy):
+            logits, caches = model.prefill(params, batch)
+            return logits, caches
+
+    with mesh, sharding_policy(policy):
+        pshape = inputs_lib.params_shape(model, max_seq=shape.seq_len)
+        pshard = param_shardings(pshape, mesh, policy)
+        batch = inputs_lib.batch_specs(cfg, shape, with_targets=False)
+        bs = _batch_sharding(mesh, shape.global_batch)
+        bshard = jax.tree.map(lambda _: bs, batch)
+
+    return StepBundle(
+        fn=prefill_step,
+        in_shardings=(pshard, bshard),
+        out_shardings=None,
+        specs=(pshape, batch),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Decode / serve
+# ---------------------------------------------------------------------------
+
+
+def make_serve_step(
+    model: Model,
+    mesh: Mesh,
+    shape: ShapeConfig,
+    policy: Optional[ShardingPolicy] = None,
+) -> StepBundle:
+    cfg = model.cfg
+    if policy is None:
+        # context-parallel KV for the single-sequence long-context cell
+        policy = ShardingPolicy(context_parallel=(shape.global_batch < mesh.devices.size // (mesh.shape.get("model", 1))))
+
+    def serve_step(params, cache, token, pos):
+        with sharding_policy(policy):
+            logits, new_cache = model.decode_step(params, cache, token, pos)
+            return logits, new_cache
+
+    with mesh, sharding_policy(policy):
+        pshape = inputs_lib.params_shape(model, max_seq=shape.seq_len)
+        pshard = param_shardings(pshape, mesh, policy)
+        specs = inputs_lib.input_specs(cfg, shape, model)
+        cshard = cache_shardings(specs["cache"], mesh, policy)
+        tshard = _batch_sharding(mesh, shape.global_batch)
+        posshard = _replicated(mesh)
+
+    return StepBundle(
+        fn=serve_step,
+        in_shardings=(pshard, cshard, tshard, posshard),
+        out_shardings=(None, cshard),
+        specs=(pshape, specs["cache"], specs["token"], specs["pos"]),
+        donate_argnums=(1,),
+    )
+
+
+def policy_for(shape: ShapeConfig, mesh: Mesh, opt_level: int = 0) -> ShardingPolicy:
+    """§Perf hillclimb ladder.  Level 0 reproduces the recorded baseline.
+
+    decode:  L1 = serving param layout (no FSDP; expert-ffn-dim over data)
+                  + cache sequence axis sharded over the model axis
+    train:   L1 = MoE light combine (no f32 combine tensor)
+             L2 = + sequence parallelism on residuals
+    prefill: L1 = MoE light combine;  L2 = + sequence parallelism
+    """
+    cp = shape.kind == "decode" and shape.global_batch < int(mesh.devices.size) // int(
+        mesh.shape.get("model", 1)
+    )
+    if shape.kind == "decode":
+        return ShardingPolicy(
+            context_parallel=cp,
+            serve_params=opt_level >= 1,
+            cache_seq_tp=opt_level >= 1,
+            moe_light_combine=opt_level >= 1,
+        )
+    return ShardingPolicy(
+        moe_light_combine=opt_level >= 1,
+        remat="collectives" if opt_level >= 2 else "full",
+        seq_shard=opt_level >= 3,
+    )
+
+
+def make_step(
+    model: Model,
+    mesh: Mesh,
+    shape: ShapeConfig,
+    policy: Optional[ShardingPolicy] = None,
+    *,
+    opt_level: int = 0,
+) -> StepBundle:
+    if policy is None:
+        policy = policy_for(shape, mesh, opt_level)
+    if shape.kind == "train":
+        return make_train_step(model, AdamW(), mesh, shape, policy)
+    if shape.kind == "prefill":
+        return make_prefill_step(model, mesh, shape, policy)
+    if shape.kind == "decode":
+        return make_serve_step(model, mesh, shape, policy)
+    raise ValueError(shape.kind)

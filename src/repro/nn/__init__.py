@@ -1,0 +1,13 @@
+"""NN substrate: layers, attention variants, MoE, SSMs, model assembly.
+
+Import submodules directly (``repro.nn.models``); this package init stays
+empty to avoid import cycles with ``repro.configs``.
+"""
+
+
+def __getattr__(name):
+    if name in ("Model", "build_model"):
+        from . import models
+
+        return getattr(models, name)
+    raise AttributeError(name)

@@ -1,0 +1,361 @@
+"""Attention: GQA/MQA/MHA with RoPE, chunked-causal (flash-style) training
+path, KV-cache decode, cross-attention, and context-parallel-friendly
+shardings (the KV sequence axis may be sharded; softmax normalization is
+expressed with max/sum reductions XLA SPMD can lower to collectives).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .layers import Params, init_dense, dense
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float = 10000.0) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2).astype(jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0) -> jax.Array:
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)  # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., seq, hd/2)
+    sin, cos = jnp.sin(ang)[..., None, :], jnp.cos(ang)[..., None, :]  # (..., seq, 1, hd/2)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+
+def init_attention(
+    key,
+    d_model: int,
+    n_heads: int,
+    n_kv_heads: int,
+    head_dim: int,
+    *,
+    bias: bool = False,
+    dtype=jnp.float32,
+) -> Params:
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    return {
+        "wq": init_dense(kq, d_model, n_heads * head_dim, bias=bias, dtype=dtype),
+        "wk": init_dense(kk, d_model, n_kv_heads * head_dim, bias=bias, dtype=dtype),
+        "wv": init_dense(kv, d_model, n_kv_heads * head_dim, bias=bias, dtype=dtype),
+        "wo": init_dense(ko, n_heads * head_dim, d_model, bias=bias, dtype=dtype),
+    }
+
+
+def KVCache(k: jax.Array, v: jax.Array) -> dict:
+    """KV cache as a plain dict: stable pytree key paths ('kv/k', 'kv/v')
+    are what the sharding rules match on (NamedTuples flatten to positional
+    keys, which silently bypassed the cache sharding rules — see §Perf)."""
+    return {"k": k, "v": v}
+
+
+def init_kv_cache(batch: int, max_len: int, n_kv: int, head_dim: int, dtype=jnp.bfloat16) -> dict:
+    shape = (batch, max_len, n_kv, head_dim)
+    return KVCache(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype))
+
+
+# ---------------------------------------------------------------------------
+# Core attention math
+# ---------------------------------------------------------------------------
+
+
+def _expand_kv(k: jax.Array, n_heads: int) -> jax.Array:
+    """(b, s, n_kv, hd) -> (b, s, n_heads, hd) by repeating each kv head.
+
+    Kept only as a reference path; the attention functions below use grouped
+    einsums instead (materializing the expanded KV forces SPMD resharding
+    copies and n_heads/n_kv x the HBM traffic — confirmed in the §Perf log).
+    """
+    n_kv = k.shape[-2]
+    if n_kv == n_heads:
+        return k
+    return jnp.repeat(k, n_heads // n_kv, axis=-2)
+
+
+def _group_q(q: jax.Array, n_kv: int) -> jax.Array:
+    """(b, s, h, hd) -> (b, s, n_kv, h//n_kv, hd)."""
+    b, s, h, hd = q.shape
+    return q.reshape(b, s, n_kv, h // n_kv, hd)
+
+
+def _prefer_grouped(h: int, n_kv: int) -> bool:
+    """Grouped-q einsums avoid n_heads/n_kv x KV traffic, BUT splitting the
+    head axis (h -> n_kv x g) makes an h-divisible model sharding
+    inexpressible, forcing SPMD to all-reduce the full q tensor (measured
+    +4.3GB/layer on granite prefill, §Perf).  Prefer the expanded-KV path
+    exactly when h shards cleanly and n_kv does not."""
+    from repro.parallel import active_mesh
+
+    mesh = active_mesh()
+    if mesh is None:
+        return True
+    tp = mesh.shape.get("model", 1)
+    if h % tp == 0 and n_kv % tp != 0:
+        return False
+    return True
+
+
+def full_causal_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array, *, scale: float, q_offset: int = 0,
+    prefix_len: int = 0,
+) -> jax.Array:
+    """Reference attention with grouped-query einsums (no KV expansion).
+
+    q: (b, s, h, hd); k/v: (b, s, n_kv, hd) with n_kv | h.
+    prefix_len > 0 gives a prefix-LM mask (bidirectional over the first
+    ``prefix_len`` keys, causal after) — used by the VLM prefix.
+    """
+    b, sq, h, hd = q.shape
+    sk, n_kv = k.shape[1], k.shape[2]
+    if not _prefer_grouped(h, n_kv):
+        k, v = _expand_kv(k, h), _expand_kv(v, h)
+        n_kv = h
+    qg = _group_q(q, n_kv)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k, preferred_element_type=jnp.float32) * scale
+    qpos = jnp.arange(sq) + q_offset
+    kpos = jnp.arange(sk)
+    mask = kpos[None, :] <= qpos[:, None]
+    if prefix_len:
+        mask = mask | (kpos[None, :] < prefix_len)
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v)
+    return out.reshape(b, sq, h, v.shape[-1])
+
+
+def chunked_causal_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    scale: float,
+    q_chunk: int = 512,
+    prefix_len: int = 0,
+) -> jax.Array:
+    """Flash-style attention: scan over query chunks; per chunk, masked
+    softmax over all keys <= chunk end.  Peak memory O(q_chunk * seq) instead
+    of O(seq^2).  Exact (not an approximation).
+    """
+    b, s, h, hd = q.shape
+    if s % q_chunk != 0:
+        # largest divisor of s that is <= q_chunk and a multiple of 128 —
+        # e.g. the VLM's 4096+256-patch sequence picks 256 instead of
+        # silently falling back to full O(s^2) attention (9.7TB of scores on
+        # the paligemma train cell, §Perf)
+        q_chunk = next(
+            (c for c in range(q_chunk - q_chunk % 128, 127, -128) if s % c == 0), 0
+        )
+    if not q_chunk or s <= q_chunk:
+        return full_causal_attention(q, k, v, scale=scale, prefix_len=prefix_len)
+    n_kv = k.shape[2]
+    if not _prefer_grouped(h, n_kv):
+        k, v = _expand_kv(k, h), _expand_kv(v, h)
+        n_kv = h
+    g = h // n_kv
+    nq = s // q_chunk
+    qc = _group_q(q, n_kv).reshape(b, nq, q_chunk, n_kv, g, hd).transpose(1, 0, 2, 3, 4, 5)
+
+    kpos = jnp.arange(s)
+
+    def one_chunk(i, qi):
+        # qi: (b, c, n_kv, g, hd)
+        scores = jnp.einsum("bqhgd,bkhd->bhgqk", qi, k, preferred_element_type=jnp.float32) * scale
+        qpos = i * q_chunk + jnp.arange(q_chunk)
+        mask = kpos[None, :] <= qpos[:, None]
+        if prefix_len:
+            mask = mask | (kpos[None, :] < prefix_len)
+        scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+        return jnp.einsum("bhgqk,bkhd->bqhgd", probs, v)
+
+    out = jax.lax.map(lambda iv: one_chunk(iv[0], iv[1]), (jnp.arange(nq), qc))
+    dv = v.shape[-1]  # may differ from the qk head dim (MLA)
+    return out.transpose(1, 0, 2, 3, 4, 5).reshape(b, s, h, dv)
+
+
+def decode_attention(
+    q: jax.Array,  # (b, 1, h, hd)
+    cache_k: jax.Array,  # (b, S, n_kv, hd)  (may be seq-sharded)
+    cache_v: jax.Array,
+    *,
+    scale: float,
+    length: Optional[jax.Array] = None,
+) -> jax.Array:
+    """One-token attention against a cache of S entries.
+
+    Softmax over the (possibly sharded) S axis is written with explicit
+    max/exp/sum so SPMD inserts all-reduce(max) + all-reduce(sum) when the
+    cache is context/sequence-parallel sharded.  Grouped-query einsums: the
+    KV cache is never expanded to n_heads.
+
+    When the cache sequence axis is sharded (cp over data / cache_seq_tp
+    over model), q and the scores are explicitly constrained so the S-axis
+    sharding wins — without this SPMD resolves the model-axis conflict
+    between head-sharded q and seq-sharded KV by all-gathering the entire
+    cache per token (measured: 1.3TB/step on granite-8b decode, §Perf).
+    """
+    from repro.parallel import constrain, current_policy
+
+    b, sq, h, hd = q.shape
+    n_kv = cache_k.shape[2]
+    qg = _group_q(q, n_kv)
+    seq_sharded = current_policy().cache_seq_tp or current_policy().context_parallel
+    if seq_sharded:
+        qg = constrain(qg, "dp", None, None, None, None)  # replicate q over model
+    scores = jnp.einsum(
+        "bqhgd,bkhd->bqhgk", qg, cache_k, preferred_element_type=jnp.float32
+    ) * scale
+    if seq_sharded:
+        scores = constrain(scores, "dp", None, None, None, "seq")
+    if length is not None:
+        valid = jnp.arange(cache_k.shape[1])[None, :] < length[:, None]  # (b, S)
+        scores = jnp.where(valid[:, None, None, None, :], scores, NEG_INF)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    e = jnp.exp(scores - m)
+    denom = jnp.sum(e, axis=-1, keepdims=True)
+    probs = (e / denom).astype(cache_v.dtype)
+    out = jnp.einsum("bqhgk,bkhd->bqhgd", probs, cache_v)
+    if seq_sharded:
+        out = constrain(out, "dp", None, None, None, None)
+    return out.reshape(b, sq, h, cache_v.shape[-1])
+
+
+# ---------------------------------------------------------------------------
+# Full module apply
+# ---------------------------------------------------------------------------
+
+
+def attention_forward(
+    p: Params,
+    x: jax.Array,  # (b, s, d)
+    *,
+    n_heads: int,
+    n_kv_heads: int,
+    head_dim: int,
+    rope_theta: Optional[float] = 10000.0,
+    positions: Optional[jax.Array] = None,
+    causal: bool = True,
+    q_chunk: int = 512,
+    head_constraint=None,
+    softmax_scale: Optional[float] = None,
+    prefix_len: int = 0,
+) -> jax.Array:
+    """Training/prefill self-attention (full sequence)."""
+    b, s, _ = x.shape
+    q = dense(p["wq"], x).reshape(b, s, n_heads, head_dim)
+    k = dense(p["wk"], x).reshape(b, s, n_kv_heads, head_dim)
+    v = dense(p["wv"], x).reshape(b, s, n_kv_heads, head_dim)
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+    if rope_theta is not None:
+        q = apply_rope(q, positions, rope_theta)
+        k = apply_rope(k, positions, rope_theta)
+    if head_constraint is not None:
+        q, k, v = head_constraint(q), head_constraint(k), head_constraint(v)
+    scale = softmax_scale if softmax_scale is not None else 1.0 / math.sqrt(head_dim)
+    if causal:
+        out = chunked_causal_attention(q, k, v, scale=scale, q_chunk=q_chunk, prefix_len=prefix_len)
+    else:
+        qg = _group_q(q, n_kv_heads)
+        scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k, preferred_element_type=jnp.float32) * scale
+        probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+        out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v).reshape(b, s, n_heads, head_dim)
+    return dense(p["wo"], out.reshape(b, s, n_heads * head_dim))
+
+
+def attention_prefill_cache(
+    p: Params,
+    x: jax.Array,
+    *,
+    n_heads: int,
+    n_kv_heads: int,
+    head_dim: int,
+    rope_theta: Optional[float] = 10000.0,
+) -> dict:
+    b, s, _ = x.shape
+    k = dense(p["wk"], x).reshape(b, s, n_kv_heads, head_dim)
+    v = dense(p["wv"], x).reshape(b, s, n_kv_heads, head_dim)
+    if rope_theta is not None:
+        k = apply_rope(k, jnp.arange(s)[None, :], rope_theta)
+    return KVCache(k=k, v=v)
+
+
+def attention_decode(
+    p: Params,
+    x: jax.Array,  # (b, 1, d)
+    cache: dict,
+    pos: jax.Array,  # scalar int32: index of the new token
+    *,
+    n_heads: int,
+    n_kv_heads: int,
+    head_dim: int,
+    rope_theta: Optional[float] = 10000.0,
+    update_cache: bool = True,
+    softmax_scale: Optional[float] = None,
+) -> tuple[jax.Array, dict]:
+    """Single-token decode with cache append at ``pos``."""
+    b = x.shape[0]
+    q = dense(p["wq"], x).reshape(b, 1, n_heads, head_dim)
+    k = dense(p["wk"], x).reshape(b, 1, n_kv_heads, head_dim)
+    v = dense(p["wv"], x).reshape(b, 1, n_kv_heads, head_dim)
+    posb = jnp.full((b, 1), pos)
+    if rope_theta is not None:
+        q = apply_rope(q, posb, rope_theta)
+        k = apply_rope(k, posb, rope_theta)
+    if update_cache:
+        ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), pos, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), pos, axis=1)
+        cache = KVCache(k=ck, v=cv)
+    scale = softmax_scale if softmax_scale is not None else 1.0 / math.sqrt(head_dim)
+    length = jnp.full((b,), pos + 1)
+    out = decode_attention(q, cache["k"], cache["v"], scale=scale, length=length)
+    y = dense(p["wo"], out.reshape(b, 1, n_heads * head_dim))
+    return y, cache
+
+
+# ---------------------------------------------------------------------------
+# Cross attention (enc-dec)
+# ---------------------------------------------------------------------------
+
+
+def cross_attention_forward(
+    p: Params,
+    x: jax.Array,  # decoder states (b, s, d)
+    enc_kv: dict,  # precomputed from encoder output
+    *,
+    n_heads: int,
+    head_dim: int,
+) -> jax.Array:
+    b, s, _ = x.shape
+    q = dense(p["wq"], x).reshape(b, s, n_heads, head_dim)
+    scale = 1.0 / math.sqrt(head_dim)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, enc_kv["k"], preferred_element_type=jnp.float32) * scale
+    probs = jax.nn.softmax(scores, axis=-1).astype(enc_kv["v"].dtype)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, enc_kv["v"])
+    return dense(p["wo"], out.reshape(b, s, n_heads * head_dim))
+
+
+def cross_kv(p: Params, enc_out: jax.Array, *, n_heads: int, head_dim: int) -> dict:
+    b, s, _ = enc_out.shape
+    k = dense(p["wk"], enc_out).reshape(b, s, n_heads, head_dim)
+    v = dense(p["wv"], enc_out).reshape(b, s, n_heads, head_dim)
+    return KVCache(k=k, v=v)

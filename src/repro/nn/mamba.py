@@ -1,0 +1,143 @@
+"""Mamba-1 selective SSM block (Jamba's mixer), pure JAX.
+
+Recurrence (per channel i, state dim n):
+    h_t = exp(dt_t * A) * h_{t-1} + dt_t * B_t * x_t
+    y_t = C_t . h_t + D * x_t
+with input-dependent dt, B, C (the "selective" part).  Training uses
+``lax.scan`` over time (compact HLO under the layer scan); decode carries
+(conv_state, ssm_state) caches.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import Params, dense, init_dense
+
+
+class SSMConfig(NamedTuple):
+    d_state: int = 16
+    d_conv: int = 4
+    expand: int = 2
+    dt_rank: int = 0  # 0 -> ceil(d_model / 16)
+
+
+def MambaCache(conv: jax.Array, ssm: jax.Array) -> dict:
+    """SSM cache as a dict (stable 'mamba/conv', 'mamba/ssm' paths)."""
+    return {"conv": conv, "ssm": ssm}
+
+
+def init_mamba(key, d_model: int, cfg: SSMConfig, dtype=jnp.float32) -> Params:
+    d_inner = cfg.expand * d_model
+    dt_rank = cfg.dt_rank or math.ceil(d_model / 16)
+    ks = jax.random.split(key, 6)
+    p: Params = {
+        "in_proj": init_dense(ks[0], d_model, 2 * d_inner, dtype=dtype),
+        "conv_kernel": (jax.random.normal(ks[1], (cfg.d_conv, d_inner)) * 0.1).astype(dtype),
+        "conv_bias": jnp.zeros((d_inner,), dtype),
+        "x_proj": init_dense(ks[2], d_inner, dt_rank + 2 * cfg.d_state, dtype=dtype),
+        "dt_proj": init_dense(ks[3], dt_rank, d_inner, bias=True, dtype=dtype),
+        # A_log/D kept fp32: they parameterize the recurrence (PVQ-skipped)
+        "a_log": jnp.log(jnp.broadcast_to(jnp.arange(1, cfg.d_state + 1, dtype=jnp.float32), (d_inner, cfg.d_state)) + 0.0),
+        "d_skip": jnp.ones((d_inner,), jnp.float32),
+        "out_proj": init_dense(ks[4], d_inner, d_model, dtype=dtype),
+    }
+    # dt bias init so softplus(dt) starts around 0.001..0.1
+    p["dt_proj"]["bias"] = jnp.log(jnp.expm1(0.01)) * jnp.ones((d_inner,), dtype)
+    return p
+
+
+def _split_xz(p: Params, x: jax.Array, d_inner: int):
+    xz = dense(p["in_proj"], x)
+    return xz[..., :d_inner], xz[..., d_inner:]
+
+
+def _conv_causal(p: Params, u: jax.Array) -> jax.Array:
+    """Depthwise causal conv over time. u: (b, s, d_inner)."""
+    k = p["conv_kernel"].astype(u.dtype)  # (w, d)
+    w = k.shape[0]
+    pad = jnp.pad(u, ((0, 0), (w - 1, 0), (0, 0)))
+    out = jnp.zeros_like(u)
+    for i in range(w):  # tiny unrolled loop (w=4)
+        out = out + pad[:, i : i + u.shape[1], :] * k[i]
+    return out + p["conv_bias"].astype(u.dtype)
+
+
+def _ssm_params(p: Params, u: jax.Array, cfg: SSMConfig, d_inner: int):
+    dt_rank = p["dt_proj"]["kernel"].shape[0]
+    proj = dense(p["x_proj"], u)
+    dt, b_mat, c_mat = jnp.split(proj, [dt_rank, dt_rank + cfg.d_state], axis=-1)
+    dt = jax.nn.softplus(dense(p["dt_proj"], dt).astype(jnp.float32))  # (b,s,d_inner)
+    a = -jnp.exp(p["a_log"])  # (d_inner, n)
+    return dt, a, b_mat.astype(jnp.float32), c_mat.astype(jnp.float32)
+
+
+def mamba_forward(p: Params, x: jax.Array, cfg: SSMConfig, *, return_state: bool = False):
+    """Training/prefill. x: (b, s, d_model)."""
+    d_inner = p["out_proj"]["kernel"].shape[0]
+    u_pre, z = _split_xz(p, x, d_inner)
+    u = jax.nn.silu(_conv_causal(p, u_pre))
+    dt, a, b_mat, c_mat = _ssm_params(p, u, cfg, d_inner)
+
+    # exp(dt*A) and dt*B*x are computed INSIDE the scan body: materializing
+    # them up-front costs (b,s,d_inner,n) f32 tensors — measured 8.6GB/chip
+    # per layer on the jamba train cell, ~60% of its memory term (§Perf)
+    def step(h, inp):
+        dt_t, b_t, c_t, u_t = inp  # (b,d), (b,n), (b,n), (b,d)
+        da_t = jnp.exp(dt_t[..., None] * a)  # (b, d_inner, n)
+        dbx_t = (dt_t * u_t)[..., None] * b_t[:, None, :]
+        h = da_t * h + dbx_t
+        y = jnp.einsum("bdn,bn->bd", h, c_t)
+        return h, y
+
+    b, s, _ = x.shape
+    h0 = jnp.zeros((b, d_inner, cfg.d_state), jnp.float32)
+    xs = (
+        jnp.moveaxis(dt, 1, 0),
+        jnp.moveaxis(b_mat, 1, 0),
+        jnp.moveaxis(c_mat, 1, 0),
+        jnp.moveaxis(u.astype(jnp.float32), 1, 0),
+    )
+    h_final, ys = jax.lax.scan(step, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1)  # (b, s, d_inner)
+    y = y + u.astype(jnp.float32) * p["d_skip"]
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = dense(p["out_proj"], y)
+    if return_state:
+        w = cfg.d_conv
+        window = jnp.pad(u_pre, ((0, 0), (w - 1, 0), (0, 0)))[:, -(w - 1) :, :]
+        return out, MambaCache(conv=window, ssm=h_final)
+    return out
+
+
+def init_mamba_cache(batch: int, d_model: int, cfg: SSMConfig, dtype=jnp.float32) -> dict:
+    d_inner = cfg.expand * d_model
+    return MambaCache(
+        conv=jnp.zeros((batch, cfg.d_conv - 1, d_inner), dtype),
+        ssm=jnp.zeros((batch, d_inner, cfg.d_state), jnp.float32),
+    )
+
+
+def mamba_decode(
+    p: Params, x: jax.Array, cache: dict, cfg: SSMConfig
+) -> Tuple[jax.Array, dict]:
+    """One-token step. x: (b, 1, d_model)."""
+    d_inner = p["out_proj"]["kernel"].shape[0]
+    u, z = _split_xz(p, x, d_inner)  # (b,1,d_inner)
+    window = jnp.concatenate([cache["conv"], u], axis=1)  # (b, w, d_inner)
+    k = p["conv_kernel"].astype(u.dtype)
+    u_conv = jnp.einsum("bwd,wd->bd", window, k)[:, None, :] + p["conv_bias"].astype(u.dtype)
+    u_act = jax.nn.silu(u_conv)
+    dt, a, b_mat, c_mat = _ssm_params(p, u_act, cfg, d_inner)
+    da = jnp.exp(dt[:, 0, :, None] * a)  # (b, d_inner, n)
+    dbx = dt[:, 0, :, None] * b_mat[:, 0, None, :] * u_act.astype(jnp.float32)[:, 0, :, None]
+    h = da * cache["ssm"] + dbx
+    y = jnp.einsum("bdn,bn->bd", h, c_mat[:, 0])[:, None, :]
+    y = y + u_act.astype(jnp.float32) * p["d_skip"]
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = dense(p["out_proj"], y)
+    return out, MambaCache(conv=window[:, 1:], ssm=h)

@@ -1,0 +1,156 @@
+"""Multi-head Latent Attention (DeepSeek-V2) with compressed-KV decode.
+
+Train/prefill: decompress the latent kv to per-head K/V and run standard
+causal attention.  Decode: the *absorbed* formulation — W_uk is folded into
+the query and W_uv into the output, so the KV cache holds only the
+``kv_lora_rank + rope_dim`` latent per token (the whole point of MLA: 576
+floats/token for the 236b config instead of 2*128*128=32768).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .attention import NEG_INF, apply_rope, chunked_causal_attention
+from .layers import Params, dense, init_dense, init_rmsnorm, rmsnorm
+
+
+class MLAConfig(NamedTuple):
+    kv_lora_rank: int = 512
+    q_lora_rank: Optional[int] = None  # None -> direct q projection
+    nope_head_dim: int = 128
+    rope_head_dim: int = 64
+    v_head_dim: int = 128
+
+
+def MLACache(c_kv: jax.Array, k_rope: jax.Array) -> dict:
+    """Latent cache as a dict (stable 'mla/c_kv' paths for sharding rules)."""
+    return {"c_kv": c_kv, "k_rope": k_rope}
+
+
+def init_mla(key, d_model: int, n_heads: int, cfg: MLAConfig, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 8)
+    qk_head = cfg.nope_head_dim + cfg.rope_head_dim
+    p: Params = {}
+    if cfg.q_lora_rank:
+        p["wq_a"] = init_dense(ks[0], d_model, cfg.q_lora_rank, dtype=dtype)
+        p["q_norm"] = init_rmsnorm(cfg.q_lora_rank, dtype)
+        p["wq_b"] = init_dense(ks[1], cfg.q_lora_rank, n_heads * qk_head, dtype=dtype)
+    else:
+        p["wq"] = init_dense(ks[0], d_model, n_heads * qk_head, dtype=dtype)
+    p["wkv_a"] = init_dense(ks[2], d_model, cfg.kv_lora_rank, dtype=dtype)
+    p["kv_norm"] = init_rmsnorm(cfg.kv_lora_rank, dtype)
+    p["wk_rope"] = init_dense(ks[3], d_model, cfg.rope_head_dim, dtype=dtype)
+    p["wk_b"] = init_dense(ks[4], cfg.kv_lora_rank, n_heads * cfg.nope_head_dim, dtype=dtype)
+    p["wv_b"] = init_dense(ks[5], cfg.kv_lora_rank, n_heads * cfg.v_head_dim, dtype=dtype)
+    p["wo"] = init_dense(ks[6], n_heads * cfg.v_head_dim, d_model, dtype=dtype)
+    return p
+
+
+def _queries(p: Params, x: jax.Array, n_heads: int, cfg: MLAConfig, positions):
+    b, s, _ = x.shape
+    qk_head = cfg.nope_head_dim + cfg.rope_head_dim
+    if "wq_a" in p:
+        q = dense(p["wq_b"], rmsnorm(p["q_norm"], dense(p["wq_a"], x)))
+    else:
+        q = dense(p["wq"], x)
+    q = q.reshape(b, s, n_heads, qk_head)
+    q_nope, q_rope = q[..., : cfg.nope_head_dim], q[..., cfg.nope_head_dim :]
+    q_rope = apply_rope(q_rope, positions)
+    return q_nope, q_rope
+
+
+def _latents(p: Params, x: jax.Array, cfg: MLAConfig, positions):
+    c_kv = rmsnorm(p["kv_norm"], dense(p["wkv_a"], x))  # (b, s, r)
+    k_rope = dense(p["wk_rope"], x)  # (b, s, rope_dim) shared across heads
+    k_rope = apply_rope(k_rope[:, :, None, :], positions)[:, :, 0, :]
+    return c_kv, k_rope
+
+
+def mla_forward(
+    p: Params,
+    x: jax.Array,
+    *,
+    n_heads: int,
+    cfg: MLAConfig,
+    q_chunk: int = 512,
+    positions: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Training/prefill: decompressed attention."""
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+    q_nope, q_rope = _queries(p, x, n_heads, cfg, positions)
+    c_kv, k_rope = _latents(p, x, cfg, positions)
+    k_nope = dense(p["wk_b"], c_kv).reshape(b, s, n_heads, cfg.nope_head_dim)
+    v = dense(p["wv_b"], c_kv).reshape(b, s, n_heads, cfg.v_head_dim)
+    # concat nope+rope into a single head dim so one attention call suffices
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope[:, :, None, :], q_rope.shape[:2] + (n_heads, cfg.rope_head_dim))], axis=-1)
+    scale = 1.0 / math.sqrt(cfg.nope_head_dim + cfg.rope_head_dim)
+    # pad v to qk_head so chunked attention can run on one fused tensor? No —
+    # chunked_causal_attention supports distinct v dim via separate call.
+    out = chunked_causal_attention(q, k, v, scale=scale, q_chunk=q_chunk)
+    return dense(p["wo"], out.reshape(b, s, n_heads * cfg.v_head_dim))
+
+
+def mla_prefill_cache(p: Params, x: jax.Array, cfg: MLAConfig) -> dict:
+    b, s, _ = x.shape
+    positions = jnp.arange(s)[None, :]
+    c_kv, k_rope = _latents(p, x, cfg, positions)
+    return MLACache(c_kv=c_kv, k_rope=k_rope)
+
+
+def mla_decode(
+    p: Params,
+    x: jax.Array,  # (b, 1, d)
+    cache: dict,
+    pos: jax.Array,
+    *,
+    n_heads: int,
+    cfg: MLAConfig,
+    update_cache: bool = True,
+) -> Tuple[jax.Array, dict]:
+    """Absorbed decode: scores and values live in the latent space."""
+    b = x.shape[0]
+    posb = jnp.full((b, 1), pos)
+    q_nope, q_rope = _queries(p, x, n_heads, cfg, posb)  # (b,1,h,*)
+    c_new, kr_new = _latents(p, x, cfg, posb)
+    if update_cache:
+        c_kv = jax.lax.dynamic_update_slice_in_dim(cache["c_kv"], c_new.astype(cache["c_kv"].dtype), pos, axis=1)
+        k_rope = jax.lax.dynamic_update_slice_in_dim(cache["k_rope"], kr_new.astype(cache["k_rope"].dtype), pos, axis=1)
+        cache = MLACache(c_kv=c_kv, k_rope=k_rope)
+    from repro.parallel import constrain, current_policy
+
+    r = cfg.kv_lora_rank
+    seq_sharded = current_policy().cache_seq_tp or current_policy().context_parallel
+    # absorb W_uk:  q_abs[b,h,r] = sum_d q_nope[b,h,d] * W_uk[r, h, d]
+    wk_b = p["wk_b"]["kernel"].reshape(r, n_heads, cfg.nope_head_dim)
+    q_abs = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0], wk_b.astype(q_nope.dtype))
+    if seq_sharded:
+        # the S axis sharding must win over head-sharded queries (see
+        # attention.decode_attention — same SPMD conflict, same fix)
+        q_abs = constrain(q_abs, "dp", None, None)
+    scores_nope = jnp.einsum("bhr,bsr->bhs", q_abs, cache["c_kv"].astype(q_abs.dtype), preferred_element_type=jnp.float32)
+    scores_rope = jnp.einsum("bhd,bsd->bhs", q_rope[:, 0], cache["k_rope"].astype(q_rope.dtype), preferred_element_type=jnp.float32)
+    scale = 1.0 / math.sqrt(cfg.nope_head_dim + cfg.rope_head_dim)
+    scores = (scores_nope + scores_rope) * scale
+    if seq_sharded:
+        scores = constrain(scores, "dp", None, "seq")
+    length = jnp.full((b,), pos + 1)
+    valid = jnp.arange(cache["c_kv"].shape[1])[None, :] < length[:, None]
+    scores = jnp.where(valid[:, None, :], scores, NEG_INF)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    e = jnp.exp(scores - m)
+    probs = (e / jnp.sum(e, axis=-1, keepdims=True)).astype(cache["c_kv"].dtype)
+    out_lat = jnp.einsum("bhs,bsr->bhr", probs, cache["c_kv"])  # (b, h, r)
+    if seq_sharded:
+        out_lat = constrain(out_lat, "dp", None, None)
+    wv_b = p["wv_b"]["kernel"].reshape(r, n_heads, cfg.v_head_dim)
+    out = jnp.einsum("bhr,rhd->bhd", out_lat.astype(x.dtype), wv_b.astype(x.dtype))
+    y = dense(p["wo"], out.reshape(b, 1, n_heads * cfg.v_head_dim))
+    return y, cache

@@ -1,0 +1,220 @@
+"""Unified model API over all assigned architectures.
+
+    model = Model(cfg)
+    params = model.init(key)
+    loss, metrics = model.loss(params, batch)                 # train
+    logits, cache = model.prefill(params, batch, cache_len)   # inference prefill
+    logits, cache = model.decode_step(params, cache, token, pos)
+
+Batch keys:  tokens/targets (b, s) int32 always; ``frames`` (b, s_enc, d)
+for enc-dec (stub audio frontend); ``patches`` (b, p, d) for VLM (stub
+vision frontend).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.parallel import constrain
+
+from . import layers as L
+from . import transformer as T
+from .layers import Params
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.plan = T.segment_plan(cfg, "decoder")
+        self.enc_plan = T.segment_plan(cfg, "encoder") if cfg.encoder_layers else None
+
+    # ------------------------------------------------------------------ init
+
+    def init(self, key, max_seq: int = 0) -> Params:
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.param_dtype)
+        keys = jax.random.split(key, 16)
+        params: Params = {"embed": L.init_embedding(keys[0], cfg.vocab_size, cfg.d_model, dtype)}
+        if cfg.learned_positions:
+            params["pos"] = L.init_positional(keys[1], cfg.max_position or max_seq or 4096, cfg.d_model, dtype)
+        params["segments"] = {
+            f"seg{i}": T.init_segment(keys[2 + i], cfg, seg) for i, seg in enumerate(self.plan)
+        }
+        params["final_norm"] = T._init_norm(cfg, dtype)
+        if not cfg.tie_embeddings:
+            params["lm_head"] = L.init_dense(keys[10], cfg.d_model, cfg.vocab_size, dtype=dtype)
+        if self.enc_plan:
+            params["encoder"] = {
+                "segments": {
+                    f"seg{i}": T.init_segment(keys[11 + i], cfg, seg)
+                    for i, seg in enumerate(self.enc_plan)
+                },
+                "final_norm": T._init_norm(cfg, dtype),
+            }
+        return params
+
+    # ----------------------------------------------------------------- embed
+
+    def _embed_tokens(self, params: Params, tokens: jax.Array, pos_offset: int = 0) -> jax.Array:
+        cfg = self.cfg
+        x = L.embed(params["embed"], tokens, dtype=jnp.dtype(cfg.compute_dtype))
+        if cfg.family in ("vlm",) or cfg.name.startswith("gemma"):
+            x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+        if cfg.learned_positions:
+            s = tokens.shape[1]
+            pe = jax.lax.dynamic_slice_in_dim(params["pos"]["pos_embedding"], pos_offset, s, axis=0)
+            x = x + pe.astype(x.dtype)
+        return x
+
+    def _encode(self, params: Params, frames: jax.Array, mode: str) -> jax.Array:
+        """Whisper-style encoder over precomputed frame embeddings (stub frontend)."""
+        cfg = self.cfg
+        x = frames.astype(jnp.dtype(cfg.compute_dtype))
+        x = x + L.sinusoidal_positions(x.shape[1], cfg.d_model, x.dtype)[None]
+        for i, seg in enumerate(self.enc_plan):
+            x, _, _ = T.run_segment(
+                cfg, seg, params["encoder"]["segments"][f"seg{i}"], x,
+                mode="train", remat=(mode == "train"),
+            )
+        return T._norm(cfg, params["encoder"]["final_norm"], x)
+
+    # --------------------------------------------------------------- forward
+
+    def forward(
+        self, params: Params, batch: Dict[str, jax.Array], *, mode: str = "train"
+    ) -> Tuple[jax.Array, jax.Array, Optional[Any]]:
+        """Full-sequence forward. Returns (logits, aux_loss, caches|None)."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        x = self._embed_tokens(params, tokens)
+        prefix_len = 0
+        enc_out = None
+        if cfg.family == "vlm":
+            patches = batch["patches"].astype(x.dtype)
+            x = jnp.concatenate([patches, x], axis=1)
+            prefix_len = patches.shape[1]
+        if self.enc_plan:
+            enc_out = self._encode(params, batch["frames"], mode)
+        x = constrain(x, "dp", "sp", None)
+
+        aux = jnp.zeros((), jnp.float32)
+        caches = {}
+        for i, seg in enumerate(self.plan):
+            x, aux_i, c = T.run_segment(
+                cfg, seg, params["segments"][f"seg{i}"], x,
+                mode=mode, enc_out=enc_out, prefix_len=prefix_len,
+                remat=(mode == "train"),
+            )
+            aux = aux + aux_i
+            if c is not None:
+                caches[f"seg{i}"] = c
+        x = T._norm(cfg, params["final_norm"], x)
+        if prefix_len:
+            x = x[:, prefix_len:, :]
+        logits = self._head(params, x)
+        return logits, aux, (caches if mode == "prefill" else None)
+
+    def _head(self, params: Params, x: jax.Array) -> jax.Array:
+        if self.cfg.tie_embeddings:
+            logits = L.unembed(params["embed"], x)
+        else:
+            logits = L.dense(params["lm_head"], x.astype(jnp.float32))
+        return constrain(logits, "dp", None, "tp")
+
+    # ------------------------------------------------------------------ loss
+
+    def loss(self, params: Params, batch: Dict[str, jax.Array]) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        cfg = self.cfg
+        logits, aux, _ = self.forward(params, batch, mode="train")
+        targets = batch["targets"]
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        tgt_logit = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+        ce = jnp.mean(logz - tgt_logit)
+        total = ce + cfg.moe_aux_coef * aux
+        if cfg.z_loss_coef:
+            total = total + cfg.z_loss_coef * jnp.mean(logz**2)
+        acc = jnp.mean((jnp.argmax(logits, -1) == targets).astype(jnp.float32))
+        return total, {"ce": ce, "aux": aux, "accuracy": acc}
+
+    # --------------------------------------------------------------- serving
+
+    def prefill(
+        self, params: Params, batch: Dict[str, jax.Array], cache_len: int = 0
+    ) -> Tuple[jax.Array, Any]:
+        """Run the prompt, return (last-position logits, decode cache)."""
+        logits, _, caches = self.forward(params, batch, mode="prefill")
+        s = batch["tokens"].shape[1]
+        if cache_len and cache_len > s:
+            pad = cache_len - s
+
+            def pad_seq(path, leaf):
+                # sequence-indexed cache tensors have shape (..., s, tail);
+                # cross-attention KV is over the (fixed) encoder length and
+                # must NOT be padded — zero keys would join the softmax
+                names = [getattr(p, "name", getattr(p, "key", "")) for p in path]
+                if "cross" in names:
+                    return leaf
+                if any(n in ("k", "v", "c_kv", "k_rope") for n in names) and leaf.ndim >= 3:
+                    cfgpad = [(0, 0)] * leaf.ndim
+                    cfgpad[2] = (0, pad)  # (repeats, batch, seq, ...)
+                    return jnp.pad(leaf, cfgpad)
+                return leaf
+
+            caches = jax.tree_util.tree_map_with_path(pad_seq, caches)
+        return logits[:, -1:, :], caches
+
+    def init_cache(self, batch: int, cache_len: int, enc_len: int = 0) -> Any:
+        return T.init_plan_cache(self.cfg, self.plan, batch, cache_len, enc_len or cache_len)
+
+    def decode_step(
+        self, params: Params, cache: Any, token: jax.Array, pos: jax.Array
+    ) -> Tuple[jax.Array, Any]:
+        """token: (b, 1) int32; pos: scalar int32 (next position index)."""
+        cfg = self.cfg
+        x = self._embed_tokens(params, token, pos_offset=0)
+        if cfg.learned_positions:
+            # replace the offset-0 slice with the true position embedding
+            pe = jax.lax.dynamic_slice_in_dim(params["pos"]["pos_embedding"], 0, 1, axis=0)
+            pe_t = jax.lax.dynamic_slice_in_dim(params["pos"]["pos_embedding"], pos, 1, axis=0)
+            x = x - pe.astype(x.dtype) + pe_t.astype(x.dtype)
+        new_cache = {}
+        for i, seg in enumerate(self.plan):
+            x, c = T.decode_segment(cfg, seg, params["segments"][f"seg{i}"], cache[f"seg{i}"], x, pos)
+            new_cache[f"seg{i}"] = c
+        x = T._norm(cfg, params["final_norm"], x)
+        return self._head(params, x), new_cache
+
+    # ------------------------------------------------------------- accounting
+
+    def param_count(self, params: Params) -> int:
+        return sum(int(x.size) for x in jax.tree.leaves(params))
+
+    def active_param_count(self, params: Params) -> int:
+        """MoE-aware active parameters per token (for MODEL_FLOPS = 6*N_active*D)."""
+        cfg = self.cfg
+        if cfg.moe is None:
+            return self.param_count(params)
+        total = 0
+        active_frac = (cfg.moe.top_k + cfg.moe.n_shared) / max(cfg.moe.n_experts, 1)
+
+        def visit(path, leaf):
+            nonlocal total
+            pstr = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+            n = int(leaf.size)
+            if "experts" in pstr and "shared" not in pstr:
+                # routed experts: only top_k of n_experts active
+                n = int(n * cfg.moe.top_k / cfg.moe.n_experts)
+            total += n
+            return leaf
+
+        jax.tree_util.tree_map_with_path(visit, params)
+        return total
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

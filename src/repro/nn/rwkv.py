@@ -1,0 +1,150 @@
+"""RWKV-6 "Finch" block: attention-free time mixing with data-dependent decay.
+
+Per head (head size M): state S in R^{M x M},
+    y_t = r_t^T (S_t + diag(u) k_t v_t^T)
+    S_{t+1} = diag(w_t) S_t + k_t v_t^T
+where the decay w_t = exp(-exp(w0 + lora_w(x~_t))) is *data-dependent* (the
+Finch contribution) and token-shift interpolation coefficients are themselves
+produced by a small LoRA ("ddlerp").
+
+The decay/bonus parameters (w0, u, loras) parameterize the recurrence, not a
+dot product, so they are excluded from PVQ quantization (DESIGN.md
+§Arch-applicability); the r/k/v/g/out projections and the channel-mix FFN are
+PVQ-quantizable dense layers.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import Params, dense, init_dense, init_layernorm, layernorm
+
+
+class RWKVConfig(NamedTuple):
+    head_size: int = 64
+    decay_lora: int = 64
+    mix_lora: int = 32
+
+
+class RWKVCache(NamedTuple):
+    shift_att: jax.Array  # (b, d) last input to time-mix
+    shift_ffn: jax.Array  # (b, d) last input to channel-mix
+    wkv: jax.Array  # (b, h, m, m) state
+
+
+def init_rwkv_time_mix(key, d_model: int, cfg: RWKVConfig, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 12)
+    h = d_model // cfg.head_size
+    p: Params = {
+        # ddlerp token-shift: 5 targets (r, w, k, v, g)
+        "time_mix_base": (jnp.zeros((5, d_model)) + 0.5).astype(jnp.float32),
+        "time_mix_w1": (jax.random.normal(ks[0], (d_model, 5 * cfg.mix_lora)) * 0.01).astype(dtype),
+        "time_mix_w2": (jax.random.normal(ks[1], (5, cfg.mix_lora, d_model)) * 0.01).astype(dtype),
+        # data-dependent decay lora
+        "time_decay_base": jnp.zeros((d_model,), jnp.float32) - 6.0,
+        "time_decay_w1": (jax.random.normal(ks[2], (d_model, cfg.decay_lora)) * 0.01).astype(dtype),
+        "time_decay_w2": (jax.random.normal(ks[3], (cfg.decay_lora, d_model)) * 0.01).astype(dtype),
+        "time_faaaa": jnp.zeros((h, cfg.head_size), jnp.float32) + 0.1,  # u bonus
+        "wr": init_dense(ks[4], d_model, d_model, dtype=dtype),
+        "wk": init_dense(ks[5], d_model, d_model, dtype=dtype),
+        "wv": init_dense(ks[6], d_model, d_model, dtype=dtype),
+        "wg": init_dense(ks[7], d_model, d_model, dtype=dtype),
+        "out": init_dense(ks[8], d_model, d_model, dtype=dtype),
+        "ln_x": init_layernorm(d_model, dtype),
+    }
+    return p
+
+
+def init_rwkv_channel_mix(key, d_model: int, d_ff: int, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 3)
+    return {
+        "cmix_base": (jnp.zeros((2, d_model)) + 0.5).astype(jnp.float32),
+        "wk": init_dense(ks[0], d_model, d_ff, dtype=dtype),
+        "wv": init_dense(ks[1], d_ff, d_model, dtype=dtype),
+        "wr": init_dense(ks[2], d_model, d_model, dtype=dtype),
+    }
+
+
+def _ddlerp(p: Params, x: jax.Array, x_prev: jax.Array, cfg: RWKVConfig):
+    """Data-dependent token-shift mix for the 5 targets. Returns (5, b, s, d)."""
+    dx = x_prev - x
+    base = p["time_mix_base"].astype(jnp.float32)  # (5, d)
+    xx = x + dx * base[0]  # seed mix (use the first row as the seed coeff)
+    lora = jnp.tanh(dense({"kernel": p["time_mix_w1"]}, xx))  # (b,s,5*L)
+    b, s, _ = x.shape
+    lora = lora.reshape(b, s, 5, cfg.mix_lora)
+    delta = jnp.einsum("bsfl,fld->fbsd", lora, p["time_mix_w2"].astype(lora.dtype))
+    mixed = x[None] + dx[None] * (base[:, None, None, :] + delta.astype(jnp.float32))
+    return mixed  # (5, b, s, d) f32
+
+
+def _decay(p: Params, xw: jax.Array) -> jax.Array:
+    """w_t in (0,1): exp(-exp(w0 + lora(xw))). xw: (b, s, d)."""
+    lora = dense({"kernel": p["time_decay_w2"]}, jnp.tanh(dense({"kernel": p["time_decay_w1"]}, xw)))
+    logw = p["time_decay_base"] + lora.astype(jnp.float32)
+    return jnp.exp(-jnp.exp(logw))
+
+
+def rwkv_time_mix(
+    p: Params, x: jax.Array, cfg: RWKVConfig, *, x_prev: jax.Array | None = None,
+    state: jax.Array | None = None, return_state: bool = False
+):
+    """x: (b, s, d).  x_prev: (b, d) last token of the previous segment."""
+    b, s, d = x.shape
+    m = cfg.head_size
+    h = d // m
+    if x_prev is None:
+        x_prev = jnp.zeros((b, d), x.dtype)
+    shifted = jnp.concatenate([x_prev[:, None, :], x[:, :-1, :]], axis=1)
+    mixed = _ddlerp(p, x.astype(jnp.float32), shifted.astype(jnp.float32), cfg)
+    xr, xw, xk, xv, xg = [mixed[i].astype(x.dtype) for i in range(5)]
+
+    r = dense(p["wr"], xr).reshape(b, s, h, m)
+    k = dense(p["wk"], xk).reshape(b, s, h, m)
+    v = dense(p["wv"], xv).reshape(b, s, h, m)
+    g = jax.nn.silu(dense(p["wg"], xg))
+    w = _decay(p, xw).reshape(b, s, h, m)  # f32 in (0,1)
+    u = p["time_faaaa"]  # (h, m)
+
+    def step(s_state, inp):
+        r_t, k_t, v_t, w_t = inp  # (b,h,m) each
+        kv = k_t[..., :, None] * v_t[..., None, :]  # (b,h,m,m)
+        y = jnp.einsum("bhm,bhmn->bhn", r_t, s_state + u[None, :, :, None] * kv)
+        s_state = w_t[..., :, None] * s_state + kv
+        return s_state, y
+
+    if state is None:
+        state = jnp.zeros((b, h, m, m), jnp.float32)
+    xs = (
+        jnp.moveaxis(r.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(k.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(v.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(w, 1, 0),
+    )
+    state, ys = jax.lax.scan(step, state, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s, d).astype(x.dtype)
+    y = layernorm(p["ln_x"], y)  # group-norm proxy over channels
+    out = dense(p["out"], y * g)
+    if return_state:
+        return out, state
+    return out
+
+
+def rwkv_channel_mix(
+    p: Params, x: jax.Array, *, x_prev: jax.Array | None = None
+) -> jax.Array:
+    b, s, d = x.shape
+    if x_prev is None:
+        x_prev = jnp.zeros((b, d), x.dtype)
+    shifted = jnp.concatenate([x_prev[:, None, :], x[:, :-1, :]], axis=1)
+    base = p["cmix_base"].astype(jnp.float32)
+    dx = (shifted - x).astype(jnp.float32)
+    xk = (x.astype(jnp.float32) + dx * base[0]).astype(x.dtype)
+    xr = (x.astype(jnp.float32) + dx * base[1]).astype(x.dtype)
+    k = jax.nn.relu(dense(p["wk"], xk))
+    k = k * k
+    return jax.nn.sigmoid(dense(p["wr"], xr)) * dense(p["wv"], k)

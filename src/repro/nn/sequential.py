@@ -1,0 +1,215 @@
+"""Sequential MLP/CNN substrate for the paper's own experiments (§VII).
+
+Reproduces the Keras-example topologies the paper uses (nets A-D) in pure
+JAX: fully connected stacks with ReLU or bsign activations, and the small
+CIFAR CNN (conv/maxpool).  Supports the paper's per-layer PVQ procedure
+(flatten weights+bias into ONE vector per layer, single rho), rho-folding
+verification, and integer-only inference.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import PVQCode, pvq_encode, k_for
+from repro.core.qat import bsign
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    kind: str  # 'fc' | 'conv' | 'maxpool' | 'flatten' | 'dropout'
+    out: int = 0  # fc units or conv channels
+    kernel: int = 3  # conv kernel size
+    pool: int = 2
+    rate: float = 0.0  # dropout
+    activation: str = "relu"  # 'relu' | 'bsign' | 'none'
+    n_over_k: Optional[float] = None  # paper's N/K for this layer (None = skip PVQ)
+
+
+@dataclasses.dataclass(frozen=True)
+class SequentialConfig:
+    name: str
+    input_shape: Tuple[int, ...]  # e.g. (784,) or (32, 32, 3)
+    layers: Tuple[LayerSpec, ...]
+    n_classes: int = 10
+
+
+def _act(name: str, x):
+    if name == "relu":
+        return jax.nn.relu(x)
+    if name == "bsign":
+        return bsign(x)
+    if name == "none":
+        return x
+    raise ValueError(name)
+
+
+class SequentialNet:
+    def __init__(self, cfg: SequentialConfig):
+        self.cfg = cfg
+
+    def init(self, key) -> Dict[str, Any]:
+        params: Dict[str, Any] = {}
+        shape = self.cfg.input_shape
+        ki = 0
+        keys = jax.random.split(key, len(self.cfg.layers))
+        for i, spec in enumerate(self.cfg.layers):
+            if spec.kind == "fc":
+                d_in = int(np.prod(shape))
+                w = jax.random.normal(keys[i], (d_in, spec.out)) * (2.0 / d_in) ** 0.5
+                params[f"layer{i}"] = {"kernel": w, "bias": jnp.zeros(spec.out)}
+                shape = (spec.out,)
+            elif spec.kind == "conv":
+                cin = shape[-1]
+                w = jax.random.normal(keys[i], (spec.kernel, spec.kernel, cin, spec.out))
+                w = w * (2.0 / (spec.kernel * spec.kernel * cin)) ** 0.5
+                params[f"layer{i}"] = {"kernel": w, "bias": jnp.zeros(spec.out)}
+                shape = (shape[0], shape[1], spec.out)  # SAME padding
+            elif spec.kind == "maxpool":
+                shape = (shape[0] // spec.pool, shape[1] // spec.pool, shape[2])
+            elif spec.kind == "flatten":
+                shape = (int(np.prod(shape)),)
+        return params
+
+    def apply(
+        self,
+        params: Dict[str, Any],
+        x: jax.Array,
+        *,
+        train: bool = False,
+        dropout_key=None,
+    ) -> jax.Array:
+        cfg = self.cfg
+        for i, spec in enumerate(cfg.layers):
+            if spec.kind == "fc":
+                if x.ndim > 2:
+                    x = x.reshape(x.shape[0], -1)
+                p = params[f"layer{i}"]
+                x = _act(spec.activation, x @ p["kernel"] + p["bias"])
+            elif spec.kind == "conv":
+                p = params[f"layer{i}"]
+                x = jax.lax.conv_general_dilated(
+                    x, p["kernel"], window_strides=(1, 1), padding="SAME",
+                    dimension_numbers=("NHWC", "HWIO", "NHWC"),
+                )
+                x = _act(spec.activation, x + p["bias"])
+            elif spec.kind == "maxpool":
+                x = jax.lax.reduce_window(
+                    x, -jnp.inf, jax.lax.max,
+                    (1, spec.pool, spec.pool, 1), (1, spec.pool, spec.pool, 1), "VALID",
+                )
+            elif spec.kind == "flatten":
+                x = x.reshape(x.shape[0], -1)
+            elif spec.kind == "dropout":
+                if train and dropout_key is not None:
+                    dropout_key, sub = jax.random.split(dropout_key)
+                    keep = jax.random.bernoulli(sub, 1.0 - spec.rate, x.shape)
+                    x = jnp.where(keep, x / (1.0 - spec.rate), 0.0)
+        return x  # logits (last fc has activation 'none')
+
+    # ------------------------------------------------------------------ PVQ
+
+    def pvq_encode_layers(
+        self, params: Dict[str, Any], scale_mode: str = "paper"
+    ) -> Tuple[Dict[str, Any], Dict[str, PVQCode], Dict[str, Dict]]:
+        """The paper's §VII procedure: per weight-layer, flatten kernel,
+        concat bias, PVQ as ONE vector with K = N / (N/K ratio), split back."""
+        new_params = dict(params)
+        codes: Dict[str, PVQCode] = {}
+        stats: Dict[str, Dict] = {}
+        for i, spec in enumerate(self.cfg.layers):
+            pname = f"layer{i}"
+            if pname not in params or spec.n_over_k is None:
+                continue
+            p = params[pname]
+            wflat = p["kernel"].reshape(-1)
+            flat = jnp.concatenate([wflat, p["bias"]])
+            n = flat.shape[0]
+            k = k_for(n, spec.n_over_k)
+            code = pvq_encode(flat, k, scale_mode)
+            deq = code.dequantize()
+            new_params[pname] = {
+                "kernel": deq[: wflat.shape[0]].reshape(p["kernel"].shape),
+                "bias": deq[wflat.shape[0] :],
+            }
+            codes[pname] = code
+            stats[pname] = {"N": n, "K": k, "n_over_k": spec.n_over_k}
+        return new_params, codes, stats
+
+    def integer_forward(
+        self, params: Dict[str, Any], codes: Dict[str, PVQCode], x: jax.Array
+    ) -> Tuple[jax.Array, float]:
+        """Paper §V: integer-pulse-only forward; single output scale.
+
+        Valid for all-ReLU nets (homogeneous) — biases are rescaled into the
+        integer domain of each layer (bias pulses enter at the layer's own
+        rho but the running input scale divides them; exactness is asserted
+        in tests).  Returns (logits_integer_path, cumulative_scale).
+        """
+        run_scale = 1.0
+        for i, spec in enumerate(self.cfg.layers):
+            pname = f"layer{i}"
+            if spec.kind == "fc":
+                if x.ndim > 2:
+                    x = x.reshape(x.shape[0], -1)
+                if pname in codes:
+                    code = codes[pname]
+                    rho = float(np.asarray(code.scale))
+                    deq = code.pulses.astype(jnp.float32)
+                    wflat_n = params[pname]["kernel"].size
+                    w = deq[:wflat_n].reshape(params[pname]["kernel"].shape)
+                    b = deq[wflat_n:]
+                    # integer weights; bias divided by the incoming scale so
+                    # that rho can be factored out of the whole layer
+                    x = _act(spec.activation, x @ w + b / run_scale)
+                    run_scale = run_scale * rho
+                    if spec.activation == "bsign":
+                        run_scale = 1.0  # absorbed (eq. 16)
+                else:
+                    p = params[pname]
+                    x = _act(spec.activation, x @ p["kernel"] + p["bias"] / run_scale)
+            elif spec.kind == "conv":
+                if pname in codes:
+                    code = codes[pname]
+                    rho = float(np.asarray(code.scale))
+                    deq = code.pulses.astype(jnp.float32)
+                    wn = params[pname]["kernel"].size
+                    w = deq[:wn].reshape(params[pname]["kernel"].shape)
+                    b = deq[wn:]
+                    x = jax.lax.conv_general_dilated(
+                        x, w, (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+                    )
+                    x = _act(spec.activation, x + b / run_scale)
+                    run_scale = run_scale * rho
+                    if spec.activation == "bsign":
+                        run_scale = 1.0
+            elif spec.kind == "maxpool":
+                x = jax.lax.reduce_window(
+                    x, -jnp.inf, jax.lax.max,
+                    (1, spec.pool, spec.pool, 1), (1, spec.pool, spec.pool, 1), "VALID",
+                )
+            elif spec.kind == "flatten":
+                x = x.reshape(x.shape[0], -1)
+        return x, run_scale
+
+
+# ---------------------------------------------------------------------------
+# Training helpers (used by the paper-repro example + tests)
+# ---------------------------------------------------------------------------
+
+
+def xent_loss(net: SequentialNet, params, batch, dropout_key=None):
+    logits = net.apply(params, batch["x"], train=dropout_key is not None, dropout_key=dropout_key)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    tgt = jnp.take_along_axis(logits, batch["y"][:, None], axis=-1)[:, 0]
+    return jnp.mean(logz - tgt)
+
+
+def accuracy(net: SequentialNet, params, x, y) -> float:
+    logits = net.apply(params, x)
+    return float(jnp.mean((jnp.argmax(logits, -1) == y).astype(jnp.float32)))

@@ -1,0 +1,457 @@
+"""Block assembly and scan-over-layers stacks for every assigned family.
+
+A model is a list of *segments*; each segment is (repeats, pattern) where the
+pattern is a tuple of BlockSpecs.  Per-segment parameters are stacked along a
+leading ``repeats`` axis and executed with ``lax.scan`` (+ remat in training),
+keeping the lowered HLO compact regardless of depth — essential for the
+512-device dry-run compiles.
+
+Families:
+    dense / vlm      -> [(L, (attn+ffn,))]
+    moe (DeepSeek)   -> [(first_dense, (mla+dense0,)), (L-k, (mla+moe,))]
+    hybrid (Jamba)   -> [(L/p, (p-long super-block: attn at p/2, mamba else,
+                          MoE on odd slots))]
+    ssm (RWKV6)      -> [(L, (rwkv+cmix,))]
+    encdec (Whisper) -> encoder [(Le, (attn_nc+ffn,))] + decoder
+                        [(Ld, (attn+cross+ffn,))]
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.ad_checkpoint
+import jax.numpy as jnp
+
+from repro.parallel import constrain
+from repro.configs.base import ModelConfig
+
+from . import attention as attn_lib
+from . import layers as L
+from . import mamba as mamba_lib
+from . import mla as mla_lib
+from . import moe as moe_lib
+from . import rwkv as rwkv_lib
+from .attention import KVCache
+from .layers import Params
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockSpec:
+    mixer: str  # 'attn' | 'mla' | 'mamba' | 'rwkv'
+    ffn: str  # 'dense' | 'dense0' | 'moe' | 'cmix' | 'none'
+    causal: bool = True
+    cross: bool = False
+
+
+Segment = Tuple[int, Tuple[BlockSpec, ...]]
+
+
+def segment_plan(cfg: ModelConfig, role: str = "decoder") -> List[Segment]:
+    if role == "encoder":
+        return [(cfg.encoder_layers, (BlockSpec("attn", "dense", causal=False),))]
+    if cfg.rwkv is not None:
+        return [(cfg.n_layers, (BlockSpec("rwkv", "cmix"),))]
+    if cfg.hybrid_period:
+        p = cfg.hybrid_period
+        pat = tuple(
+            BlockSpec(
+                "attn" if i == p // 2 else "mamba",
+                "moe" if (cfg.moe is not None and i % cfg.moe_period == cfg.moe_period - 1) else "dense",
+            )
+            for i in range(p)
+        )
+        assert cfg.n_layers % p == 0, "hybrid layers must divide the super-block"
+        return [(cfg.n_layers // p, pat)]
+    mixer = "mla" if cfg.mla is not None else "attn"
+    if cfg.moe is not None:
+        segs: List[Segment] = []
+        if cfg.first_dense:
+            segs.append((cfg.first_dense, (BlockSpec(mixer, "dense0"),)))
+        segs.append((cfg.n_layers - cfg.first_dense, (BlockSpec(mixer, "moe"),)))
+        return segs
+    cross = cfg.encoder_layers > 0
+    return [(cfg.n_layers, (BlockSpec(mixer, "dense", cross=cross),))]
+
+
+# ---------------------------------------------------------------------------
+# Norm dispatch
+# ---------------------------------------------------------------------------
+
+
+def _init_norm(cfg: ModelConfig, dtype) -> Params:
+    return L.init_layernorm(cfg.d_model, dtype) if cfg.norm == "layernorm" else L.init_rmsnorm(cfg.d_model, dtype)
+
+
+def _norm(cfg: ModelConfig, p: Params, x: jax.Array) -> jax.Array:
+    return L.layernorm(p, x) if cfg.norm == "layernorm" else L.rmsnorm(p, x)
+
+
+# ---------------------------------------------------------------------------
+# Block init
+# ---------------------------------------------------------------------------
+
+
+def init_block(key, cfg: ModelConfig, spec: BlockSpec) -> Params:
+    dtype = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 8)
+    d = cfg.d_model
+    p: Params = {"ln_mix": _init_norm(cfg, dtype)}
+    if spec.mixer == "attn":
+        p["mixer"] = attn_lib.init_attention(
+            ks[0], d, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim,
+            bias=cfg.attn_bias, dtype=dtype,
+        )
+    elif spec.mixer == "mla":
+        p["mixer"] = mla_lib.init_mla(ks[0], d, cfg.n_heads, cfg.mla, dtype=dtype)
+    elif spec.mixer == "mamba":
+        p["mixer"] = mamba_lib.init_mamba(ks[0], d, cfg.ssm, dtype=dtype)
+    elif spec.mixer == "rwkv":
+        p["mixer"] = rwkv_lib.init_rwkv_time_mix(ks[0], d, cfg.rwkv, dtype=dtype)
+    else:
+        raise ValueError(spec.mixer)
+    if spec.cross:
+        p["ln_cross"] = _init_norm(cfg, dtype)
+        p["cross"] = attn_lib.init_attention(
+            ks[1], d, cfg.n_heads, cfg.n_heads, cfg.resolved_head_dim,
+            bias=cfg.attn_bias, dtype=dtype,
+        )
+    if spec.ffn != "cmix":
+        p["ln_ffn"] = _init_norm(cfg, dtype)
+    if spec.ffn == "dense":
+        p["ffn"] = L.init_ffn(ks[2], d, cfg.d_ff, cfg.ffn_activation, bias=cfg.attn_bias, dtype=dtype)
+    elif spec.ffn == "dense0":
+        p["ffn"] = L.init_ffn(ks[2], d, cfg.d_ff_dense or cfg.d_ff, cfg.ffn_activation, dtype=dtype)
+    elif spec.ffn == "moe":
+        p["ffn"] = moe_lib.init_moe(ks[2], d, cfg.moe, dtype=dtype)
+    elif spec.ffn == "cmix":
+        p["ln_ffn"] = _init_norm(cfg, dtype)
+        p["ffn"] = rwkv_lib.init_rwkv_channel_mix(ks[2], d, cfg.d_ff, dtype=dtype)
+    elif spec.ffn != "none":
+        raise ValueError(spec.ffn)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Block apply: forward (train/prefill)
+# ---------------------------------------------------------------------------
+
+
+def _head_constraint(t):
+    return constrain(t, "dp", None, "tp", None)
+
+
+def _ffn_hidden_constraint(t):
+    return constrain(t, "dp", None, "tp")
+
+
+def _expert_constraint(t):
+    return constrain(t, "dp", "tp", None, None)
+
+
+def block_forward(
+    cfg: ModelConfig,
+    spec: BlockSpec,
+    p: Params,
+    x: jax.Array,
+    *,
+    mode: str,  # 'train' | 'prefill'
+    enc_out: Optional[jax.Array] = None,
+    prefix_len: int = 0,
+    q_chunk: int = 512,
+) -> Tuple[jax.Array, jax.Array, Optional[Dict[str, Any]]]:
+    """Returns (x, aux_loss, cache_entry_or_None)."""
+    aux = jnp.zeros((), jnp.float32)
+    cache: Dict[str, Any] = {}
+    h = _norm(cfg, p["ln_mix"], x)
+
+    if spec.mixer == "attn":
+        y = attn_lib.attention_forward(
+            p["mixer"], h,
+            n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads, head_dim=cfg.resolved_head_dim,
+            rope_theta=cfg.rope_theta, causal=spec.causal, q_chunk=q_chunk,
+            head_constraint=_head_constraint, prefix_len=prefix_len,
+        )
+        if mode == "prefill":
+            cache["kv"] = attn_lib.attention_prefill_cache(
+                p["mixer"], h, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+                head_dim=cfg.resolved_head_dim, rope_theta=cfg.rope_theta,
+            )
+    elif spec.mixer == "mla":
+        y = mla_lib.mla_forward(p["mixer"], h, n_heads=cfg.n_heads, cfg=cfg.mla, q_chunk=q_chunk)
+        if mode == "prefill":
+            cache["mla"] = mla_lib.mla_prefill_cache(p["mixer"], h, cfg.mla)
+    elif spec.mixer == "mamba":
+        if mode == "prefill":
+            y, mc = mamba_lib.mamba_forward(p["mixer"], h, cfg.ssm, return_state=True)
+            cache["mamba"] = mc
+        else:
+            y = mamba_lib.mamba_forward(p["mixer"], h, cfg.ssm)
+    elif spec.mixer == "rwkv":
+        if mode == "prefill":
+            y, state = rwkv_lib.rwkv_time_mix(p["mixer"], h, cfg.rwkv, return_state=True)
+            cache["rwkv_state"] = state
+            cache["rwkv_shift_att"] = h[:, -1, :]
+        else:
+            y = rwkv_lib.rwkv_time_mix(p["mixer"], h, cfg.rwkv)
+    else:
+        raise ValueError(spec.mixer)
+    # name the (TP-psum'd) mixer output so the 'collectives' remat policy can
+    # save exactly these — recomputing them in the bwd pass repeats their
+    # all-reduces (measured +50% collective bytes on the 236B cell, §Perf).
+    # Under SP, constrain the psum'd output itself to the seq-sharded layout
+    # so the partitioner lowers dot+psum as a reduce-scatter instead of
+    # all-reduce-then-slice (+all-gather) — measured 1.7TB of redundant
+    # gathers otherwise.
+    y = constrain(y, "dp", "sp", None)
+    y = jax.ad_checkpoint.checkpoint_name(y, "mixer_out")
+    x = x + y
+    x = constrain(x, "dp", "sp", None)
+
+    if spec.cross:
+        h = _norm(cfg, p["ln_cross"], x)
+        enc_kv = attn_lib.cross_kv(p["cross"], enc_out, n_heads=cfg.n_heads, head_dim=cfg.resolved_head_dim)
+        y = attn_lib.cross_attention_forward(p["cross"], h, enc_kv, n_heads=cfg.n_heads, head_dim=cfg.resolved_head_dim)
+        x = x + y
+        if mode == "prefill":
+            cache["cross"] = enc_kv
+
+    if spec.ffn != "none":
+        h = _norm(cfg, p["ln_ffn"], x)
+        if spec.ffn in ("dense", "dense0"):
+            y = L.ffn(p["ffn"], h, cfg.ffn_activation, hidden_constraint=_ffn_hidden_constraint)
+        elif spec.ffn == "moe":
+            y, aux_moe = moe_lib.moe_forward(p["ffn"], h, cfg.moe, expert_constraint=_expert_constraint)
+            aux = aux + aux_moe
+        elif spec.ffn == "cmix":
+            y = rwkv_lib.rwkv_channel_mix(p["ffn"], h)
+            if mode == "prefill":
+                cache["rwkv_shift_ffn"] = h[:, -1, :]
+        y = constrain(y, "dp", "sp", None)
+        y = jax.ad_checkpoint.checkpoint_name(y, "ffn_out")
+        x = x + y
+        x = constrain(x, "dp", "sp", None)
+
+    return x, aux, (cache if mode == "prefill" else None)
+
+
+# ---------------------------------------------------------------------------
+# Block apply: single-token decode
+# ---------------------------------------------------------------------------
+
+
+def block_decode(
+    cfg: ModelConfig,
+    spec: BlockSpec,
+    p: Params,
+    x: jax.Array,  # (b, 1, d)
+    cache: Dict[str, Any],
+    pos: jax.Array,
+) -> Tuple[jax.Array, Dict[str, Any]]:
+    new_cache = dict(cache)
+    h = _norm(cfg, p["ln_mix"], x)
+
+    if spec.mixer == "attn":
+        y, kv = attn_lib.attention_decode(
+            p["mixer"], h, cache["kv"], pos,
+            n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+            head_dim=cfg.resolved_head_dim, rope_theta=cfg.rope_theta,
+        )
+        new_cache["kv"] = kv
+    elif spec.mixer == "mla":
+        y, mc = mla_lib.mla_decode(p["mixer"], h, cache["mla"], pos, n_heads=cfg.n_heads, cfg=cfg.mla)
+        new_cache["mla"] = mc
+    elif spec.mixer == "mamba":
+        y, mc = mamba_lib.mamba_decode(p["mixer"], h, cache["mamba"], cfg.ssm)
+        new_cache["mamba"] = mc
+    elif spec.mixer == "rwkv":
+        y, state = rwkv_lib.rwkv_time_mix(
+            p["mixer"], h, cfg.rwkv,
+            x_prev=cache["rwkv_shift_att"].astype(h.dtype), state=cache["rwkv_state"],
+            return_state=True,
+        )
+        new_cache["rwkv_state"] = state
+        new_cache["rwkv_shift_att"] = h[:, -1, :]
+    else:
+        raise ValueError(spec.mixer)
+    x = x + y
+
+    if spec.cross:
+        h = _norm(cfg, p["ln_cross"], x)
+        y = attn_lib.cross_attention_forward(
+            p["cross"], h, cache["cross"], n_heads=cfg.n_heads, head_dim=cfg.resolved_head_dim
+        )
+        x = x + y
+
+    if spec.ffn != "none":
+        h = _norm(cfg, p["ln_ffn"], x)
+        if spec.ffn in ("dense", "dense0"):
+            y = L.ffn(p["ffn"], h, cfg.ffn_activation)
+        elif spec.ffn == "moe":
+            y, _ = moe_lib.moe_forward(p["ffn"], h, cfg.moe)
+        elif spec.ffn == "cmix":
+            y = rwkv_lib.rwkv_channel_mix(p["ffn"], h, x_prev=cache["rwkv_shift_ffn"].astype(h.dtype))
+            new_cache["rwkv_shift_ffn"] = h[:, -1, :]
+        x = x + y
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Cache zero-init (decode entry point without a prefill)
+# ---------------------------------------------------------------------------
+
+
+def init_block_cache(
+    cfg: ModelConfig, spec: BlockSpec, batch: int, cache_len: int, enc_len: int = 0
+) -> Dict[str, Any]:
+    dtype = jnp.dtype(cfg.compute_dtype)
+    c: Dict[str, Any] = {}
+    if spec.mixer == "attn":
+        c["kv"] = attn_lib.init_kv_cache(batch, cache_len, cfg.n_kv_heads, cfg.resolved_head_dim, dtype)
+    elif spec.mixer == "mla":
+        c["mla"] = mla_lib.MLACache(
+            c_kv=jnp.zeros((batch, cache_len, cfg.mla.kv_lora_rank), dtype),
+            k_rope=jnp.zeros((batch, cache_len, cfg.mla.rope_head_dim), dtype),
+        )
+    elif spec.mixer == "mamba":
+        c["mamba"] = mamba_lib.init_mamba_cache(batch, cfg.d_model, cfg.ssm, dtype)
+    elif spec.mixer == "rwkv":
+        h = cfg.d_model // cfg.rwkv.head_size
+        c["rwkv_state"] = jnp.zeros((batch, h, cfg.rwkv.head_size, cfg.rwkv.head_size), jnp.float32)
+        c["rwkv_shift_att"] = jnp.zeros((batch, cfg.d_model), dtype)
+    if spec.cross:
+        c["cross"] = attn_lib.init_kv_cache(batch, enc_len, cfg.n_heads, cfg.resolved_head_dim, dtype)
+    if spec.ffn == "cmix":
+        c["rwkv_shift_ffn"] = jnp.zeros((batch, cfg.d_model), dtype)
+    return c
+
+
+# ---------------------------------------------------------------------------
+# Segment runners (scan over stacked repeats)
+# ---------------------------------------------------------------------------
+
+
+def init_segment(key, cfg: ModelConfig, seg: Segment) -> Params:
+    repeats, pattern = seg
+
+    def init_one(k):
+        kb = jax.random.split(k, len(pattern))
+        return {f"b{i}": init_block(kb[i], cfg, spec) for i, spec in enumerate(pattern)}
+
+    return jax.vmap(init_one)(jax.random.split(key, repeats))
+
+
+def run_segment(
+    cfg: ModelConfig,
+    seg: Segment,
+    seg_params: Params,
+    x: jax.Array,
+    *,
+    mode: str,
+    enc_out: Optional[jax.Array] = None,
+    prefix_len: int = 0,
+    q_chunk: int = 512,
+    remat: bool = True,
+):
+    repeats, pattern = seg
+
+    def body(carry, p_r):
+        x, aux = carry
+        caches = {}
+        for i, spec in enumerate(pattern):
+            x, aux_i, c = block_forward(
+                cfg, spec, p_r[f"b{i}"], x, mode=mode,
+                enc_out=enc_out, prefix_len=prefix_len, q_chunk=q_chunk,
+            )
+            aux = aux + aux_i
+            if c is not None:
+                caches[f"b{i}"] = c
+        return (x, aux), (caches if mode == "prefill" else None)
+
+    if mode == "train" and remat:
+        from repro.parallel import current_policy
+
+        rp = current_policy().remat
+        if rp == "dots":
+            body = jax.checkpoint(
+                body, prevent_cse=False,
+                policy=jax.checkpoint_policies.dots_saveable,
+            )
+        elif rp == "collectives":
+            # save exactly the TP-psum'd block outputs (cheap (b,s,d) bf16);
+            # attention scores / ffn hiddens still rematerialize
+            body = jax.checkpoint(
+                body, prevent_cse=False,
+                policy=jax.checkpoint_policies.save_only_these_names(
+                    "mixer_out", "ffn_out"
+                ),
+            )
+        else:
+            body = jax.checkpoint(body, prevent_cse=False)
+    carry0 = (x, jnp.zeros((), jnp.float32))
+    if cfg.unroll_layers:
+        carry = carry0
+        cache_list = []
+        for r in range(repeats):
+            p_r = jax.tree.map(lambda t: t[r], seg_params)
+            carry, c = body(carry, p_r)
+            cache_list.append(c)
+        (x, aux) = carry
+        caches = (
+            jax.tree.map(lambda *xs: jnp.stack(xs), *cache_list)
+            if mode == "prefill"
+            else None
+        )
+        return x, aux, caches
+    (x, aux), caches = jax.lax.scan(body, carry0, seg_params)
+    return x, aux, caches
+
+
+def decode_segment(
+    cfg: ModelConfig,
+    seg: Segment,
+    seg_params: Params,
+    seg_cache: Params,
+    x: jax.Array,
+    pos: jax.Array,
+):
+    repeats, pattern = seg
+
+    def body(x, pc):
+        p_r, c_r = pc
+        new_c = {}
+        for i, spec in enumerate(pattern):
+            x, c_i = block_decode(cfg, spec, p_r[f"b{i}"], x, c_r[f"b{i}"], pos)
+            new_c[f"b{i}"] = c_i
+        return x, new_c
+
+    if cfg.unroll_layers:
+        cache_list = []
+        for r in range(repeats):
+            p_r = jax.tree.map(lambda t: t[r], seg_params)
+            c_r = jax.tree.map(lambda t: t[r], seg_cache)
+            x, c = body(x, (p_r, c_r))
+            cache_list.append(c)
+        new_cache = jax.tree.map(lambda *xs: jnp.stack(xs), *cache_list)
+        return x, new_cache
+    x, new_cache = jax.lax.scan(body, x, (seg_params, seg_cache))
+    return x, new_cache
+
+
+def init_plan_cache(
+    cfg: ModelConfig, plan: List[Segment], batch: int, cache_len: int, enc_len: int = 0
+):
+    out = {}
+    for si, (repeats, pattern) in enumerate(plan):
+        entry = {
+            f"b{i}": init_block_cache(cfg, spec, batch, cache_len, enc_len)
+            for i, spec in enumerate(pattern)
+        }
+        out[f"seg{si}"] = jax.tree.map(
+            lambda leaf: jnp.broadcast_to(leaf[None], (repeats,) + leaf.shape), entry
+        )
+    return out

@@ -1,0 +1,3 @@
+from .adamw import AdamW, AdamWState, cosine_schedule, global_norm
+
+__all__ = ["AdamW", "AdamWState", "cosine_schedule", "global_norm"]

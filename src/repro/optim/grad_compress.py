@@ -1,0 +1,117 @@
+"""PVQ gradient compression for cross-pod data parallelism (beyond-paper,
+directly built from the paper's machinery).
+
+Motivation: on a multi-pod mesh the gradient all-reduce over the ``pod`` axis
+crosses the slow inter-pod links (DCN/ICI-lite).  Gradients are near-Laplacian
+— exactly PVQ's sweet spot — so each pod PVQ-encodes its local gradient in
+groups of 256 (int8 pulses + one f32 rho per group ≈ 1.12 bytes/value vs 4),
+all-gathers the *codes* across pods, decodes and averages.  Error feedback
+(Seide et al.; Karimireddy et al. EF-SGD) keeps the quantization residual in
+a local accumulator so compression error does not bias convergence.
+
+Two entry points:
+  * ``compress_decompress(g, cfg)``      — the quantization channel (pure);
+  * ``make_ef_compressor(cfg)``          — stateful error-feedback transform
+        (grads, ef_state) -> (decoded grads, new ef_state)
+  * ``cross_pod_mean(grads, axis='pod')`` — shard_map-ready compressed
+        all-reduce: encode local, all_gather codes over the pod axis, decode
+        + mean (falls back to identity when the axis is absent).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.pvq import pvq_encode_grouped, pvq_decode_grouped
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionConfig:
+    group: int = 256
+    n_over_k: float = 2.0  # K = group/2 pulses per group
+    scale_mode: str = "ls"
+    min_size: int = 1024  # leaves smaller than this pass through uncompressed
+
+    @property
+    def k(self) -> int:
+        return max(int(round(self.group / self.n_over_k)), 1)
+
+    def bytes_per_value(self) -> float:
+        # int8 pulse + f32 scale amortized over the group
+        return 1.0 + 4.0 / self.group
+
+
+def compress_decompress(g: jax.Array, cfg: CompressionConfig) -> jax.Array:
+    """Quantization channel Q(g): PVQ encode+decode (per-leaf, grouped)."""
+    flat = g.reshape(-1).astype(jnp.float32)
+    if flat.size < cfg.min_size:
+        return g
+    code = pvq_encode_grouped(flat, cfg.group, cfg.k, cfg.scale_mode)
+    deq = pvq_decode_grouped(code, flat.shape[0])
+    return deq.reshape(g.shape).astype(g.dtype)
+
+
+def make_ef_compressor(cfg: CompressionConfig):
+    """Error-feedback wrapper:  decoded = Q(g + e);  e' = g + e - decoded."""
+
+    def init(grads: Any) -> Any:
+        return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+    def apply(grads: Any, ef: Any) -> Tuple[Any, Any]:
+        def one(g, e):
+            corrected = g.astype(jnp.float32) + e
+            q = compress_decompress(corrected, cfg)
+            return q.astype(g.dtype), corrected - q.astype(jnp.float32)
+
+        out = jax.tree.map(one, grads, ef)
+        decoded = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+        new_ef = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+        return decoded, new_ef
+
+    return init, apply
+
+
+def cross_pod_mean(grads: Any, cfg: CompressionConfig, axis: str = "pod") -> Any:
+    """Compressed mean over a named mesh axis (call inside shard_map).
+
+    Each participant encodes its local gradient; int8 pulses + f32 scales are
+    all-gathered (≈1.12 B/value on the wire instead of 4); everyone decodes
+    and averages.  Exact-mean property for K -> inf is covered by tests.
+    """
+
+    def one(g):
+        flat = g.reshape(-1).astype(jnp.float32)
+        if flat.size < cfg.min_size:
+            return jax.lax.pmean(g, axis)
+        code = pvq_encode_grouped(flat, cfg.group, cfg.k, cfg.scale_mode)
+        pulses = code.pulses.astype(jnp.int8)  # (G, group)
+        scales = code.scale.astype(jnp.float32)  # (G,)
+        all_pulses = jax.lax.all_gather(pulses, axis)  # (P, G, group)
+        all_scales = jax.lax.all_gather(scales, axis)  # (P, G)
+        deq = all_pulses.astype(jnp.float32) * all_scales[..., None]
+        mean = jnp.mean(deq, axis=0).reshape(-1)[: flat.size]
+        return mean.reshape(g.shape).astype(g.dtype)
+
+    return jax.tree.map(one, grads)
+
+
+def wire_bytes(grads: Any, cfg: CompressionConfig) -> Tuple[int, int]:
+    """(compressed, uncompressed f32) bytes per all-reduce participant."""
+    comp = 0
+    raw = 0
+    for g in jax.tree.leaves(grads):
+        n = int(g.size)
+        raw += 4 * n
+        if n < cfg.min_size:
+            comp += 4 * n
+        else:
+            import math
+
+            groups = math.ceil(n / cfg.group)
+            comp += groups * cfg.group + 4 * groups
+    return comp, raw

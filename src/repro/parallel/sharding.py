@@ -1,0 +1,310 @@
+"""Sharding rules: logical activation/parameter axes -> NamedSharding specs.
+
+Mesh axes (see launch/mesh.py):
+    pod    — inter-pod axis (DP by default; pipeline stage axis in PP mode)
+    data   — intra-pod data parallel + FSDP (params/optimizer sharded here)
+    model  — tensor parallel (heads / ffn hidden / experts) + optional SP
+
+Activation constraints are expressed through :func:`constrain` with symbolic
+axes ('dp', 'tp', 'cp', None) resolved against the *active* mesh, so model
+code is mesh-agnostic and runs unchanged on CPU tests (constraints no-op when
+no mesh is active).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import re
+import threading
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+# ---------------------------------------------------------------------------
+# Active mesh + policy
+# ---------------------------------------------------------------------------
+
+
+def active_mesh() -> Optional[Mesh]:
+    """The mesh installed by ``with mesh:`` (None outside)."""
+    try:
+        from jax._src import mesh as mesh_lib
+
+        m = mesh_lib.thread_resources.env.physical_mesh
+        return None if m.empty else m
+    except Exception:
+        return None
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingPolicy:
+    """How activations/params are sharded for the current step function.
+
+    The `opt_*` fields are the §Perf hillclimb levers; defaults reproduce the
+    recorded baseline.  See EXPERIMENTS.md §Perf for measured effects.
+    """
+
+    seq_shard: bool = False  # Megatron-style sequence parallelism on residuals
+    context_parallel: bool = False  # shard decode KV cache along sequence (data axis)
+    fsdp_pod: bool = False  # extend FSDP over the pod axis too (ZeRO across pods)
+    # --- opt levers ---
+    serve_params: bool = False  # serving layout: no FSDP on params (TP/EP only;
+    #                              expert ffn dim sharded over data instead)
+    cache_seq_tp: bool = False  # decode KV cache sequence axis sharded over model
+    moe_light_combine: bool = False  # slot-gate combine (no f32 (g,s,e,c) tensor)
+    remat: str = "full"  # 'full' | 'dots' (save matmul outputs: no recomputed
+    #                       TP psums in the backward pass, more live memory)
+
+
+_local = threading.local()
+
+
+def current_policy() -> ShardingPolicy:
+    return getattr(_local, "policy", ShardingPolicy())
+
+
+@contextlib.contextmanager
+def sharding_policy(policy: ShardingPolicy):
+    old = current_policy()
+    _local.policy = policy
+    try:
+        yield
+    finally:
+        _local.policy = old
+
+
+# ---------------------------------------------------------------------------
+# Symbolic axis resolution
+# ---------------------------------------------------------------------------
+
+
+def dp_axes(mesh: Optional[Mesh] = None):
+    mesh = mesh or active_mesh()
+    if mesh is None:
+        return None
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    return axes or None
+
+
+def tp_axis(mesh: Optional[Mesh] = None):
+    mesh = mesh or active_mesh()
+    if mesh is None:
+        return None
+    return "model" if "model" in mesh.axis_names else None
+
+
+def _resolve(sym, mesh: Mesh, policy: ShardingPolicy):
+    if sym is None:
+        return None
+    if sym == "dp":
+        return dp_axes(mesh)
+    if sym == "tp":
+        return tp_axis(mesh)
+    if sym == "sp":  # sequence-parallel position: only when policy enables it
+        return tp_axis(mesh) if policy.seq_shard else None
+    if sym == "cp":  # context-parallel (decode KV seq axis)
+        return "data" if (policy.context_parallel and "data" in mesh.axis_names) else None
+    if sym == "seq":  # decode cache sequence axis: cp (data) and/or tp (model)
+        axes = []
+        if policy.context_parallel and "data" in mesh.axis_names:
+            axes.append("data")
+        if policy.cache_seq_tp and "model" in mesh.axis_names:
+            axes.append("model")
+        return tuple(axes) if axes else None
+    if sym in ("pod", "data", "model"):
+        return sym if sym in mesh.axis_names else None
+    raise ValueError(f"unknown symbolic axis {sym!r}")
+
+
+def constrain(x: jax.Array, *syms) -> jax.Array:
+    """with_sharding_constraint with symbolic axes; no-op without a mesh.
+
+    Mesh axes claimed by an earlier dim are dropped from later dims (e.g.
+    batch='dp' uses 'data', so a 'seq'=('data','model') KV axis degrades to
+    ('model',) — the context-parallel long-decode case)."""
+    mesh = active_mesh()
+    if mesh is None:
+        return x
+    policy = current_policy()
+    used: set = set()
+    resolved = []
+    for s in syms:
+        axes = _resolve(s, mesh, policy)
+        if axes is None:
+            resolved.append(None)
+            continue
+        ax_tuple = axes if isinstance(axes, tuple) else (axes,)
+        ax_tuple = tuple(a for a in ax_tuple if a not in used)
+        used.update(ax_tuple)
+        resolved.append(ax_tuple if ax_tuple else None)
+    return jax.lax.with_sharding_constraint(x, P(*resolved))
+
+
+# ---------------------------------------------------------------------------
+# Parameter sharding rules
+# ---------------------------------------------------------------------------
+
+# (path_regex, spec_by_rank) — first match wins. Specs are written for the
+# UNSTACKED tensor; scan-stacked params (path contains 'blocks/') get a
+# leading None prepended automatically when rank exceeds the rule's.
+_PARAM_RULES: Tuple[Tuple[str, Tuple[Any, ...]], ...] = (
+    # embeddings: vocab on model (vocab-parallel logits), d on data (FSDP)
+    (r"embedding$", ("tp", "fsdp")),
+    (r"pos_embedding$", (None, "fsdp")),
+    # MoE stacked experts: E on model (EP), d_model on data (FSDP)
+    (r"wi_(up|gate)_experts$", ("tp", "fsdp", None)),
+    (r"wo_experts$", ("tp", None, "fsdp")),
+    (r"router/kernel$", (None, None)),
+    # row-parallel outputs (contract dim is model-sharded)
+    (r"(wo|out|out_proj)/kernel$", ("tp", "fsdp")),
+    # column-parallel inputs
+    (r"(wq|wk|wv|wg|wr|wi_gate|wi_up|wq_a|wq_b|wkv_a|wk_rope|wk_b|wv_b|in_proj|x_proj|dt_proj|wi)/kernel$", ("fsdp", "tp")),
+    # generic dense kernels: FSDP in, TP out
+    (r"kernel$", ("fsdp", "tp")),
+    # mamba recurrence params: d_inner is model-sharded
+    (r"a_log$", ("tp", None)),
+    (r"d_skip$", ("tp",)),
+    (r"conv_kernel$", (None, "tp")),
+    (r"conv_bias$", ("tp",)),
+    # rwkv head-structured params
+    (r"time_faaaa$", ("tp", None)),
+    # biases / norm scales / small vectors: replicated
+    (r"(bias|scale|base|w1|w2)$", None),
+)
+
+
+def _fsdp_axes(mesh: Mesh, policy: ShardingPolicy):
+    if policy.serve_params:
+        return None  # serving: params replicated over data (TP/EP shards only)
+    axes = []
+    if policy.fsdp_pod and "pod" in mesh.axis_names:
+        axes.append("pod")
+    if "data" in mesh.axis_names:
+        axes.append("data")
+    return tuple(axes) if axes else None
+
+
+# Serving layout for MoE expert weights: EP over model, and the expert FFN
+# hidden dim sharded over data (keeps the 472GB of DeepSeek-236B experts at
+# ~1.8GB/chip without per-step weight all-gathers; the down-proj contraction
+# psums a tokens-sized tensor instead — tiny at decode batch sizes).
+_SERVE_EXPERT_RULES: Tuple[Tuple[str, Tuple[Any, ...]], ...] = (
+    (r"wi_(up|gate)_experts$", ("tp", None, "data")),
+    (r"wo_experts$", ("tp", "data", None)),
+)
+
+
+def param_pspec(path: str, shape: Tuple[int, ...], mesh: Mesh, policy: ShardingPolicy) -> P:
+    """PartitionSpec for one parameter leaf."""
+    rules = _PARAM_RULES
+    if policy.serve_params:
+        rules = _SERVE_EXPERT_RULES + _PARAM_RULES
+    for pat, spec in rules:
+        if re.search(pat, path):
+            if spec is None:
+                return P()
+            resolved = []
+            for s in spec:
+                if s == "fsdp":
+                    resolved.append(_fsdp_axes(mesh, policy))
+                elif s == "tp":
+                    resolved.append(tp_axis(mesh))
+                else:
+                    resolved.append(s)
+            # scan-stacked tensors carry extra leading axes
+            extra = len(shape) - len(spec)
+            if extra > 0:
+                resolved = [None] * extra + resolved
+            elif extra < 0:
+                return P()  # rank mismatch: fall back to replicated
+            # never shard an axis that isn't divisible by its mesh extent
+            final = []
+            for dim, axes in zip(shape, resolved):
+                if axes is None:
+                    final.append(None)
+                    continue
+                ax_tuple = axes if isinstance(axes, tuple) else (axes,)
+                extent = int(np.prod([mesh.shape[a] for a in ax_tuple]))
+                final.append(axes if dim % extent == 0 else None)
+            return P(*final)
+    return P()
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def param_shardings(params_shape: Any, mesh: Mesh, policy: ShardingPolicy = ShardingPolicy()):
+    """NamedSharding tree for a params pytree (of arrays or ShapeDtypeStructs)."""
+
+    def one(path, leaf):
+        spec = param_pspec(_path_str(path), tuple(leaf.shape), mesh, policy)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+def batch_pspec(mesh: Mesh, *, context_parallel: bool = False) -> P:
+    """Spec for (batch, seq, ...) inputs."""
+    if context_parallel:
+        return P(None, "data")
+    return P(dp_axes(mesh))
+
+
+# ---------------------------------------------------------------------------
+# Decode-cache sharding rules
+# ---------------------------------------------------------------------------
+
+# Leaf paths look like  seg0/b3/kv/k  with shapes (repeats, batch, seq, ...).
+# The 'seq' symbol shards the cache sequence axis over data (context
+# parallel) and/or model (cache_seq_tp) per the active policy; KV heads are
+# deliberately NOT model-sharded (n_kv < tp extent for every assigned GQA
+# arch — head-sharding would force per-step cache all-gathers).
+_CACHE_RULES: Tuple[Tuple[str, Tuple[Any, ...]], ...] = (
+    (r"kv/(k|v)$", (None, "dp", "seq", None, None)),
+    (r"cross/(k|v)$", (None, "dp", "seq", None, None)),
+    (r"mla/c_kv$", (None, "dp", "seq", None)),
+    (r"mla/k_rope$", (None, "dp", "seq", None)),
+    (r"mamba/conv$", (None, "dp", None, "tp")),
+    (r"mamba/ssm$", (None, "dp", "tp", None)),
+    (r"rwkv_state$", (None, "dp", "tp", None, None)),
+    (r"rwkv_shift_(att|ffn)$", (None, "dp", None)),
+)
+
+
+def cache_pspec(path: str, shape: Tuple[int, ...], mesh: Mesh, policy: ShardingPolicy) -> P:
+    for pat, spec in _CACHE_RULES:
+        if re.search(pat, path):
+            resolved = [_resolve(s, mesh, policy) for s in spec]
+            if len(resolved) != len(shape):
+                return P()
+            final = []
+            for dim, axes in zip(shape, resolved):
+                if axes is None:
+                    final.append(None)
+                    continue
+                ax_tuple = axes if isinstance(axes, tuple) else (axes,)
+                extent = int(np.prod([mesh.shape[a] for a in ax_tuple]))
+                final.append(axes if dim % extent == 0 else None)
+            return P(*final)
+    return P()
+
+
+def cache_shardings(cache_shape: Any, mesh: Mesh, policy: ShardingPolicy):
+    def one(path, leaf):
+        spec = cache_pspec(_path_str(path), tuple(leaf.shape), mesh, policy)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(one, cache_shape)

@@ -1,0 +1,65 @@
+"""Dry-run machinery integration: the production-mesh lower+compile path runs
+under pytest via a subprocess (device count must be set before jax init)."""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(prog: str, timeout=560):
+    env = dict(os.environ, PYTHONPATH="src")
+    return subprocess.run(
+        [sys.executable, "-c", prog], capture_output=True, text=True,
+        env=env, cwd=REPO, timeout=timeout,
+    )
+
+
+@pytest.mark.slow
+def test_dryrun_cell_single_pod(tmp_path):
+    res = _run(
+        textwrap.dedent(
+            f"""
+            import sys
+            sys.argv = ["dryrun", "--arch", "smollm-360m", "--shape", "train_4k",
+                        "--mesh", "single", "--out", {str(tmp_path)!r}]
+            from repro.launch.dryrun import main
+            raise SystemExit(main())
+            """
+        )
+    )
+    assert res.returncode == 0, res.stderr[-2000:]
+    rec = json.loads((tmp_path / "smollm-360m__train_4k__single.json").read_text())
+    assert rec["status"] == "ok"
+    assert rec["chips"] == 256
+    roof = rec["roofline"]
+    assert roof["flops"] > 0 and roof["hbm_bytes"] > 0
+    assert roof["bottleneck"] in ("compute", "memory", "collective")
+    assert 0 < roof["useful_ratio"] < 1.5  # physical after depth correction
+
+
+@pytest.mark.slow
+def test_dryrun_decode_multi_pod(tmp_path):
+    res = _run(
+        textwrap.dedent(
+            f"""
+            import sys
+            sys.argv = ["dryrun", "--arch", "gemma-2b", "--shape", "decode_32k",
+                        "--mesh", "multi", "--out", {str(tmp_path)!r}, "--opt-level", "1"]
+            from repro.launch.dryrun import main
+            raise SystemExit(main())
+            """
+        )
+    )
+    assert res.returncode == 0, res.stderr[-2000:]
+    rec = json.loads((tmp_path / "gemma-2b__decode_32k__multi.json").read_text())
+    assert rec["status"] == "ok"
+    assert rec["chips"] == 512
+    assert "analytic_decode" in rec
+    assert rec["analytic_decode"]["pvq_weight_speedup"] > 1.0

@@ -1,0 +1,178 @@
+"""Tests for Fischer enumeration + entropy codes (paper §II, §VI)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import index_bits, index_to_vector, num_points, vector_to_index
+from repro.core.codes import (
+    compression_report,
+    golomb_decode,
+    golomb_encode,
+    golomb_length,
+    huffman_escape_bits,
+    pulse_histogram,
+    rle_decode,
+    rle_encode,
+)
+from repro.core.enumeration import enumerate_all, pack_indices, unpack_indices
+from repro.core.packing import pack_nibbles, packed_nbytes, unpack_nibbles
+from repro.core.pvq import pvq_encode_np
+
+
+def test_paper_np_8_4_is_2816():
+    """Paper §II: N_p(8,4) = 2816, under 12 bits."""
+    assert num_points(8, 4) == 2816
+    assert index_bits(8, 4) == 12  # 2^11 = 2048 < 2816 <= 4096 = 2^12
+
+
+def test_num_points_recurrence():
+    for n in range(1, 10):
+        for k in range(1, 10):
+            assert num_points(n, k) == (
+                num_points(n - 1, k) + num_points(n - 1, k - 1) + num_points(n, k - 1)
+            )
+
+
+def test_num_points_base_cases():
+    assert num_points(0, 0) == 1
+    assert num_points(0, 3) == 0
+    assert num_points(5, 0) == 1
+    assert num_points(1, 7) == 2  # +7 and -7
+    assert num_points(2, 1) == 4
+
+
+@pytest.mark.parametrize("n,k", [(3, 2), (4, 3), (2, 5), (5, 2)])
+def test_enumeration_bijection(n, k):
+    seen = set()
+    for i, v in enumerate(enumerate_all(n, k)):
+        assert sum(abs(x) for x in v) == k
+        assert vector_to_index(v) == i
+        seen.add(tuple(v))
+    assert len(seen) == num_points(n, k)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(min_value=2, max_value=12),
+    k=st.integers(min_value=1, max_value=12),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_prop_roundtrip_random_points(n, k, seed):
+    rng = np.random.default_rng(seed)
+    w = rng.laplace(size=n)
+    if np.abs(w).sum() == 0:
+        return
+    y, _ = pvq_encode_np(w, k)
+    idx = vector_to_index(y.tolist())
+    assert 0 <= idx < num_points(n, k)
+    assert index_to_vector(idx, n, k) == y.tolist()
+
+
+def test_pack_unpack_indices():
+    rng = np.random.default_rng(0)
+    rows = []
+    for s in range(6):
+        y, _ = pvq_encode_np(rng.laplace(size=16), 8)
+        rows.append(y)
+    rows = np.stack(rows)
+    blob = pack_indices(rows)
+    back = unpack_indices(blob, g=6, n=16, k=8)
+    np.testing.assert_array_equal(rows, back)
+    assert len(blob) * 8 <= 6 * index_bits(16, 8) + 8
+
+
+# ---------------------------------------------------------------------------
+# Golomb / RLE bit-exact codecs
+# ---------------------------------------------------------------------------
+
+
+def test_golomb_lengths_match_paper_ladder():
+    """Paper §VII: 1 bit for 0, 3 bits for +-1, 5 bits for +-2..3, 7 for +-4..7."""
+    assert golomb_length(np.array([0])).tolist() == [1]
+    assert golomb_length(np.array([1, -1])).tolist() == [3, 3]
+    assert golomb_length(np.array([2, -2, 3, -3])).tolist() == [5, 5, 5, 5]
+    assert golomb_length(np.array([4, -4, 7, -7])).tolist() == [7, 7, 7, 7]
+
+
+def test_paper_fc0_bits_per_weight_arithmetic():
+    """Reproduce the paper's ~1.4 bits/weight arithmetic for net A FC0."""
+    fracs = {0: 0.8119, 1: 0.1771, 2: 0.011, 4: 0.000052}
+    avg = sum(f * golomb_length(np.array([v]))[0] for v, f in fracs.items())
+    assert abs(avg - 1.4) < 0.05
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1), n=st.integers(min_value=1, max_value=200))
+def test_prop_golomb_roundtrip(seed, n):
+    rng = np.random.default_rng(seed)
+    vals = rng.integers(-50, 50, size=n)
+    blob, nbits = golomb_encode(vals)
+    back = golomb_decode(blob, nbits, n)
+    np.testing.assert_array_equal(vals, back)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1), n=st.integers(min_value=1, max_value=300))
+def test_prop_rle_roundtrip(seed, n):
+    rng = np.random.default_rng(seed)
+    # sparse vector typical of N/K=5 PVQ output
+    vals = rng.integers(-3, 4, size=n) * (rng.random(n) < 0.2)
+    blob, nbits, n_pairs = rle_encode(vals)
+    back = rle_decode(blob, nbits, n_pairs, n)
+    np.testing.assert_array_equal(vals, back)
+
+
+def test_golomb_bits_at_paper_ratio():
+    rng = np.random.default_rng(1)
+    y, _ = pvq_encode_np(rng.laplace(size=4000), 800)  # N/K = 5
+    rep = compression_report(y)
+    assert rep["golomb_bits_per_weight"] < 2.0  # paper: ~1.4 at N/K=5
+    assert (y == 0).mean() >= 0.8  # paper: >= 4/5 zeros guaranteed at N/K=5
+
+
+def test_rle_beats_golomb_on_very_sparse():
+    """RLE wins once zero runs get long (paper: 'long runs of zeros')."""
+    rng = np.random.default_rng(1)
+    y, _ = pvq_encode_np(rng.laplace(size=8000), 400)  # N/K = 20, ~95% zeros
+    rep = compression_report(y)
+    assert rep["rle_bits_per_weight"] <= rep["golomb_bits_per_weight"]
+    assert rep["rle_bits_per_weight"] < 1.0  # sub-bit per weight
+
+
+def test_pulse_histogram_buckets():
+    h = pulse_histogram(np.array([0, 0, 1, -1, 2, -3, 4, -7, 8]))
+    assert h["0"] == 2 and h["+-1"] == 2 and h["+-2..3"] == 2
+    assert h["+-4..7"] == 2 and h["others"] == 1
+
+
+def test_huffman_escape_reasonable():
+    rng = np.random.default_rng(2)
+    y, _ = pvq_encode_np(rng.laplace(size=2000), 400)
+    bits = huffman_escape_bits(y)
+    assert 0.5 < bits < 3.0
+
+
+# ---------------------------------------------------------------------------
+# nibble packing
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_prop_nibble_roundtrip(seed):
+    rng = np.random.default_rng(seed)
+    p = rng.integers(-7, 8, size=(3, 17))
+    packed, shape = pack_nibbles(p)
+    np.testing.assert_array_equal(unpack_nibbles(packed, shape), p)
+
+
+def test_packed_nbytes():
+    import jax.numpy as jnp
+
+    from repro.core import pvq_encode_grouped
+
+    w = jnp.asarray(np.random.default_rng(3).laplace(size=1024).astype(np.float32))
+    code = pvq_encode_grouped(w, group=256, k=64)
+    assert packed_nbytes(code, "nibble") == 512 + 16
+    assert packed_nbytes(code, "int8") == 1024 + 16

@@ -1,0 +1,226 @@
+"""Unit tests for NN components: attention equivalences, MoE routing
+invariants, MLA absorbed-decode equivalence, mamba/rwkv decode parity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.nn import attention as A
+from repro.nn import mamba as M
+from repro.nn import mla as L
+from repro.nn import moe as MOE
+from repro.nn import rwkv as R
+from repro.nn.mamba import SSMConfig
+from repro.nn.mla import MLAConfig
+from repro.nn.moe import MoEConfig
+from repro.nn.rwkv import RWKVConfig
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+
+def test_chunked_equals_full_attention():
+    key = jax.random.PRNGKey(0)
+    b, s, h, kv, hd = 2, 256, 8, 2, 16
+    q = jax.random.normal(key, (b, s, h, hd))
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, s, kv, hd))
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, s, kv, hd))
+    full = A.full_causal_attention(q, k, v, scale=0.25)
+    chunked = A.chunked_causal_attention(q, k, v, scale=0.25, q_chunk=64)
+    np.testing.assert_allclose(np.asarray(chunked), np.asarray(full), rtol=2e-5, atol=2e-5)
+
+
+def test_grouped_equals_expanded_attention():
+    """GQA grouped einsum == reference with materialized KV expansion."""
+    key = jax.random.PRNGKey(3)
+    b, s, h, kv, hd = 2, 64, 8, 4, 16
+    q = jax.random.normal(key, (b, s, h, hd))
+    k = jax.random.normal(jax.random.PRNGKey(4), (b, s, kv, hd))
+    v = jax.random.normal(jax.random.PRNGKey(5), (b, s, kv, hd))
+    got = A.full_causal_attention(q, k, v, scale=0.25)
+    ke, ve = A._expand_kv(k, h), A._expand_kv(v, h)
+    want = A.full_causal_attention(q, ke, ve, scale=0.25)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+def test_prefix_lm_mask():
+    """With prefix_len=s the attention must be fully bidirectional."""
+    key = jax.random.PRNGKey(6)
+    b, s, h, hd = 1, 32, 2, 8
+    q = jax.random.normal(key, (b, s, h, hd))
+    k = jax.random.normal(jax.random.PRNGKey(7), (b, s, h, hd))
+    v = jax.random.normal(jax.random.PRNGKey(8), (b, s, h, hd))
+    causal = A.full_causal_attention(q, k, v, scale=0.3)
+    prefix = A.full_causal_attention(q, k, v, scale=0.3, prefix_len=s)
+    assert not np.allclose(np.asarray(causal), np.asarray(prefix))
+    # row 0 with full prefix attends everywhere; causal row 0 attends only pos 0
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) * 0.3
+    probs = jax.nn.softmax(scores, axis=-1)
+    want0 = jnp.einsum("bhqk,bkhd->bqhd", probs, A._expand_kv(v, h))[:, 0]
+    np.testing.assert_allclose(np.asarray(prefix[:, 0]), np.asarray(want0), rtol=2e-5, atol=2e-5)
+
+
+def test_decode_attention_matches_full():
+    """decode at position p == row p of full causal attention."""
+    key = jax.random.PRNGKey(9)
+    b, s, h, kv, hd = 2, 16, 4, 2, 8
+    q = jax.random.normal(key, (b, s, h, hd))
+    k = jax.random.normal(jax.random.PRNGKey(10), (b, s, kv, hd))
+    v = jax.random.normal(jax.random.PRNGKey(11), (b, s, kv, hd))
+    full = A.full_causal_attention(q, k, v, scale=0.35)
+    p = 7
+    got = A.decode_attention(
+        q[:, p : p + 1], k, v, scale=0.35, length=jnp.full((b,), p + 1)
+    )
+    np.testing.assert_allclose(np.asarray(got[:, 0]), np.asarray(full[:, p]), rtol=2e-5, atol=2e-5)
+
+
+def test_rope_relative_property():
+    """RoPE: dot(q_m, k_n) depends only on (m - n)."""
+    hd = 16
+    q = jax.random.normal(jax.random.PRNGKey(12), (1, 1, 1, hd))
+    k = jax.random.normal(jax.random.PRNGKey(13), (1, 1, 1, hd))
+    def dot_at(m, n):
+        qm = A.apply_rope(q, jnp.array([[m]]))
+        kn = A.apply_rope(k, jnp.array([[n]]))
+        return float(jnp.sum(qm * kn))
+    assert dot_at(5, 3) == pytest.approx(dot_at(12, 10), rel=1e-4)
+    assert dot_at(5, 3) != pytest.approx(dot_at(5, 4), rel=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# MoE
+# ---------------------------------------------------------------------------
+
+
+def _moe_cfg(**kw):
+    d = dict(n_experts=4, top_k=2, n_shared=0, d_expert=32, capacity_factor=2.0,
+             group_size=32, activation="swiglu")
+    d.update(kw)
+    return MoEConfig(**d)
+
+
+def test_topk_argmax_matches_lax_topk():
+    probs = jax.nn.softmax(jax.random.normal(jax.random.PRNGKey(0), (3, 16, 8)), -1)
+    got_v, got_i = MOE._topk_argmax(probs, 3)
+    want_v, want_i = jax.lax.top_k(probs, 3)
+    np.testing.assert_allclose(np.asarray(got_v), np.asarray(want_v), rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(got_i), np.asarray(want_i))
+
+
+def test_moe_light_combine_equals_dense_combine():
+    cfg = _moe_cfg()
+    p = MOE.init_moe(jax.random.PRNGKey(1), 16, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(2), (2, 32, 16))
+    from repro.parallel import ShardingPolicy, sharding_policy
+
+    out_ref, aux_ref = MOE.moe_forward(p, x, cfg)
+    with sharding_policy(ShardingPolicy(moe_light_combine=True)):
+        out_light, aux_light = MOE.moe_forward(p, x, cfg)
+    np.testing.assert_allclose(np.asarray(out_light), np.asarray(out_ref), rtol=2e-2, atol=1e-4)
+    np.testing.assert_allclose(float(aux_light), float(aux_ref), rtol=1e-6)
+
+
+def test_moe_capacity_drops_tokens():
+    """With capacity_factor << 1 some tokens must pass through unrouted."""
+    cfg = _moe_cfg(capacity_factor=0.1)
+    p = MOE.init_moe(jax.random.PRNGKey(3), 16, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(4), (1, 32, 16))
+    out, _ = MOE.moe_forward(p, x, cfg)
+    # dropped tokens produce zero output (residual handles them upstream)
+    zero_rows = np.asarray(jnp.all(jnp.abs(out[0]) < 1e-6, axis=-1))
+    assert zero_rows.sum() > 0
+
+
+def test_moe_router_gates_sum_to_one():
+    probs = jax.nn.softmax(jax.random.normal(jax.random.PRNGKey(5), (2, 8, 6)), -1)
+    v, i = MOE._topk_argmax(probs, 2)
+    renorm = v / jnp.sum(v, -1, keepdims=True)
+    np.testing.assert_allclose(np.asarray(jnp.sum(renorm, -1)), 1.0, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# MLA
+# ---------------------------------------------------------------------------
+
+
+def test_mla_decode_matches_forward():
+    """Absorbed decode logits == decompressed forward at each position."""
+    cfg = MLAConfig(kv_lora_rank=16, q_lora_rank=None, nope_head_dim=8,
+                    rope_head_dim=4, v_head_dim=8)
+    d, h, b, s = 32, 4, 2, 12
+    p = L.init_mla(jax.random.PRNGKey(0), d, h, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (b, s, d))
+    full = L.mla_forward(p, x, n_heads=h, cfg=cfg)
+    cache = L.MLACache(
+        c_kv=jnp.zeros((b, s, cfg.kv_lora_rank)),
+        k_rope=jnp.zeros((b, s, cfg.rope_head_dim)),
+    )
+    for t in range(s):
+        y, cache = L.mla_decode(p, x[:, t : t + 1], cache, jnp.int32(t), n_heads=h, cfg=cfg)
+        np.testing.assert_allclose(
+            np.asarray(y[:, 0]), np.asarray(full[:, t]), rtol=2e-3, atol=2e-4
+        )
+
+
+# ---------------------------------------------------------------------------
+# Mamba / RWKV decode parity
+# ---------------------------------------------------------------------------
+
+
+def test_mamba_decode_matches_forward():
+    cfg = SSMConfig(d_state=4, d_conv=4, expand=2)
+    d, b, s = 16, 2, 10
+    p = M.init_mamba(jax.random.PRNGKey(0), d, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (b, s, d)) * 0.5
+    full = M.mamba_forward(p, x, cfg)
+    cache = M.init_mamba_cache(b, d, cfg)
+    for t in range(s):
+        y, cache = M.mamba_decode(p, x[:, t : t + 1], cache, cfg)
+        np.testing.assert_allclose(
+            np.asarray(y[:, 0]), np.asarray(full[:, t]), rtol=2e-4, atol=2e-5
+        )
+
+
+def test_mamba_prefill_state_continues_decode():
+    cfg = SSMConfig(d_state=4, d_conv=4, expand=2)
+    d, b, s = 16, 2, 12
+    p = M.init_mamba(jax.random.PRNGKey(2), d, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(3), (b, s, d)) * 0.5
+    full = M.mamba_forward(p, x, cfg)
+    _, cache = M.mamba_forward(p, x[:, :8], cfg, return_state=True)
+    for t in range(8, s):
+        y, cache = M.mamba_decode(p, x[:, t : t + 1], cache, cfg)
+        np.testing.assert_allclose(
+            np.asarray(y[:, 0]), np.asarray(full[:, t]), rtol=2e-4, atol=2e-5
+        )
+
+
+def test_rwkv_streaming_matches_forward():
+    cfg = RWKVConfig(head_size=8, decay_lora=4, mix_lora=4)
+    d, b, s = 16, 2, 10
+    p = R.init_rwkv_time_mix(jax.random.PRNGKey(0), d, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (b, s, d)) * 0.5
+    full = R.rwkv_time_mix(p, x, cfg)
+    state = None
+    x_prev = jnp.zeros((b, d))
+    for t in range(s):
+        y, state = R.rwkv_time_mix(
+            p, x[:, t : t + 1], cfg, x_prev=x_prev, state=state, return_state=True
+        )
+        x_prev = x[:, t]
+        np.testing.assert_allclose(
+            np.asarray(y[:, 0]), np.asarray(full[:, t]), rtol=5e-3, atol=5e-4
+        )
+
+
+def test_rwkv_decay_in_unit_interval():
+    cfg = RWKVConfig(head_size=8, decay_lora=4, mix_lora=4)
+    p = R.init_rwkv_time_mix(jax.random.PRNGKey(2), 16, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(3), (1, 4, 16))
+    w = R._decay(p, x)
+    assert bool(jnp.all((w > 0) & (w < 1)))

@@ -1,0 +1,244 @@
+"""Unit + property tests for the PVQ core (paper §II-§V claims)."""
+
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    PVQCode,
+    dot_op_counts,
+    pvq_decode_grouped,
+    pvq_dot,
+    pvq_encode,
+    pvq_encode_grouped,
+    pvq_encode_np,
+    pvq_quantize_direction,
+)
+from repro.core.pvq import _scales
+
+jax.config.update("jax_enable_x64", False)
+
+
+def _rand(n, seed=0, dist="laplace"):
+    rng = np.random.default_rng(seed)
+    if dist == "laplace":
+        return rng.laplace(size=n).astype(np.float32)
+    return rng.normal(size=n).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# The L1 constraint (paper eq. 1)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n,k", [(8, 4), (16, 16), (64, 13), (128, 256), (7, 1)])
+def test_l1_constraint(n, k):
+    w = _rand(n, seed=n * k)
+    y = np.asarray(pvq_quantize_direction(jnp.asarray(w), k))
+    assert int(np.abs(y).sum()) == k
+
+
+def test_null_vector_encodes_to_zero():
+    code = pvq_encode(jnp.zeros(16), 8)
+    assert int(jnp.abs(code.pulses).sum()) == 0
+    assert float(code.scale) == 0.0
+    np.testing.assert_allclose(np.asarray(code.dequantize()), np.zeros(16))
+
+
+def test_signs_match_input():
+    w = _rand(64, seed=3)
+    y = np.asarray(pvq_quantize_direction(jnp.asarray(w), 32))
+    nz = y != 0
+    assert np.all(np.sign(y[nz]) == np.sign(w[nz]))
+
+
+# ---------------------------------------------------------------------------
+# Optimality of the greedy search vs exhaustive enumeration (small N, K)
+# ---------------------------------------------------------------------------
+
+
+def _all_points(n, k):
+    """All integer vectors with L1 norm == k (brute force, tiny n/k)."""
+    pts = []
+    for mags in itertools.product(range(k + 1), repeat=n):
+        if sum(mags) != k:
+            continue
+        signs_axes = [(1,) if m == 0 else (1, -1) for m in mags]
+        for signs in itertools.product(*signs_axes):
+            pts.append(tuple(m * s for m, s in zip(mags, signs)))
+    return np.asarray(sorted(set(pts)), dtype=np.float64)
+
+
+@pytest.mark.parametrize("n,k,seed", [(4, 3, 0), (4, 3, 1), (5, 4, 2), (3, 6, 3), (6, 2, 4)])
+def test_greedy_matches_exhaustive_cosine(n, k, seed):
+    """Greedy pulse search should find a direction whose cosine similarity to w
+    is within float tolerance of the best over all of P(n,k)."""
+    w = _rand(n, seed=seed).astype(np.float64)
+    pts = _all_points(n, k)
+    cos = (pts @ w) / (np.linalg.norm(pts, axis=1) * np.linalg.norm(w))
+    best = cos.max()
+    y = np.asarray(pvq_quantize_direction(jnp.asarray(w.astype(np.float32)), k)).astype(np.float64)
+    got = (y @ w) / (np.linalg.norm(y) * np.linalg.norm(w))
+    assert got >= best - 1e-5
+
+
+# ---------------------------------------------------------------------------
+# Scales: paper's rho and least-squares rho
+# ---------------------------------------------------------------------------
+
+
+def test_paper_scale_preserves_l2_norm():
+    w = jnp.asarray(_rand(256, seed=7))
+    code = pvq_encode(w, 64, scale_mode="paper")
+    deq = code.dequantize()
+    np.testing.assert_allclose(
+        float(jnp.linalg.norm(deq)), float(jnp.linalg.norm(w)), rtol=1e-5
+    )
+
+
+def test_ls_scale_never_worse_than_paper():
+    for seed in range(5):
+        w = jnp.asarray(_rand(256, seed=seed))
+        cp = pvq_encode(w, 64, scale_mode="paper")
+        cl = pvq_encode(w, 64, scale_mode="ls")
+        ep = float(jnp.linalg.norm(cp.dequantize() - w))
+        el = float(jnp.linalg.norm(cl.dequantize() - w))
+        assert el <= ep + 1e-6
+
+
+def test_error_decreases_with_k():
+    w = jnp.asarray(_rand(128, seed=11))
+    errs = []
+    for k in (8, 32, 128, 512):
+        code = pvq_encode(w, k, scale_mode="ls")
+        errs.append(float(jnp.linalg.norm(code.dequantize() - w)))
+    assert errs == sorted(errs, reverse=True)
+    assert errs[-1] < 0.10 * float(jnp.linalg.norm(w))
+
+
+# ---------------------------------------------------------------------------
+# Dot product (paper §III): exactness + op-count claim
+# ---------------------------------------------------------------------------
+
+
+def test_pvq_dot_matches_dequantized_dot():
+    w = jnp.asarray(_rand(512, seed=5))
+    x = jnp.asarray(_rand(512, seed=6, dist="normal"))
+    code = pvq_encode(w, 128)
+    np.testing.assert_allclose(
+        float(pvq_dot(code, x)), float(code.dequantize() @ x), rtol=1e-5
+    )
+
+
+def test_opcount_claim():
+    """Paper §III: dot with y_hat in P(N,K) costs K-1 adds/subs + 1 mul."""
+    n, k = 1024, 128
+    code = pvq_encode(jnp.asarray(_rand(n, seed=9)), k)
+    c = dot_op_counts(code)
+    assert c["pvq_adds"] == k - 1
+    assert c["pvq_muls"] == 1
+    assert c["naive_muls"] == n
+    # the unit-pulse evaluation bound: nonzero coordinates <= K
+    assert c["nonzero"] <= k
+
+
+# ---------------------------------------------------------------------------
+# Grouped encoding
+# ---------------------------------------------------------------------------
+
+
+def test_grouped_roundtrip_shape_and_constraint():
+    w = jnp.asarray(_rand(1000, seed=13))
+    code = pvq_encode_grouped(w, group=256, k=64)
+    assert code.pulses.shape == (4, 256)
+    sums = np.abs(np.asarray(code.pulses)).sum(axis=-1)
+    assert list(sums) == [64, 64, 64, 64]
+    deq = pvq_decode_grouped(code, 1000)
+    assert deq.shape == (1000,)
+
+
+def test_grouped_padding_zeros_get_no_pulses():
+    w = jnp.asarray(_rand(130, seed=17))
+    code = pvq_encode_grouped(w, group=128, k=32)
+    # last group has 126 zero pads; pulses must concentrate in first 2 slots
+    tail = np.asarray(code.pulses)[1, 2:]
+    assert np.all(tail == 0)
+
+
+# ---------------------------------------------------------------------------
+# numpy reference agrees with JAX path
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n,k,seed", [(32, 8, 0), (64, 64, 1), (16, 40, 2)])
+def test_np_and_jax_encoders_agree(n, k, seed):
+    w = _rand(n, seed=seed)
+    y_np, rho_np = pvq_encode_np(w, k)
+    code = pvq_encode(jnp.asarray(w), k)
+    np.testing.assert_array_equal(y_np, np.asarray(code.pulses))
+    np.testing.assert_allclose(rho_np, float(code.scale), rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Property-based invariants
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    n=st.integers(min_value=2, max_value=64),
+    k=st.integers(min_value=1, max_value=96),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_prop_l1_norm_and_sign(n, k, seed):
+    rng = np.random.default_rng(seed)
+    w = rng.laplace(size=n).astype(np.float32)
+    y = np.asarray(pvq_quantize_direction(jnp.asarray(w), k))
+    assert int(np.abs(y).sum()) == k
+    nz = y != 0
+    assert np.all(np.sign(y[nz]) == np.sign(w[nz]))
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(min_value=4, max_value=48),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_prop_k_equal_monotone_error(n, seed):
+    """rel err at K=4N must be <= rel err at K=N (monotone refinement)."""
+    rng = np.random.default_rng(seed)
+    w = rng.laplace(size=n).astype(np.float32)
+    if np.abs(w).sum() < 1e-6:
+        return
+    wj = jnp.asarray(w)
+    e1 = float(jnp.linalg.norm(pvq_encode(wj, n, "ls").dequantize() - wj))
+    e2 = float(jnp.linalg.norm(pvq_encode(wj, 4 * n, "ls").dequantize() - wj))
+    assert e2 <= e1 + 1e-5
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_prop_scale_invariance_of_direction(seed):
+    """PVQ direction must be invariant to positive rescaling of the input."""
+    rng = np.random.default_rng(seed)
+    w = rng.laplace(size=32).astype(np.float32)
+    y1 = np.asarray(pvq_quantize_direction(jnp.asarray(w), 16))
+    y2 = np.asarray(pvq_quantize_direction(jnp.asarray(w * 37.5), 16))
+    np.testing.assert_array_equal(y1, y2)
+
+
+# ---------------------------------------------------------------------------
+# Batched encoding
+# ---------------------------------------------------------------------------
+
+
+def test_batched_encode_matches_loop():
+    ws = np.stack([_rand(64, seed=s) for s in range(8)])
+    code = pvq_encode(jnp.asarray(ws), 32)
+    for i in range(8):
+        ci = pvq_encode(jnp.asarray(ws[i]), 32)
+        np.testing.assert_array_equal(np.asarray(code.pulses[i]), np.asarray(ci.pulses))

@@ -1,0 +1,159 @@
+"""Roofline parsing + data pipeline + optimizer unit tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.roofline import (
+    HBM_BW,
+    PEAK_FLOPS,
+    analyze_corrected,
+    collective_bytes,
+    pvq_bytes_per_weight,
+)
+from repro.data import ClassifyTask, Prefetcher, TokenLoader, TokenTask
+from repro.optim import AdamW, cosine_schedule, global_norm
+
+
+# ---------------------------------------------------------------------------
+# HLO collective parsing
+# ---------------------------------------------------------------------------
+
+HLO_SAMPLE = """
+HloModule test
+ENTRY %main {
+  %p0 = bf16[1024,512]{1,0} parameter(0)
+  %ag = bf16[16384,512]{1,0} all-gather(%p0), dimensions={0}
+  %ar = f32[1024,512]{1,0} all-reduce(%conv), to_apply=%sum
+  %rs = f32[64,512]{1,0} reduce-scatter(%big), dimensions={0}
+  %cp = bf16[1024,512]{1,0} collective-permute(%p0), source_target_pairs={{0,1}}
+  %a2a = bf16[1024,512]{1,0} all-to-all(%p0), dimensions={0}
+  %dot = f32[1024,1024]{1,0} dot(%p0, %p0)
+}
+"""
+
+
+def test_collective_bytes_parsing():
+    out = collective_bytes(HLO_SAMPLE)
+    assert out["per_kind_counts"]["all-gather"] == 1
+    assert out["per_kind_bytes"]["all-gather"] == 16384 * 512 * 2
+    # all-reduce counted 2x (ring RS+AG)
+    assert out["per_kind_bytes"]["all-reduce"] == 2 * 1024 * 512 * 4
+    assert out["per_kind_counts"]["collective-permute"] == 1
+    assert out["per_kind_counts"]["all-to-all"] == 1
+    # dot must NOT be counted
+    assert out["total_bytes"] == (
+        16384 * 512 * 2 + 2 * 1024 * 512 * 4 + 64 * 512 * 4 + 1024 * 512 * 2 * 2
+    )
+
+
+def test_analyze_corrected_bottleneck():
+    roof = analyze_corrected(
+        flops=1e15, hbm_bytes=1e11, coll={"total_bytes": 1e12, "per_kind_bytes": {}, "per_kind_counts": {}},
+        chips=256, model_flops=2e17,
+    )
+    assert roof.compute_s == pytest.approx(1e15 / PEAK_FLOPS)
+    assert roof.memory_s == pytest.approx(1e11 / HBM_BW)
+    assert roof.bottleneck == "collective"
+    assert roof.useful_ratio == pytest.approx(2e17 / (1e15 * 256))
+
+
+def test_pvq_bytes_per_weight():
+    assert pvq_bytes_per_weight(256) == pytest.approx(1.015625)
+    assert pvq_bytes_per_weight(256, nibble=True) == pytest.approx(0.515625)
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+
+def test_token_task_is_learnable_structure():
+    task = TokenTask(vocab_size=64, seed=0)
+    rng = np.random.default_rng(0)
+    b = task.sample(rng, 8, 128)
+    assert b["tokens"].shape == (8, 128)
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["targets"][:, :-1])
+    # chain structure: successors of a token concentrate on `branch` values
+    succ_counts = {}
+    toks, tgts = b["tokens"].ravel(), b["targets"].ravel()
+    for t, n in zip(toks, tgts):
+        succ_counts.setdefault(int(t), set()).add(int(n))
+    common = [len(v) for k, v in succ_counts.items() if len(succ_counts[k]) > 0]
+    assert np.median(common) <= task.branch + 8  # chain + unigram leakage
+
+
+def test_loader_deterministic_restart():
+    task = TokenTask(vocab_size=32, seed=1)
+    l1 = TokenLoader(task, batch=4, seq=16, seed=7)
+    l2 = TokenLoader(task, batch=4, seq=16, seed=7)
+    b1 = l1.host_batch(42)
+    b2 = l2.host_batch(42)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    b3 = l1.host_batch(43)
+    assert not np.array_equal(b1["tokens"], b3["tokens"])
+
+
+def test_prefetcher_orders_batches():
+    seen = []
+
+    def make(step):
+        return step * 10
+
+    pf = Prefetcher(make, depth=2, start_step=5)
+    vals = [pf.next() for _ in range(4)]
+    pf.close()
+    assert vals == [50, 60, 70, 80]
+
+
+def test_classify_task_snr():
+    task = ClassifyTask((64,), n_classes=4, noise=0.1, seed=0)
+    rng = np.random.default_rng(0)
+    b = task.sample(rng, 256)
+    # at low noise, nearest-prototype classification is near-perfect
+    d = ((b["x"][:, None, :] - task.prototypes[None]) ** 2).sum(-1)
+    pred = d.argmin(1)
+    assert (pred == b["y"]).mean() > 0.95
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+
+
+def test_adamw_converges_quadratic():
+    opt = AdamW(lr=0.1, weight_decay=0.0)
+    w = {"w": jnp.ones(8) * 5}
+    st = opt.init(w)
+    for _ in range(200):
+        g = jax.grad(lambda p: jnp.sum(p["w"] ** 2))(w)
+        w, st, _ = opt.update(g, st, w)
+    assert float(jnp.max(jnp.abs(w["w"]))) < 1e-2
+
+
+def test_adamw_weight_decay_only_matrices():
+    opt = AdamW(lr=0.0, weight_decay=0.5, clip_norm=None)  # lr=0: pure decay visibility
+    w = {"mat": jnp.ones((4, 4)), "vec": jnp.ones(4)}
+    st = opt.init(w)
+    g = jax.tree.map(jnp.zeros_like, w)
+    w2, _, _ = opt.update(g, st, w)
+    np.testing.assert_array_equal(np.asarray(w2["vec"]), 1.0)  # vectors not decayed
+    np.testing.assert_array_equal(np.asarray(w2["mat"]), 1.0)  # lr=0 -> no change either
+
+
+def test_grad_clipping():
+    opt = AdamW(lr=1e-3, clip_norm=1.0)
+    w = {"w": jnp.zeros(4)}
+    st = opt.init(w)
+    g = {"w": jnp.ones(4) * 1e6}
+    _, _, gnorm = opt.update(g, st, w)
+    assert float(gnorm) == pytest.approx(2e6, rel=1e-3)
+
+
+def test_cosine_schedule_shape():
+    lr = cosine_schedule(1.0, warmup=10, total=100, floor=0.1)
+    assert float(lr(jnp.int32(0))) == 0.0
+    assert float(lr(jnp.int32(10))) == pytest.approx(1.0)
+    assert float(lr(jnp.int32(100))) == pytest.approx(0.1, rel=1e-2)
+    assert float(lr(jnp.int32(55))) < float(lr(jnp.int32(20)))
