@@ -1,6 +1,11 @@
 """Kernel micro-benchmarks (interpret on CPU; Mosaic on TPU) + the
 bandwidth-model table for the PVQ dequant-matmul (the §VIII hardware story
-adapted to TPU: bytes-from-HBM per weight vs bf16/f32 baselines)."""
+adapted to TPU: bytes-from-HBM per weight vs bf16/f32 baselines).
+
+Every bench warms up (trace+compile excluded) and reports steady-state
+us_per_call; rows land in BENCH_kernels.json via benchmarks.run so perf
+regressions are trackable across PRs.
+"""
 
 from __future__ import annotations
 
@@ -12,31 +17,83 @@ import jax.numpy as jnp
 import numpy as np
 
 
+def _timeit(fn, reps: int) -> float:
+    fn()  # warmup: trace + compile outside the timed region
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fn()
+    return (time.perf_counter() - t0) / reps
+
+
+def _mode() -> str:
+    return "interpret" if jax.default_backend() != "tpu" else "mosaic"
+
+
 def bench_pvq_matmul(reps: int = 3) -> List[dict]:
     from repro.kernels import ops
 
     rows = []
     for m, k, n, group in ((8, 512, 512, 128), (128, 512, 512, 128)):
-        kx, kw = jax.random.split(jax.random.PRNGKey(0))
+        kx, kw, ks = jax.random.split(jax.random.PRNGKey(0), 3)
         x = jax.random.normal(kx, (m, k), jnp.float32)
         pulses = jax.random.randint(kw, (k, n), -3, 4, jnp.int8)
-        scales = jnp.abs(jax.random.normal(kw, (k // group, n))) * 0.05
-        y = ops.pvq_matmul(x, pulses, scales, group=group, bm=min(m, 128))
-        y.block_until_ready()
-        t0 = time.time()
-        for _ in range(reps):
-            ops.pvq_matmul(x, pulses, scales, group=group, bm=min(m, 128)).block_until_ready()
-        dt = (time.time() - t0) / reps
+        scales = jnp.abs(jax.random.normal(ks, (k // group, n))) * 0.05
+        # tuned dispatch: first call may search (persisting the tile cache),
+        # later calls hit the cache
+        dt = _timeit(
+            lambda: ops.pvq_matmul(x, pulses, scales, group=group, tune=True)
+            .block_until_ready(),
+            reps,
+        )
+        from repro.kernels import autotune
+
+        bm, bn, bk = autotune.get_tiles(m, k, n, group=group, dtype=x.dtype)
         # HBM traffic model (TPU): int8 pulses + f32 group scales vs bf16 w
         bytes_pvq = k * n * 1 + (k // group) * n * 4 + m * k * 4 + m * n * 4
         bytes_bf16 = k * n * 2 + m * k * 4 + m * n * 4
         rows.append({
             "bench": f"pvq_matmul_{m}x{k}x{n}",
             "us_per_call": round(1e6 * dt, 1),
+            "tiles": f"{bm}x{bn}x{bk}",
             "weight_bytes_ratio_vs_bf16": round((k * n + (k // group) * n * 4) / (k * n * 2), 3),
             "total_bytes_ratio_vs_bf16": round(bytes_pvq / bytes_bf16, 3),
-            "mode": "interpret" if jax.default_backend() != "tpu" else "mosaic",
+            "mode": _mode(),
         })
+
+    # fused epilogue: bias + relu inside the final store (one HBM round-trip)
+    m, k, n, group = (128, 512, 512, 128)
+    kx, kw, ks, kb = jax.random.split(jax.random.PRNGKey(1), 4)
+    x = jax.random.normal(kx, (m, k), jnp.float32)
+    pulses = jax.random.randint(kw, (k, n), -3, 4, jnp.int8)
+    scales = jnp.abs(jax.random.normal(ks, (k // group, n))) * 0.05
+    bias = jax.random.normal(kb, (n,))
+    dt = _timeit(
+        lambda: ops.pvq_matmul(
+            x, pulses, scales, group=group, bias=bias, activation="relu"
+        ).block_until_ready(),
+        reps,
+    )
+    rows.append({
+        "bench": f"pvq_matmul_bias_relu_{m}x{k}x{n}",
+        "us_per_call": round(1e6 * dt, 1),
+        "mode": _mode(),
+    })
+
+    # ragged decode shape: exercises the pad-or-fallback path
+    m, k, n, group = (5, 384, 257, 128)
+    kx, kw, ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    x = jax.random.normal(kx, (m, k), jnp.float32)
+    pulses = jax.random.randint(kw, (k, n), -3, 4, jnp.int8)
+    scales = jnp.abs(jax.random.normal(ks, (k // group, n))) * 0.05
+    dt = _timeit(
+        lambda: ops.pvq_matmul(x, pulses, scales, group=group).block_until_ready(),
+        reps,
+    )
+    rows.append({
+        "bench": f"pvq_matmul_ragged_{m}x{k}x{n}",
+        "us_per_call": round(1e6 * dt, 1),
+        "mode": _mode(),
+    })
     return rows
 
 
@@ -46,27 +103,24 @@ def bench_pvq_encode(reps: int = 3) -> List[dict]:
     rows = []
     for g, n, k_pulses in ((64, 256, 128), (8, 1024, 256)):
         w = jax.random.laplace(jax.random.PRNGKey(1), (g, n))
-        p, r = ops.pvq_encode(w, k_pulses=k_pulses)
-        p.block_until_ready()
-        t0 = time.time()
-        for _ in range(reps):
-            ops.pvq_encode(w, k_pulses=k_pulses)[0].block_until_ready()
-        dt = (time.time() - t0) / reps
+        dt = _timeit(
+            lambda: ops.pvq_encode(w, k_pulses=k_pulses)[0].block_until_ready(),
+            reps,
+        )
         rows.append({
             "bench": f"pvq_encode_{g}x{n}_K{k_pulses}",
             "us_per_call": round(1e6 * dt, 1),
             "dims_per_s": round(g * n / dt),
-            "mode": "interpret" if jax.default_backend() != "tpu" else "mosaic",
+            "mode": _mode(),
         })
     # the big-layer encoder path (largest-remainder, pure jnp — the paper
     # needed CUDA for this size; one sort suffices)
     from repro.core.pvq import pvq_quantize_direction
 
     w = jax.random.laplace(jax.random.PRNGKey(2), (2_097_664,))
-    t0 = time.time()
-    y = pvq_quantize_direction(w, 524_416)
-    y.block_until_ready()
-    dt = time.time() - t0
+    dt = _timeit(
+        lambda: pvq_quantize_direction(w, 524_416).block_until_ready(), reps
+    )
     rows.append({
         "bench": "pvq_encode_2.1M_dims_K524k",
         "us_per_call": round(1e6 * dt, 1),

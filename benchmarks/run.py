@@ -3,7 +3,9 @@
     PYTHONPATH=src python -m benchmarks.run [--full] [--only PREFIX]
 
 Prints ``name,us_per_call,derived`` CSV rows (one per benchmark), then a
-human-readable table dump.
+human-readable table dump.  Kernel rows are additionally written to
+``BENCH_kernels.json`` (us_per_call + bytes-ratios per kernel/shape) so future
+PRs can diff perf trajectories.
 """
 
 from __future__ import annotations
@@ -46,6 +48,20 @@ def main() -> None:
         us = r.get("us_per_call", "")
         derived = {k: v for k, v in r.items() if k not in ("bench_group", "bench", "us_per_call")}
         print(f"{name},{us},{json.dumps(derived, default=str).replace(',', ';')}")
+
+    # perf-trajectory file: kernel rows only, stable schema for cross-PR diffs
+    kernel_rows = [r for r in all_rows if r["bench_group"].startswith("kernel_")]
+    if kernel_rows:
+        import jax
+
+        payload = {
+            "schema": "bench-kernels-v1",
+            "backend": jax.default_backend(),
+            "rows": kernel_rows,
+        }
+        with open("BENCH_kernels.json", "w") as f:
+            json.dump(payload, f, indent=1, default=str)
+        print("wrote BENCH_kernels.json", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -7,6 +7,7 @@ from .pvq import (
     pvq_encode_grouped,
     pvq_decode_grouped,
     pvq_quantize_direction,
+    pvq_quantize_direction_fast,
     pvq_dot,
     pvq_encode_np,
     dot_op_counts,
@@ -23,6 +24,7 @@ __all__ = [
     "pvq_encode_grouped",
     "pvq_decode_grouped",
     "pvq_quantize_direction",
+    "pvq_quantize_direction_fast",
     "pvq_dot",
     "pvq_encode_np",
     "dot_op_counts",

@@ -22,7 +22,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from .pvq import pvq_decode_grouped, pvq_encode, pvq_encode_grouped
+from .pvq import pvq_encode
 
 
 # ---------------------------------------------------------------------------
@@ -39,11 +39,21 @@ def pvq_ste(w: jax.Array, k: int, group: Optional[int] = None, scale_mode: str =
 def _pvq_qdq(w, k, group, scale_mode):
     flat = w.reshape(-1)
     if group is None:
+        # paper-faithful whole-tensor projection (exact greedy / LR switch)
         code = pvq_encode(flat, k, scale_mode)
         deq = code.dequantize()
     else:
-        code = pvq_encode_grouped(flat, group, k, scale_mode)
-        deq = pvq_decode_grouped(code, flat.shape[0])
+        # grouped QAT hot path: sorted O(N log N + ΔK) projection, dispatched
+        # through the kernel layer (Pallas on TPU, jnp twin elsewhere).
+        # Imported lazily: repro.core must not depend on repro.kernels at
+        # import time.
+        from repro.kernels import ops as kernel_ops
+
+        n = flat.shape[0]
+        pulses, scale = kernel_ops.pvq_encode_grouped_fast(
+            flat, group, k, scale_mode=scale_mode
+        )
+        deq = (scale[:, None] * pulses.astype(jnp.float32)).reshape(-1)[:n]
     return deq.reshape(w.shape).astype(w.dtype)
 
 

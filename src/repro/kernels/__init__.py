@@ -1,3 +1,10 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas TPU kernels for the PVQ hot spots the paper optimizes with custom
+CUDA: the fused dequant matmul and the batched encoder.
+
+Callers should import :mod:`repro.kernels.ops` (backend + autotuned-tile
+dispatch) rather than the kernel modules directly; :mod:`repro.kernels.ref`
+holds the pure-jnp oracles and :mod:`repro.kernels.autotune` the persistent
+tile-tuning cache.  See README.md in this package for the cache format.
+"""
+
+from . import autotune, ops, ref  # noqa: F401

@@ -1,0 +1,265 @@
+"""Tile-size autotuner for the PVQ dequant-matmul kernel.
+
+``pvq_matmul`` takes (bm, bn, bk) tile sizes; the best choice depends on the
+GEMM shape (an m=8 decode step wants a skinny bm, a 236B-config FFN block
+wants full MXU 128x128 tiles), the dtype, and the backend.  This module
+searches a small MXU/VPU-aligned candidate grid, times each candidate with
+``block_until_ready``, and persists the winner in a JSON cache so the search
+runs once per (shape, dtype, backend) — ever.
+
+Cache
+-----
+* location: ``$REPRO_PVQ_TUNE_CACHE`` if set, else
+  ``~/.cache/repro/pvq_tune_cache.json``
+* key: ``"m x k x n : g<group> : <dtype> : <backend> : v1"`` (no spaces)
+* value: ``{"bm":…, "bn":…, "bk":…, "us":…, "candidates":…}``
+
+Dispatch contract (used by ``kernels.ops.pvq_matmul``):
+
+* explicit tiles from the caller always win;
+* else a cache hit wins (never re-times);
+* else, if searching is enabled (``search=True`` or ``REPRO_PVQ_AUTOTUNE=1``),
+  run the search and persist;
+* else fall back to :func:`heuristic_tiles` (no timing, no I/O).
+
+Delete the cache file (or point the env var somewhere fresh) to regenerate —
+see ``src/repro/kernels/README.md``.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+import time
+from pathlib import Path
+from typing import Dict, Iterable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .pvq_matmul import normalize_tiles, pvq_matmul
+
+_SCHEMA = "v1"
+# process-local mirror of the JSON file: avoids re-reading per dispatch
+_MEM: Dict[str, dict] = {}
+_MEM_LOADED_FROM: Optional[str] = None
+
+# keep the interpret-mode (CPU proxy) search cheap; Mosaic search can afford
+# a wider sweep since compile+run is milliseconds per candidate
+MAX_CANDIDATES_INTERPRET = 6
+MAX_CANDIDATES_COMPILED = 24
+_VMEM_BUDGET_BYTES = 12 * 1024 * 1024  # leave headroom below the ~16MB/core
+
+
+def cache_path() -> Path:
+    env = os.environ.get("REPRO_PVQ_TUNE_CACHE", "").strip()
+    if env:
+        return Path(env)
+    return Path.home() / ".cache" / "repro" / "pvq_tune_cache.json"
+
+
+def cache_key(m: int, k: int, n: int, group: int, dtype, backend: str) -> str:
+    return f"{m}x{k}x{n}:g{group}:{jnp.dtype(dtype).name}:{backend}:{_SCHEMA}"
+
+
+def _load() -> Dict[str, dict]:
+    """Read-through memory cache of the JSON file."""
+    global _MEM, _MEM_LOADED_FROM
+    path = cache_path()
+    if _MEM_LOADED_FROM == str(path):
+        return _MEM
+    entries: Dict[str, dict] = {}
+    try:
+        with open(path) as f:
+            raw = json.load(f)
+        if isinstance(raw, dict):
+            entries = {k: v for k, v in raw.items() if isinstance(v, dict)}
+    except (OSError, json.JSONDecodeError):
+        entries = {}
+    _MEM = entries
+    _MEM_LOADED_FROM = str(path)
+    return _MEM
+
+
+def _persist(key: str, entry: dict) -> None:
+    """Read-modify-write with an atomic replace (tuning may run concurrently)."""
+    path = cache_path()
+    path.parent.mkdir(parents=True, exist_ok=True)
+    current: Dict[str, dict] = {}
+    try:
+        with open(path) as f:
+            current = json.load(f)
+        if not isinstance(current, dict):
+            current = {}
+    except (OSError, json.JSONDecodeError):
+        current = {}
+    current[key] = entry
+    fd, tmp = tempfile.mkstemp(dir=str(path.parent), suffix=".tmp")
+    try:
+        with os.fdopen(fd, "w") as f:
+            json.dump(current, f, indent=1, sort_keys=True)
+        os.replace(tmp, path)
+    except OSError:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+    _MEM.update({key: entry})
+    global _MEM_LOADED_FROM
+    _MEM_LOADED_FROM = str(path)
+
+
+def clear_memory_cache() -> None:
+    """Forget the in-process mirror (tests point REPRO_PVQ_TUNE_CACHE around)."""
+    global _MEM, _MEM_LOADED_FROM
+    _MEM = {}
+    _MEM_LOADED_FROM = None
+
+
+def heuristic_tiles(m: int, k: int, n: int, group: int) -> Tuple[int, int, int]:
+    """Static MXU-aligned guess: full 128 tiles clamped to the problem, with a
+    deeper bk when the k extent dwarfs the MXU (fewer grid steps, same VMEM
+    order) and a skinny bm for decode-like m."""
+    bk = 128 if k <= 1024 else 256
+    return normalize_tiles(m, k, n, group, bm=128, bn=128, bk=bk)
+
+
+def candidate_tiles(
+    m: int, k: int, n: int, group: int, max_candidates: int
+) -> Tuple[Tuple[int, int, int], ...]:
+    """MXU/VPU-aligned (bm, bn, bk) grid, deduped after clamping to the shape.
+
+    bm sweeps sublane-aligned powers of two (8..256) — decode steps live at
+    the small end; bn sweeps lane multiples (128..512); bk sweeps group
+    multiples (group..512).  Candidates whose VMEM working set exceeds the
+    budget are dropped.  The heuristic default is always candidate #0 so a
+    truncated search can never be worse than no search.
+    """
+    cands: list[Tuple[int, int, int]] = [heuristic_tiles(m, k, n, group)]
+    for bm in (8, 16, 32, 64, 128, 256):
+        for bn in (128, 256, 512):
+            for bk in (group, 2 * group, 4 * group, 128, 256, 512):
+                t = normalize_tiles(m, k, n, group, bm, bn, bk)
+                bm_, bn_, bk_ = t
+                vmem = (
+                    bm_ * bk_ * 4  # x tile f32
+                    + bk_ * bn_  # int8 pulses
+                    + (bk_ // group) * bn_ * 4  # scales
+                    + 2 * bm_ * bn_ * 4  # out + acc
+                )
+                if vmem > _VMEM_BUDGET_BYTES:
+                    continue
+                if t not in cands:
+                    cands.append(t)
+    return tuple(cands[:max_candidates])
+
+
+def _time_candidate(
+    x, w, s, group: int, tiles: Tuple[int, int, int], reps: int, interpret: bool
+) -> float:
+    bm, bn, bk = tiles
+    y = pvq_matmul(x, w, s, group=group, bm=bm, bn=bn, bk=bk, interpret=interpret)
+    y.block_until_ready()  # warmup: trace + compile outside the timed region
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        pvq_matmul(
+            x, w, s, group=group, bm=bm, bn=bn, bk=bk, interpret=interpret
+        ).block_until_ready()
+    return (time.perf_counter() - t0) / reps
+
+
+def autotune(
+    m: int,
+    k: int,
+    n: int,
+    *,
+    group: int = 128,
+    dtype=jnp.float32,
+    reps: int = 3,
+    interpret: Optional[bool] = None,
+    max_candidates: Optional[int] = None,
+) -> dict:
+    """Search the candidate grid for (m,k,n,group,dtype); persist + return the
+    winning entry ``{"bm","bn","bk","us","candidates"}``.  A cache hit skips
+    the search entirely."""
+    backend = jax.default_backend()
+    if interpret is None:
+        interpret = backend != "tpu"
+    key = cache_key(m, k, n, group, dtype, backend)
+    hit = _load().get(key)
+    if hit is not None:
+        return hit
+
+    if max_candidates is None:
+        max_candidates = (
+            MAX_CANDIDATES_INTERPRET if interpret else MAX_CANDIDATES_COMPILED
+        )
+    cands = candidate_tiles(m, k, n, group, max_candidates)
+
+    kx, kw, ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    x = jax.random.normal(kx, (m, k), jnp.float32).astype(dtype)
+    w = jax.random.randint(kw, (k, n), -3, 4, jnp.int8)
+    s = (jnp.abs(jax.random.normal(ks, (k // group, n))) * 0.05).astype(jnp.float32)
+
+    best: Optional[Tuple[int, int, int]] = None
+    best_t = float("inf")
+    for t in cands:
+        dt = _time_candidate(x, w, s, group, t, reps, interpret)
+        if dt < best_t:
+            best, best_t = t, dt
+    assert best is not None
+    entry = {
+        "bm": best[0],
+        "bn": best[1],
+        "bk": best[2],
+        "us": round(1e6 * best_t, 2),
+        "candidates": len(cands),
+    }
+    _persist(key, entry)
+    return entry
+
+
+def get_tiles(
+    m: int,
+    k: int,
+    n: int,
+    *,
+    group: int = 128,
+    dtype=jnp.float32,
+    search: Optional[bool] = None,
+    interpret: Optional[bool] = None,
+) -> Tuple[int, int, int]:
+    """Tile dispatch for ``ops.pvq_matmul``: cache hit > search > heuristic.
+
+    ``search=None`` defers to the ``REPRO_PVQ_AUTOTUNE`` env var, so a whole
+    serving/training job can opt in to first-call tuning without threading a
+    flag through every layer."""
+    backend = jax.default_backend()
+    key = cache_key(m, k, n, group, dtype, backend)
+    hit = _load().get(key)
+    if hit is not None:
+        return (hit["bm"], hit["bn"], hit["bk"])
+    if search is None:
+        search = os.environ.get("REPRO_PVQ_AUTOTUNE", "") not in ("", "0", "false")
+    if search:
+        e = autotune(m, k, n, group=group, dtype=dtype, interpret=interpret)
+        return (e["bm"], e["bn"], e["bk"])
+    return heuristic_tiles(m, k, n, group)
+
+
+def tune_shapes(
+    shapes: Iterable[Tuple[int, int, int]],
+    *,
+    group: int = 128,
+    dtype=jnp.float32,
+    reps: int = 3,
+    interpret: Optional[bool] = None,
+) -> Dict[str, dict]:
+    """Pre-tune a batch of GEMM shapes (serve/train warmup). Returns key->entry."""
+    out = {}
+    for m, k, n in shapes:
+        out[cache_key(m, k, n, group, dtype, jax.default_backend())] = autotune(
+            m, k, n, group=group, dtype=dtype, reps=reps, interpret=interpret
+        )
+    return out

@@ -1,8 +1,20 @@
-"""Public jit'd wrappers for the Pallas kernels.
+"""Public jit'd dispatch layer for the Pallas kernels.
 
-On a CPU host (this container) kernels run with ``interpret=True`` — the
-kernel body executes in Python on CPU, validating logic against ref.py; on a
-TPU backend the same calls compile to Mosaic.
+Every caller (nn layers, serve, QAT, grad-compress, checkpointer) goes through
+this module rather than the kernel files, so backend selection, tile
+autotuning, and the int8 pulse contract live in exactly one place:
+
+* backend: on a CPU host (this container) kernels run with ``interpret=True``
+  — the kernel body executes in Python on CPU, validating logic against
+  ref.py; on a TPU backend the same calls compile to Mosaic.
+* tiles: ``pvq_matmul`` consults the persistent autotune cache
+  (``repro.kernels.autotune``); explicit tiles still win, and
+  ``REPRO_PVQ_AUTOTUNE=1`` enables search-on-miss.
+* dtypes: the encoder emits int32 pulses (the pyramid L1 bound can exceed
+  int8 for extreme K/N); the matmul consumes int8.  :func:`pulses_to_int8`
+  is the one sanctioned cast/clamp boundary, and
+  :func:`encode_weight_matrix` produces matmul-ready (int8 pulses, scales)
+  directly.
 """
 
 from __future__ import annotations
@@ -10,27 +22,161 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from . import autotune as autotune_lib
+from . import ref as ref_lib
 from .pvq_encode import pvq_encode_batch as _encode_kernel
 from .pvq_matmul import pvq_matmul as _matmul_kernel
-from . import ref as ref_lib
 
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-def pvq_matmul(x, w_pulses, scales, *, group: int = 128, interpret: bool | None = None, **tiles):
-    """Fused dequant matmul; see kernels.pvq_matmul for the tiling contract."""
-    if interpret is None:
-        interpret = not _on_tpu()
-    return _matmul_kernel(x, w_pulses, scales, group=group, interpret=interpret, **tiles)
+# ---------------------------------------------------------------------------
+# dequant matmul
+# ---------------------------------------------------------------------------
 
 
-def pvq_encode(w, *, k_pulses: int, bg: int = 8, interpret: bool | None = None):
-    """Batched exact greedy PVQ projection onto P(N, K)."""
+def pvq_matmul(
+    x,
+    w_pulses,
+    scales,
+    *,
+    group: int = 128,
+    bias=None,
+    activation: str = "none",
+    interpret: bool | None = None,
+    tune: bool | None = None,
+    **tiles,
+):
+    """Fused dequant matmul ``act(x @ (pulses * rho) + bias)``.
+
+    Tile sizes come from (in priority order) explicit ``bm``/``bn``/``bk``
+    kwargs, the persistent autotune cache, a timed search when ``tune=True``
+    (or ``REPRO_PVQ_AUTOTUNE=1``), else the MXU heuristic.  Ragged shapes are
+    padded internally; see kernels.pvq_matmul for the tiling contract.
+    """
     if interpret is None:
         interpret = not _on_tpu()
-    return _encode_kernel(w, k_pulses=k_pulses, bg=bg, interpret=interpret)
+    if not tiles:
+        m, k = x.shape
+        n = w_pulses.shape[1]
+        bm, bn, bk = autotune_lib.get_tiles(
+            m, k, n, group=group, dtype=x.dtype, search=tune, interpret=interpret
+        )
+        tiles = {"bm": bm, "bn": bn, "bk": bk}
+    return _matmul_kernel(
+        x,
+        w_pulses,
+        scales,
+        bias,
+        group=group,
+        activation=activation,
+        interpret=interpret,
+        **tiles,
+    )
+
+
+# ---------------------------------------------------------------------------
+# encoder
+# ---------------------------------------------------------------------------
+
+
+def pvq_encode(
+    w,
+    *,
+    k_pulses: int,
+    bg: int = 8,
+    delta_max: int = 32,
+    interpret: bool | None = None,
+):
+    """Batched PVQ projection onto P(N, K) (sort-based, bounded correction).
+
+    Returns (pulses i32 (g, n), rho_ls f32 (g,)).  ``delta_max >= k_pulses``
+    reproduces the exact greedy search.
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    return _encode_kernel(
+        w, k_pulses=k_pulses, bg=bg, delta_max=delta_max, interpret=interpret
+    )
+
+
+def pulses_to_int8(pulses: jax.Array) -> jax.Array:
+    """The sanctioned int32 -> int8 pulse boundary for the matmul kernel.
+
+    PVQ pulse magnitudes are bounded by K per group; for every supported
+    config (K <= group) a single coordinate never exceeds 127, but the clamp
+    makes the contract explicit rather than a silent overflow wrap.
+    """
+    return jnp.clip(pulses, -127, 127).astype(jnp.int8)
+
+
+def encode_weight_matrix(
+    w: jax.Array,  # (k, n) float weight matrix, k the contraction dim
+    *,
+    group: int = 128,
+    k_pulses: int,
+    bg: int = 8,
+    delta_max: int = 32,
+    interpret: bool | None = None,
+):
+    """Encode a dense weight matrix into matmul-kernel format.
+
+    Each (group-slice, output-column) gets its own pyramid code: returns
+    ``(pulses int8 (k_pad, n), scales f32 (k_pad//group, n), k_pad)`` where
+    ``k_pad`` rounds k up to a group multiple (padded rows are zero weights
+    and receive zero pulses).  Feed the result straight to :func:`pvq_matmul`
+    with x zero-padded to ``k_pad`` columns (``pvq_dense`` in nn.layers does
+    this for you).
+    """
+    k, n = w.shape
+    pad = (-k) % group
+    if pad:
+        w = jnp.concatenate([w, jnp.zeros((pad, n), w.dtype)], axis=0)
+    k_pad = k + pad
+    # (k_pad, n) -> columns-major groups: (n * k_pad/group, group)
+    wg = w.T.reshape(n * (k_pad // group), group)
+    pulses, rho = pvq_encode(
+        wg, k_pulses=k_pulses, bg=bg, delta_max=delta_max, interpret=interpret
+    )
+    pulses = pulses_to_int8(pulses)
+    pulses = jnp.transpose(
+        pulses.reshape(n, k_pad // group, group), (1, 2, 0)
+    ).reshape(k_pad, n)
+    scales = rho.reshape(n, k_pad // group).T.astype(jnp.float32)
+    return pulses, scales, k_pad
+
+
+def pvq_encode_grouped_fast(
+    flat: jax.Array,
+    group: int,
+    k: int,
+    delta_max: int = 32,
+    scale_mode: str = "ls",
+):
+    """Grouped encode of a flat vector on the fast sorted path.
+
+    Dispatches to the Pallas kernel on TPU and the jnp sorted encoder
+    elsewhere (interpret-mode Pallas is a correctness proxy, not a fast path
+    on CPU).  Returns (pulses i32 (G, group), rho f32 (G,)); trailing
+    zero-padding never receives pulses.  The kernel natively emits the ``ls``
+    scale; other scale modes are recomputed from the pulses.
+    """
+    from repro.core.pvq import _scales, pvq_quantize_direction_fast
+
+    n = flat.shape[0]
+    pad = (-n) % group
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
+    wg = flat.reshape(-1, group)
+    if _on_tpu():
+        pulses, rho = pvq_encode(wg, k_pulses=k, delta_max=delta_max)
+        if scale_mode != "ls":
+            rho = _scales(wg, pulses, scale_mode)
+        return pulses, rho
+    pulses = pvq_quantize_direction_fast(wg, k, delta_max=delta_max)
+    return pulses, _scales(wg, pulses, scale_mode)
 
 
 # re-export oracles for test convenience

@@ -1,16 +1,23 @@
 """Fused PVQ dequant-matmul Pallas TPU kernel.
 
-Computes ``y = x @ (w_pulses * rho)`` where ``w_pulses`` is the int8 PVQ
-pulse tensor (K-sparse per group, |pulse| small) and ``rho`` holds one f32
-scale per (contraction-group, output-column).  This is the TPU-native form of
-the paper's "K-1 adds + ONE multiplication" dot product: the integer pulse
-matrix streams from HBM at 1 byte/weight (2-4x less than bf16/f32 — the win
-for weight-memory-bound decode/MoE ops), is dequantized in VMEM, and the
+Computes ``y = act(x @ (w_pulses * rho) + bias)`` where ``w_pulses`` is the
+int8 PVQ pulse tensor (K-sparse per group, |pulse| small) and ``rho`` holds
+one f32 scale per (contraction-group, output-column).  This is the TPU-native
+form of the paper's "K-1 adds + ONE multiplication" dot product: the integer
+pulse matrix streams from HBM at 1 byte/weight (2-4x less than bf16/f32 — the
+win for weight-memory-bound decode/MoE ops), is dequantized in VMEM, and the
 single rho multiply is fused per group before the MXU contraction.
+
+Epilogue fusion (beyond the seed kernel): an optional bias add and activation
+run inside the final ``@pl.when`` store, so a quantized dense layer costs one
+HBM round-trip for the output instead of three (matmul out + bias + act).
 
 Tiling: grid (m/bm, n/bn, k/bk); x tile (bm,bk) VMEM, w tile (bk,bn) int8
 VMEM, rho tile (bk/group, bn) f32 VMEM, f32 accumulator scratch (bm,bn).
-MXU-aligned defaults bm=bn=bk=128 (group must divide bk).
+MXU-aligned defaults bm=bn=bk=128 (group must divide bk).  Non-tile-divisible
+("ragged") shapes are zero-padded up to the tile grid and the output sliced
+back — no caller-visible shape constraints beyond ``k % group == 0``.  Tile
+sizes are normally chosen by ``repro.kernels.autotune`` via ``kernels.ops``.
 """
 
 from __future__ import annotations
@@ -22,8 +29,30 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax renamed TPUCompilerParams -> CompilerParams across 0.4.x/0.5.x
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
 
-def _kernel(x_ref, w_ref, s_ref, o_ref, acc_ref, *, group: int, n_k: int):
+ACTIVATIONS = ("none", "relu", "relu2", "gelu", "silu")
+
+
+def _apply_activation(y: jax.Array, activation: str) -> jax.Array:
+    if activation == "none":
+        return y
+    if activation == "relu":
+        return jax.nn.relu(y)
+    if activation == "relu2":
+        r = jax.nn.relu(y)
+        return r * r
+    if activation == "gelu":
+        return jax.nn.gelu(y, approximate=True)
+    if activation == "silu":
+        return jax.nn.silu(y)
+    raise ValueError(f"unknown activation {activation!r}; expected one of {ACTIVATIONS}")
+
+
+def _kernel(
+    x_ref, w_ref, s_ref, o_ref, acc_ref, *, group: int, n_k: int, activation: str
+):
     @pl.when(pl.program_id(2) == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
@@ -41,45 +70,129 @@ def _kernel(x_ref, w_ref, s_ref, o_ref, acc_ref, *, group: int, n_k: int):
 
     @pl.when(pl.program_id(2) == n_k - 1)
     def _done():
-        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+        o_ref[...] = _apply_activation(acc_ref[...], activation).astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("group", "bm", "bn", "bk", "interpret"))
+def _kernel_bias(
+    x_ref, w_ref, s_ref, b_ref, o_ref, acc_ref, *, group: int, n_k: int, activation: str
+):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...]
+    w = w_ref[...]
+    s = s_ref[...]
+    bk, bn = w.shape
+    w_f = w.astype(jnp.float32).reshape(bk // group, group, bn) * s[:, None, :]
+    w_f = w_f.reshape(bk, bn).astype(x.dtype)
+    acc_ref[...] += jax.lax.dot_general(
+        x, w_f, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+    @pl.when(pl.program_id(2) == n_k - 1)
+    def _done():
+        y = acc_ref[...] + b_ref[...].astype(jnp.float32)  # (bm,bn) + (1,bn)
+        o_ref[...] = _apply_activation(y, activation).astype(o_ref.dtype)
+
+
+def normalize_tiles(
+    m: int, k: int, n: int, group: int, bm: int, bn: int, bk: int
+) -> tuple[int, int, int]:
+    """Clamp and align a tile request to the (m,k,n,group) problem.
+
+    bk is rounded to a multiple of ``group`` (the dequant reshape needs it);
+    all tiles are clamped to the padded problem extent.  Any remainder is
+    handled by zero-padding in :func:`pvq_matmul`, not by the caller.
+    """
+    def _round_up(v: int, mult: int) -> int:
+        return -(-v // mult) * mult
+
+    # sublane (8) / lane (128) alignment: never tile wider than the padded
+    # problem, never narrower than one aligned vector register row
+    bm = max(min(bm, _round_up(m, 8)), 1)
+    bn = max(min(bn, _round_up(n, 128)), min(n, 128))
+    bk = max(min(bk, k), 1)
+    # bk must be a group multiple for the (bk//group, group, bn) dequant view
+    if bk % group:
+        bk = max((bk // group) * group, min(group, k))
+    return bm, bn, bk
+
+
+def _pad_to(x: jax.Array, axis: int, multiple: int) -> jax.Array:
+    pad = (-x.shape[axis]) % multiple
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("group", "bm", "bn", "bk", "activation", "interpret"),
+)
 def pvq_matmul(
     x: jax.Array,  # (m, k)
     w_pulses: jax.Array,  # (k, n) int8
     scales: jax.Array,  # (k // group, n) f32
+    bias: jax.Array | None = None,  # (n,) optional fused epilogue bias
     *,
     group: int = 128,
     bm: int = 128,
     bn: int = 128,
     bk: int = 128,
+    activation: str = "none",
     interpret: bool = False,
 ) -> jax.Array:
     m, k = x.shape
     k2, n = w_pulses.shape
-    assert k == k2 and k % group == 0
+    assert k == k2, (k, k2)
+    assert k % group == 0, f"contraction dim {k} must be a group ({group}) multiple"
     assert scales.shape == (k // group, n), (scales.shape, (k // group, n))
-    bm = min(bm, m)
-    bn = min(bn, n)
-    bk = min(bk, k)
-    assert m % bm == 0 and n % bn == 0 and k % bk == 0
-    assert bk % group == 0, "group must divide the k-tile"
-    n_k = k // bk
+    assert activation in ACTIVATIONS, f"activation {activation!r} not in {ACTIVATIONS}"
+    if bias is not None:
+        assert bias.shape == (n,), (bias.shape, n)
 
-    return pl.pallas_call(
-        functools.partial(_kernel, group=group, n_k=n_k),
-        grid=(m // bm, n // bn, n_k),
-        in_specs=[
-            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
-            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
-            pl.BlockSpec((bk // group, bn), lambda i, j, kk: (kk, j)),
-        ],
+    bm, bn, bk = normalize_tiles(m, k, n, group, bm, bn, bk)
+
+    # Ragged shapes: zero-pad up to the tile grid, slice the output back.
+    # Zero x-columns / zero pulse-rows contribute nothing to the contraction,
+    # and padded n-columns are dead lanes sliced off below.
+    xp = _pad_to(_pad_to(x, 0, bm), 1, bk)
+    wp = _pad_to(_pad_to(w_pulses, 0, bk), 1, bn)
+    sp = _pad_to(_pad_to(scales, 0, bk // group), 1, bn)
+    mp, kp = xp.shape
+    np_ = wp.shape[1]
+    n_k = kp // bk
+
+    in_specs = [
+        pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+        pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        pl.BlockSpec((bk // group, bn), lambda i, j, kk: (kk, j)),
+    ]
+    operands = [xp, wp, sp]
+    if bias is None:
+        kernel = functools.partial(_kernel, group=group, n_k=n_k, activation=activation)
+    else:
+        kernel = functools.partial(
+            _kernel_bias, group=group, n_k=n_k, activation=activation
+        )
+        in_specs.append(pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)))
+        operands.append(_pad_to(bias.astype(jnp.float32)[None, :], 1, bn))
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(mp // bm, np_ // bn, n_k),
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), x.dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")
         ),
-    )(x, w_pulses, scales)
+    )(*operands)
+    if (mp, np_) != (m, n):
+        out = out[:m, :n]
+    return out

@@ -48,6 +48,13 @@ def main() -> int:
     ap.add_argument("--pvq", action="store_true", help="serve PVQ-quantized weights")
     ap.add_argument("--n-over-k", type=float, default=1.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument(
+        "--tune",
+        action="store_true",
+        help="pre-tune pvq_matmul tiles for this config's decode/prefill GEMM "
+        "shapes and persist them (REPRO_PVQ_TUNE_CACHE); later PVQ-kernel "
+        "dispatch through kernels.ops picks the tuned tiles up transparently",
+    )
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -57,6 +64,29 @@ def main() -> int:
     params = model.init(jax.random.PRNGKey(args.seed), max_seq=args.prompt_len + args.gen)
 
     report = {}
+    if args.tune:
+        from repro.kernels import autotune
+
+        d_model = cfg.d_model
+        d_ff = getattr(cfg, "d_ff", 0) or 4 * d_model
+        group = cfg.pvq.group or 128
+        tuned = {}
+        # decode (m=batch) and prefill (m=batch*prompt) GEMMs of the block
+        for m, k, n in sorted(
+            {
+                (args.batch, d_model, d_model),
+                (args.batch, d_model, d_ff),
+                (args.batch, d_ff, d_model),
+                (args.batch * args.prompt_len, d_model, d_ff),
+            }
+        ):
+            g = group
+            while k % g:  # group must divide the contraction dim
+                g //= 2
+            e = autotune.autotune(m, k, n, group=g)
+            tuned[f"{m}x{k}x{n}"] = {kk: e[kk] for kk in ("bm", "bn", "bk", "us")}
+        report["tuned_tiles"] = tuned
+        report["tune_cache"] = str(autotune.cache_path())
     if args.pvq:
         policy = QuantPolicy(
             rules=(("embedding", cfg.pvq.n_over_k_embed, cfg.pvq.group),

@@ -109,6 +109,52 @@ def dense(p: Params, x: jax.Array) -> jax.Array:
     return y
 
 
+def pvq_quantize_dense(p: Params, *, group: int = 128, k_pulses: int) -> Params:
+    """Convert a float dense param dict to PVQ-kernel serving format.
+
+    Returns ``{"pvq_pulses" int8 (k_pad, n), "pvq_scales" f32 (k_pad//group, n)
+    [, "bias"]}`` — the layout ``repro.kernels.ops.pvq_matmul`` streams from
+    HBM at ~1 byte/weight.  The bias stays float: it rides the kernel's fused
+    epilogue instead of being folded into the pyramid code.
+    """
+    from repro.kernels import ops
+
+    pulses, scales, _ = ops.encode_weight_matrix(
+        p["kernel"].astype(jnp.float32), group=group, k_pulses=k_pulses
+    )
+    q: Params = {"pvq_pulses": pulses, "pvq_scales": scales}
+    if "bias" in p:
+        q["bias"] = p["bias"]
+    return q
+
+
+def pvq_dense(p: Params, x: jax.Array, *, group: int = 128, activation: str = "none") -> jax.Array:
+    """Dense layer on PVQ-kernel params (see :func:`pvq_quantize_dense`).
+
+    Runs the fused dequant-matmul Pallas kernel with the bias + activation
+    epilogue; tiles come from the persistent autotune cache via kernels.ops.
+    Inputs whose feature dim is smaller than the encoded (group-padded)
+    contraction dim are zero-padded — zero lanes meet zero pulses.
+    """
+    from repro.kernels import ops
+
+    pulses = p["pvq_pulses"]
+    lead, k_in = x.shape[:-1], x.shape[-1]
+    xf = x.reshape(-1, k_in).astype(jnp.float32)
+    k_pad = pulses.shape[0]
+    if k_pad != k_in:
+        xf = jnp.pad(xf, ((0, 0), (0, k_pad - k_in)))
+    y = ops.pvq_matmul(
+        xf,
+        pulses,
+        p["pvq_scales"],
+        group=group,
+        bias=p.get("bias"),
+        activation=activation,
+    )
+    return y.reshape(*lead, y.shape[-1]).astype(x.dtype)
+
+
 # ---------------------------------------------------------------------------
 # FFN variants
 # ---------------------------------------------------------------------------

@@ -18,6 +18,7 @@ import numpy as np
 
 from repro.core import PVQCode, pvq_encode, k_for
 from repro.core.qat import bsign
+from repro.nn.layers import pvq_dense, pvq_quantize_dense
 
 
 @dataclasses.dataclass(frozen=True)
@@ -140,6 +141,71 @@ class SequentialNet:
             codes[pname] = code
             stats[pname] = {"N": n, "K": k, "n_over_k": spec.n_over_k}
         return new_params, codes, stats
+
+    def pvq_kernel_encode(
+        self, params: Dict[str, Any], *, group: int = 128
+    ) -> Dict[str, Any]:
+        """Encode every PVQ-eligible fc layer into kernel serving format.
+
+        Unlike :meth:`pvq_encode_layers` (the paper's whole-layer single-rho
+        procedure), this is the TPU serving variant: each (group, out-column)
+        slice gets its own pyramid code, matching what
+        ``repro.kernels.ops.pvq_matmul`` consumes.  K per group comes from the
+        layer's N/K ratio.  Returns {layer_name: kernel-format params}.
+        """
+        kparams: Dict[str, Any] = {}
+        for i, spec in enumerate(self.cfg.layers):
+            pname = f"layer{i}"
+            if spec.kind != "fc" or pname not in params or spec.n_over_k is None:
+                continue
+            k_pulses = k_for(group, spec.n_over_k)
+            kparams[pname] = pvq_quantize_dense(
+                params[pname], group=group, k_pulses=k_pulses
+            )
+        return kparams
+
+    def kernel_apply(
+        self,
+        params: Dict[str, Any],
+        kparams: Dict[str, Any],
+        x: jax.Array,
+        *,
+        group: int = 128,
+    ) -> jax.Array:
+        """Forward pass with fc layers running the fused Pallas kernel.
+
+        Quantized fc layers stream int8 pulses through ``ops.pvq_matmul`` with
+        the bias+activation epilogue fused (bsign stays outside the kernel —
+        it is not an MXU epilogue); unquantized/conv layers fall back to
+        :meth:`apply` semantics.
+        """
+        for i, spec in enumerate(self.cfg.layers):
+            pname = f"layer{i}"
+            if spec.kind == "fc":
+                if x.ndim > 2:
+                    x = x.reshape(x.shape[0], -1)
+                if pname in kparams:
+                    fused = spec.activation if spec.activation in ("relu", "none") else "none"
+                    y = pvq_dense(kparams[pname], x, group=group, activation=fused)
+                    x = y if fused == spec.activation else _act(spec.activation, y)
+                else:
+                    p = params[pname]
+                    x = _act(spec.activation, x @ p["kernel"] + p["bias"])
+            elif spec.kind == "conv":
+                p = params[pname]
+                x = jax.lax.conv_general_dilated(
+                    x, p["kernel"], window_strides=(1, 1), padding="SAME",
+                    dimension_numbers=("NHWC", "HWIO", "NHWC"),
+                )
+                x = _act(spec.activation, x + p["bias"])
+            elif spec.kind == "maxpool":
+                x = jax.lax.reduce_window(
+                    x, -jnp.inf, jax.lax.max,
+                    (1, spec.pool, spec.pool, 1), (1, spec.pool, spec.pool, 1), "VALID",
+                )
+            elif spec.kind == "flatten":
+                x = x.reshape(x.shape[0], -1)
+        return x
 
     def integer_forward(
         self, params: Dict[str, Any], codes: Dict[str, PVQCode], x: jax.Array

@@ -27,7 +27,8 @@ from typing import Any, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.pvq import pvq_encode_grouped, pvq_decode_grouped
+from repro.core.pvq import pvq_encode_grouped
+from repro.kernels import ops as kernel_ops
 
 
 @dataclasses.dataclass(frozen=True)
@@ -46,13 +47,26 @@ class CompressionConfig:
         return 1.0 + 4.0 / self.group
 
 
+def _encode_grouped(flat: jax.Array, cfg: CompressionConfig):
+    """(pulses i32 (G, group), rho f32 (G,)) via the kernel dispatch layer.
+
+    The ``ls`` scale mode rides the sorted O(N log N + ΔK) encoder behind
+    ``kernels.ops`` (Pallas on TPU, jnp fast path elsewhere); other scale
+    modes fall back to the exact core encoder.
+    """
+    if cfg.scale_mode == "ls":
+        return kernel_ops.pvq_encode_grouped_fast(flat, cfg.group, cfg.k)
+    code = pvq_encode_grouped(flat, cfg.group, cfg.k, cfg.scale_mode)
+    return code.pulses, code.scale
+
+
 def compress_decompress(g: jax.Array, cfg: CompressionConfig) -> jax.Array:
     """Quantization channel Q(g): PVQ encode+decode (per-leaf, grouped)."""
     flat = g.reshape(-1).astype(jnp.float32)
     if flat.size < cfg.min_size:
         return g
-    code = pvq_encode_grouped(flat, cfg.group, cfg.k, cfg.scale_mode)
-    deq = pvq_decode_grouped(code, flat.shape[0])
+    pulses, scale = _encode_grouped(flat, cfg)
+    deq = (scale[:, None] * pulses.astype(jnp.float32)).reshape(-1)[: flat.size]
     return deq.reshape(g.shape).astype(g.dtype)
 
 
@@ -88,9 +102,9 @@ def cross_pod_mean(grads: Any, cfg: CompressionConfig, axis: str = "pod") -> Any
         flat = g.reshape(-1).astype(jnp.float32)
         if flat.size < cfg.min_size:
             return jax.lax.pmean(g, axis)
-        code = pvq_encode_grouped(flat, cfg.group, cfg.k, cfg.scale_mode)
-        pulses = code.pulses.astype(jnp.int8)  # (G, group)
-        scales = code.scale.astype(jnp.float32)  # (G,)
+        pulses_i32, scales = _encode_grouped(flat, cfg)
+        pulses = kernel_ops.pulses_to_int8(pulses_i32)  # (G, group) wire format
+        scales = scales.astype(jnp.float32)  # (G,)
         all_pulses = jax.lax.all_gather(pulses, axis)  # (P, G, group)
         all_scales = jax.lax.all_gather(scales, axis)  # (P, G)
         deq = all_pulses.astype(jnp.float32) * all_scales[..., None]

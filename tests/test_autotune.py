@@ -1,0 +1,97 @@
+"""Autotuner tests: candidate generation, persistent JSON cache semantics,
+cache-hit dispatch, and tuned-kernel correctness vs the oracle."""
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import autotune, ops
+from repro.kernels.ref import pvq_matmul_ref
+
+
+@pytest.fixture
+def tune_cache(tmp_path, monkeypatch):
+    """Point the persistent cache at a fresh file, reset the memory mirror."""
+    path = tmp_path / "tune.json"
+    monkeypatch.setenv("REPRO_PVQ_TUNE_CACHE", str(path))
+    autotune.clear_memory_cache()
+    yield path
+    autotune.clear_memory_cache()
+
+
+def test_candidates_aligned_and_bounded():
+    cands = autotune.candidate_tiles(8, 512, 512, group=128, max_candidates=24)
+    assert cands, "no candidates"
+    assert cands[0] == autotune.heuristic_tiles(8, 512, 512, 128)
+    for bm, bn, bk in cands:
+        assert bk % 128 == 0  # group multiple
+        assert bm <= 8 and bn <= 512 and bk <= 512  # clamped to the problem
+    assert len(set(cands)) == len(cands)  # deduped
+
+
+def test_autotune_persists_cache_file(tune_cache):
+    entry = autotune.autotune(8, 128, 128, group=128, reps=1, interpret=True)
+    assert {"bm", "bn", "bk", "us", "candidates"} <= set(entry)
+    assert tune_cache.exists()
+    on_disk = json.loads(tune_cache.read_text())
+    key = autotune.cache_key(8, 128, 128, 128, jnp.float32, jax.default_backend())
+    assert on_disk[key] == entry  # JSON round-trip preserves the entry
+
+
+def test_second_call_skips_search(tune_cache, monkeypatch):
+    entry1 = autotune.autotune(8, 128, 128, group=128, reps=1, interpret=True)
+
+    def boom(*a, **k):  # any timing attempt after the first call is a bug
+        raise AssertionError("search ran despite cache hit")
+
+    monkeypatch.setattr(autotune, "_time_candidate", boom)
+    entry2 = autotune.autotune(8, 128, 128, group=128, reps=1, interpret=True)
+    assert entry2 == entry1
+    # dispatch side: get_tiles must serve the tuned tiles without timing
+    tiles = autotune.get_tiles(8, 128, 128, group=128, search=True, interpret=True)
+    assert tiles == (entry1["bm"], entry1["bn"], entry1["bk"])
+
+
+def test_cache_survives_memory_reset(tune_cache, monkeypatch):
+    """A fresh process (simulated by clearing the mirror) reads the JSON."""
+    entry = autotune.autotune(8, 128, 128, group=128, reps=1, interpret=True)
+    autotune.clear_memory_cache()
+    monkeypatch.setattr(
+        autotune, "_time_candidate", lambda *a, **k: pytest.fail("re-searched")
+    )
+    tiles = autotune.get_tiles(8, 128, 128, group=128, search=True, interpret=True)
+    assert tiles == (entry["bm"], entry["bn"], entry["bk"])
+
+
+def test_get_tiles_heuristic_without_search(tune_cache):
+    tiles = autotune.get_tiles(16, 256, 256, group=128, search=False, interpret=True)
+    assert tiles == autotune.heuristic_tiles(16, 256, 256, 128)
+    assert not tune_cache.exists()  # no search -> no I/O
+
+
+@pytest.mark.parametrize(
+    "m,k,n,group,dtype",
+    [
+        (8, 128, 128, 128, jnp.float32),
+        (16, 256, 128, 64, jnp.float32),
+        (8, 128, 128, 128, jnp.bfloat16),
+        (32, 512, 256, 128, jnp.float32),
+    ],
+)
+def test_tuned_dispatch_matches_ref(tune_cache, m, k, n, group, dtype):
+    """ops.pvq_matmul with autotuned tiles stays correct across a grid."""
+    kx, kw, ks = jax.random.split(jax.random.PRNGKey(m + n), 3)
+    x = jax.random.normal(kx, (m, k), jnp.float32).astype(dtype)
+    pulses = jax.random.randint(kw, (k, n), -3, 4, jnp.int8)
+    scales = jnp.abs(jax.random.normal(ks, (k // group, n))) * 0.05
+    got = ops.pvq_matmul(x, pulses, scales, group=group, tune=True, interpret=True)
+    want = pvq_matmul_ref(x, pulses, scales, group=group)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32),
+        np.asarray(want, np.float32),
+        rtol=2e-2 if dtype == jnp.bfloat16 else 1e-5,
+        atol=1e-1 if dtype == jnp.bfloat16 else 1e-4,
+    )

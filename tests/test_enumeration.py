@@ -2,7 +2,7 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.core import index_bits, index_to_vector, num_points, vector_to_index
 from repro.core.codes import (
