@@ -4,8 +4,9 @@
 
 Prints ``name,us_per_call,derived`` CSV rows (one per benchmark), then a
 human-readable table dump.  Kernel rows are additionally written to
-``BENCH_kernels.json`` (us_per_call + bytes-ratios per kernel/shape) so future
-PRs can diff perf trajectories.
+``BENCH_kernels.json`` (us_per_call + bytes-ratios per kernel/shape) and the
+packed-vs-f32 serving rows to ``BENCH_serve.json`` so future PRs can diff
+perf trajectories.
 """
 
 from __future__ import annotations
@@ -21,7 +22,7 @@ def main() -> None:
     ap.add_argument("--only", default="", help="run only benches whose name starts with this")
     args = ap.parse_args()
 
-    from benchmarks import kernel_bench, paper_tables
+    from benchmarks import kernel_bench, paper_tables, serve_bench
 
     all_rows = []
 
@@ -40,6 +41,7 @@ def main() -> None:
     run("paper_opcount", paper_tables.bench_opcount_claim)
     run("kernel_pvq_matmul", kernel_bench.bench_pvq_matmul)
     run("kernel_pvq_encode", kernel_bench.bench_pvq_encode)
+    run("serve_packed", serve_bench.bench_serve_throughput)
 
     # CSV contract: name,us_per_call,derived
     print("name,us_per_call,derived")
@@ -62,6 +64,20 @@ def main() -> None:
         with open("BENCH_kernels.json", "w") as f:
             json.dump(payload, f, indent=1, default=str)
         print("wrote BENCH_kernels.json", file=sys.stderr)
+
+    # packed-vs-f32 serving trajectory (stable schema for cross-PR diffs)
+    serve_rows = [r for r in all_rows if r["bench_group"].startswith("serve_")]
+    if serve_rows:
+        import jax
+
+        payload = {
+            "schema": "bench-serve-v1",
+            "backend": jax.default_backend(),
+            "rows": serve_rows,
+        }
+        with open("BENCH_serve.json", "w") as f:
+            json.dump(payload, f, indent=1, default=str)
+        print("wrote BENCH_serve.json", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,68 @@
+"""Packed-vs-f32 serving throughput: the artifact the paper promises.
+
+Builds a reduced config, serves the same prompts with (a) float weights and
+(b) the packed PVQ artifact (int8 pulses streamed into the int8-native
+kernel), and reports decode tokens/s plus the weight-bytes ratio.  Rows go
+to ``BENCH_serve.json`` via benchmarks.run for cross-PR perf trajectories.
+
+On this CPU container the Pallas kernel runs interpret=True, so absolute
+packed throughput is a correctness proxy, not a perf claim; the bytes
+ratio and encode time are backend-independent.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+
+def bench_serve_throughput(arch: str = "smollm-360m", *, batch: int = 2,
+                           prompt_len: int = 8, gen: int = 8) -> List[Dict]:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config
+    from repro.core.packed import packed_stats, quantize_params
+    from repro.core.quantize import QuantPolicy
+    from repro.launch.serve import generate
+    from repro.nn.models import build_model
+
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0), max_seq=prompt_len + gen)
+    toks = jax.random.randint(
+        jax.random.PRNGKey(1), (batch, prompt_len), 0, cfg.vocab_size
+    )
+
+    def timed(p):
+        # one warmup generation (trace + compile), then the timed run
+        generate(model, p, toks, gen=gen, cache_len=prompt_len + gen)
+        t0 = time.perf_counter()
+        out = generate(model, p, toks, gen=gen, cache_len=prompt_len + gen)
+        jax.block_until_ready(out)
+        return batch * gen / (time.perf_counter() - t0)
+
+    tps_f32 = timed(params)
+
+    policy = QuantPolicy(
+        rules=(("embedding", cfg.pvq.n_over_k_embed, cfg.pvq.group),
+               ("kernel|experts", cfg.pvq.n_over_k, cfg.pvq.group)),
+        scale_mode="ls",
+    )
+    t0 = time.perf_counter()
+    qparams = quantize_params(params, policy)
+    encode_s = time.perf_counter() - t0
+    st = packed_stats(qparams)
+    tps_packed = timed(qparams)
+
+    return [{
+        "bench": f"serve:{cfg.name}:b{batch}g{gen}",
+        "us_per_call": round(1e6 / max(tps_packed, 1e-9), 1),
+        "tokens_per_s_f32": round(tps_f32, 2),
+        "tokens_per_s_packed": round(tps_packed, 2),
+        "packed_over_f32": round(tps_packed / max(tps_f32, 1e-9), 3),
+        "encode_s": round(encode_s, 2),
+        "packed_tensors": st["packed_tensors"],
+        "packed_bytes": st["packed_bytes"],
+        "weight_compression_ratio": round(st["weight_compression_ratio"], 3),
+    }]

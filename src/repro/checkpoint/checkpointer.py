@@ -5,10 +5,17 @@ Layout:  <dir>/step_<N>/  with one .npy per leaf (flat-keyed), a manifest
 json, and a COMMIT marker written last — restore only trusts committed
 steps, so a mid-write crash can never be restored from (fault tolerance).
 
-``compress='pvq'`` stores matrix leaves as PVQ codes (int8 pulses +
-f32 group scales + Golomb-packed bitstream size report); restore
-dequantizes.  This is *lossy* for the weights (exactly the paper's trade)
-and bit-exact for everything else (moments, step counters).
+Two PVQ paths:
+
+* ``PackedPVQ`` leaves (the unified packed artifact, any compress mode) are
+  stored *as the code*: int8 pulses (nibble-packed when |pulse| <= 7) +
+  f32 scales + the static metadata.  Restore reconstructs the identical
+  ``PackedPVQ`` — bit-exact pulses, **no re-encode** — so a serving job
+  restarts on exactly the artifact it checkpointed.
+* ``compress='pvq'`` additionally re-encodes *dense float* matrix leaves as
+  PVQ codes on save and dequantizes on restore.  This is *lossy* for those
+  weights (exactly the paper's trade) and bit-exact for everything else
+  (moments, step counters).
 """
 
 from __future__ import annotations
@@ -27,28 +34,32 @@ import numpy as np
 
 from repro.core import pvq_encode_grouped, pvq_decode_grouped
 from repro.core.codes import golomb_encode
+from repro.core.packed import PackedPVQ, is_packed
 from repro.core.packing import pack_nibbles, unpack_nibbles
 
 
-def _flatten(tree: Any) -> Dict[str, np.ndarray]:
+def _flatten(tree: Any) -> Dict[str, Any]:
+    """{path: np.ndarray | PackedPVQ} — packed leaves stay whole."""
     flat = {}
 
     def visit(path, leaf):
         key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
-        flat[key] = np.asarray(leaf)
+        flat[key] = leaf if is_packed(leaf) else np.asarray(leaf)
         return leaf
 
-    jax.tree_util.tree_map_with_path(visit, tree)
+    jax.tree_util.tree_map_with_path(visit, tree, is_leaf=is_packed)
     return flat
 
 
-def _unflatten_into(tree: Any, flat: Dict[str, np.ndarray]) -> Any:
+def _unflatten_into(tree: Any, flat: Dict[str, Any]) -> Any:
     def visit(path, leaf):
         key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
         arr = flat[key]
+        if is_packed(arr):
+            return arr
         return jnp.asarray(arr).astype(leaf.dtype).reshape(leaf.shape)
 
-    return jax.tree_util.tree_map_with_path(visit, tree)
+    return jax.tree_util.tree_map_with_path(visit, tree, is_leaf=is_packed)
 
 
 class Checkpointer:
@@ -99,6 +110,31 @@ class Checkpointer:
         manifest: Dict[str, Any] = {"step": step, "leaves": {}, "compress": self.compress}
         for key, arr in flat.items():
             fname = key.replace("/", "__")
+            if is_packed(arr):
+                # the unified packed artifact: store the CODE, never the
+                # dequantized weights — restore is bit-exact, no re-encode
+                pulses = np.asarray(arr.pulses, np.int8)
+                if np.abs(pulses).max(initial=0) <= 7:
+                    packed_bits, pshape = pack_nibbles(pulses)
+                    np.save(tmp / f"{fname}.pulses.npy", packed_bits)
+                    pulse_format = "nibble"
+                else:
+                    np.save(tmp / f"{fname}.pulses.npy", pulses)
+                    pulse_format = "int8"
+                np.save(tmp / f"{fname}.scales.npy", np.asarray(arr.scales, np.float32))
+                manifest["leaves"][key] = {
+                    "codec": "pvq-packed",
+                    "pulse_format": pulse_format,
+                    "pulse_shape": list(pulses.shape),
+                    "scales_shape": list(np.asarray(arr.scales).shape),
+                    "group": int(arr.group),
+                    "k": int(arr.k),
+                    "shape": list(arr.shape),
+                    "dtype": arr.dtype,
+                    "layout": arr.layout,
+                    "scale_mode": arr.scale_mode,
+                }
+                continue
             entry: Dict[str, Any] = {"shape": list(arr.shape), "dtype": str(arr.dtype)}
             is_float = str(arr.dtype) in ("float32", "float16", "bfloat16")
             if (
@@ -172,10 +208,27 @@ class Checkpointer:
                 raise FileNotFoundError(f"no committed checkpoints under {self.dir}")
         d = self.dir / f"step_{step:09d}"
         manifest = json.loads((d / "manifest.json").read_text())
-        flat: Dict[str, np.ndarray] = {}
+        flat: Dict[str, Any] = {}
         for key, entry in manifest["leaves"].items():
             fname = key.replace("/", "__")
-            if entry["codec"] == "pvq":
+            if entry["codec"] == "pvq-packed":
+                raw = np.load(d / f"{fname}.pulses.npy")
+                if entry["pulse_format"] == "nibble":
+                    pulses = unpack_nibbles(raw, tuple(entry["pulse_shape"])).astype(np.int8)
+                else:
+                    pulses = raw.astype(np.int8)
+                scales = np.load(d / f"{fname}.scales.npy").astype(np.float32)
+                flat[key] = PackedPVQ(
+                    pulses=jnp.asarray(pulses),
+                    scales=jnp.asarray(scales.reshape(entry["scales_shape"])),
+                    group=int(entry["group"]),
+                    k=int(entry["k"]),
+                    shape=tuple(entry["shape"]),
+                    dtype=entry["dtype"],
+                    layout=entry["layout"],
+                    scale_mode=entry["scale_mode"],
+                )
+            elif entry["codec"] == "pvq":
                 raw = np.load(d / f"{fname}.pulses.npy")
                 if entry["pulse_format"] == "nibble":
                     pulses = unpack_nibbles(raw, tuple(entry["pulse_shape"]))

@@ -16,6 +16,18 @@ from .enumeration import num_points, index_bits, vector_to_index, index_to_vecto
 from .quantize import QuantPolicy, quantize_tree, quantize_array, tree_compression_report, total_bits, k_for
 from .qat import pvq_ste, bsign, k_annealing_stages
 from .fold import fold_codes, check_homogeneity
+from .packed import (
+    PackedPVQ,
+    is_packed,
+    materialize,
+    pack_matmul,
+    pack_flat,
+    quantize_params,
+    dequantize_params,
+    packed_leaves,
+    packed_stats,
+    packed_update,
+)
 
 __all__ = [
     "PVQCode",
@@ -43,4 +55,14 @@ __all__ = [
     "k_annealing_stages",
     "fold_codes",
     "check_homogeneity",
+    "PackedPVQ",
+    "is_packed",
+    "materialize",
+    "pack_matmul",
+    "pack_flat",
+    "quantize_params",
+    "dequantize_params",
+    "packed_leaves",
+    "packed_stats",
+    "packed_update",
 ]

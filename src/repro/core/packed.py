@@ -1,0 +1,395 @@
+"""The unified packed PVQ parameter representation.
+
+``PackedPVQ`` is the *single* quantized-weight artifact of this repo: the
+int8 pulse tensor plus per-group f32 scales, carried together with the
+static metadata (group size, pulse budget K, original shape/dtype, layout)
+needed to consume it anywhere — the Pallas int8-native matmul, the serving
+layers, the checkpointer, the sharding rules, and the gradient pipeline all
+speak this one type.  The paper's value proposition is exactly this: the
+PVQ code is both the storage format (≈1 byte/weight before entropy coding)
+and the compute format (adds/subs + ONE multiply per group), so a weight is
+encoded once and never expanded back to a full f32 matrix on the hot path.
+
+Two physical layouts:
+
+* ``'matmul'`` — pulses ``(k_pad, n)`` int8 / scales ``(k_pad//group, n)``
+  f32, the exact HBM layout ``repro.kernels.ops.pvq_matmul`` streams.  Used
+  for 2-D dense kernels (and their scan-stacked ``(repeats, k_pad, n)``
+  variants: the leading axes ride along as batch dims, so ``lax.scan``
+  slices a packed layer per step with zero repacking).
+* ``'flat'`` — pulses ``(G, group)`` int8 / scales ``(G,)`` f32, row-major
+  groups of the flattened original tensor.  Used for embeddings (group is
+  chosen to divide ``d`` so a token row maps to whole groups — lookups
+  gather + dequantize only the touched rows) and any other non-matmul leaf.
+
+``PackedPVQ`` is registered as a pytree node with named children
+(``pulses``/``scales``); the metadata is static aux data.  That makes packed
+params transparently compatible with ``jit``, ``lax.scan`` over stacked
+layers, ``jax.device_put`` with shardings, and the checkpointer's
+path-keyed flattening.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .quantize import QuantPolicy, _path_str, k_for
+
+Array = jax.Array
+
+#: leaves the packed policy must never touch even when a rule matches:
+#: conv kernels and learned positions are consumed raw (einsum / dynamic
+#: slice), and the MLA absorbed-decode b-projections are reshaped per head
+#: at decode time — packing them would force a per-step dequant.
+PACK_SKIP_REGEX = r"(conv_kernel|pos_embedding|wk_b|wv_b|time_|router)"
+
+
+def _fit_group(group: int, dim: int) -> int:
+    """Largest power-of-two divisor chain of ``group`` that divides ``dim``."""
+    g = max(int(group), 1)
+    while g > 1 and dim % g:
+        g //= 2
+    return max(g, 1)
+
+
+def matmul_plan(group: int, d_in: int) -> Tuple[int, int]:
+    """(effective group, group-padded contraction dim) for a matmul-layout
+    pack of a ``(d_in, n)`` kernel.  This is THE shape derivation the packed
+    artifact dispatches with — anything pre-tuning kernel tiles (e.g.
+    ``launch/serve.py --tune``) must key on exactly these values."""
+    g = _fit_group(group, d_in) if d_in < group else int(group)
+    k_pad = -(-d_in // g) * g
+    return g, k_pad
+
+
+def _resolve_k(g: int, n_over_k: Optional[float], k: Optional[int]) -> int:
+    if (n_over_k is None) == (k is None):
+        raise ValueError("pass exactly one of n_over_k / k")
+    return int(k) if k is not None else k_for(g, n_over_k)
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class PackedPVQ:
+    """One PVQ-coded tensor: int8 pulses + per-group f32 scales + metadata.
+
+    ``shape``/``dtype`` describe the logical dense tensor (unstacked — extra
+    leading axes on ``pulses``/``scales`` are treated as batch/stack dims).
+    """
+
+    pulses: Array  # int8; 'matmul': (..., k_pad, n)  'flat': (..., G, group)
+    scales: Array  # f32;  'matmul': (..., k_pad//group, n)  'flat': (..., G)
+    group: int  # group size (static)
+    k: int  # pulse budget per group (static)
+    shape: Tuple[int, ...]  # logical dense shape (unstacked)
+    dtype: str  # logical dense dtype name
+    layout: str = "matmul"  # 'matmul' | 'flat'
+    scale_mode: str = "ls"
+
+    # ------------------------------------------------------------- properties
+
+    @property
+    def k_pad(self) -> int:
+        """Group-padded contraction extent (matmul layout)."""
+        return int(self.pulses.shape[-2]) if self.layout == "matmul" else 0
+
+    @property
+    def nbytes_packed(self) -> int:
+        """HBM bytes of the packed artifact (int8 pulses + f32 scales)."""
+        return int(np.prod(self.pulses.shape)) + 4 * int(np.prod(self.scales.shape))
+
+    @property
+    def nbytes_dense(self) -> int:
+        """Bytes of the dense tensor this replaces (at its logical dtype)."""
+        lead = self.pulses.shape[: self.pulses.ndim - 2]
+        itemsize = jnp.dtype(self.dtype).itemsize
+        return int(np.prod(lead, initial=1)) * int(np.prod(self.shape)) * itemsize
+
+    # ------------------------------------------------------------ dequantize
+
+    def dequantize(self, dtype=None) -> Array:
+        """Expand back to the logical dense tensor (leading stack dims kept).
+
+        This is the *cold* path — tests, tooling, and the few consumers with
+        no packed compute path.  Hot paths stream ``pulses``/``scales``.
+        """
+        out_dtype = jnp.dtype(dtype if dtype is not None else self.dtype)
+        p = self.pulses.astype(jnp.float32)
+        if self.layout == "matmul":
+            w = p * jnp.repeat(self.scales, self.group, axis=-2)
+            lead = w.shape[:-2]
+            w = w[..., : self.shape[-2], :]
+            return w.reshape(*lead, *self.shape).astype(out_dtype)
+        deq = p * self.scales[..., None]
+        lead = deq.shape[:-2]
+        flat = deq.reshape(*lead, -1)[..., : int(np.prod(self.shape))]
+        return flat.reshape(*lead, *self.shape).astype(out_dtype)
+
+    def __repr__(self) -> str:  # keep pytree dumps readable
+        return (
+            f"PackedPVQ(shape={self.shape}, dtype={self.dtype}, layout={self.layout!r}, "
+            f"group={self.group}, k={self.k}, pulses={tuple(self.pulses.shape)})"
+        )
+
+
+def _packed_flatten_with_keys(p: PackedPVQ):
+    children = (
+        (jax.tree_util.DictKey("pulses"), p.pulses),
+        (jax.tree_util.DictKey("scales"), p.scales),
+    )
+    aux = (p.group, p.k, p.shape, p.dtype, p.layout, p.scale_mode)
+    return children, aux
+
+
+def _packed_unflatten(aux, children):
+    group, k, shape, dtype, layout, scale_mode = aux
+    return PackedPVQ(
+        pulses=children[0], scales=children[1], group=group, k=k,
+        shape=shape, dtype=dtype, layout=layout, scale_mode=scale_mode,
+    )
+
+
+jax.tree_util.register_pytree_with_keys(
+    PackedPVQ,
+    _packed_flatten_with_keys,
+    lambda aux, xs: _packed_unflatten(aux, xs),
+)
+
+
+def is_packed(leaf: Any) -> bool:
+    return isinstance(leaf, PackedPVQ)
+
+
+def materialize(leaf: Any, dtype=None) -> Array:
+    """Dense view of a (possibly packed) leaf — the sanctioned escape hatch
+    for consumers without a packed compute path."""
+    if is_packed(leaf):
+        return leaf.dequantize(dtype)
+    return leaf if dtype is None else leaf.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Encoding single arrays
+# ---------------------------------------------------------------------------
+
+
+def pack_matmul(
+    w: Array, *, group: int, n_over_k: Optional[float] = None,
+    k: Optional[int] = None, scale_mode: str = "ls",
+    interpret: Optional[bool] = None,
+) -> PackedPVQ:
+    """Encode a dense weight matrix (contraction dim first) into the
+    kernel-native matmul layout.  A 3-D input is treated as a scan stack
+    ``(repeats, d_in, d_out)`` and encoded per repeat.  Pass either the
+    paper's ``n_over_k`` ratio (K derived from the *effective* group) or an
+    explicit per-group ``k`` (used verbatim, even if the group is fitted
+    down to divide ``d_in``)."""
+    from repro.kernels import ops  # deferred: core must stay importable alone
+
+    if w.ndim == 3:
+        packed = [
+            pack_matmul(w[i], group=group, n_over_k=n_over_k, k=k,
+                        scale_mode=scale_mode, interpret=interpret)
+            for i in range(w.shape[0])
+        ]
+        return PackedPVQ(
+            pulses=jnp.stack([p.pulses for p in packed]),
+            scales=jnp.stack([p.scales for p in packed]),
+            group=packed[0].group, k=packed[0].k, shape=packed[0].shape,
+            dtype=str(w.dtype), layout="matmul", scale_mode=scale_mode,
+        )
+    if w.ndim != 2:
+        raise ValueError(f"matmul layout needs a 2-D/3-D tensor, got {w.shape}")
+    d_in, _ = w.shape
+    g, _ = matmul_plan(group, d_in)
+    k = _resolve_k(g, n_over_k, k)
+    pulses, scales, _ = ops.encode_weight_matrix(
+        w.astype(jnp.float32), group=g, k_pulses=k, interpret=interpret
+    )
+    # encode_weight_matrix emits the 'ls' scale natively — but it fits rho
+    # against the *unclamped* int32 pulses.  When K > 127 a coordinate may
+    # legally exceed the int8 range and get clamped, so refit the scale from
+    # the pulses actually stored (the artifact must be self-consistent);
+    # non-'ls' scale modes always recompute.
+    if scale_mode != "ls" or k > 127:
+        from .pvq import _scales
+
+        k_pad = pulses.shape[0]
+        pad = k_pad - d_in
+        wp = jnp.pad(w.astype(jnp.float32), ((0, pad), (0, 0))) if pad else w.astype(jnp.float32)
+        wg = wp.T.reshape(wp.shape[1], k_pad // g, g)
+        pg = pulses.T.reshape(pulses.shape[1], k_pad // g, g)
+        scales = _scales(wg, pg, scale_mode).T.astype(jnp.float32)
+    return PackedPVQ(
+        pulses=pulses, scales=scales, group=g, k=k, shape=tuple(w.shape),
+        dtype=str(w.dtype), layout="matmul", scale_mode=scale_mode,
+    )
+
+
+def pack_flat(
+    w: Array, *, group: int, n_over_k: Optional[float] = None,
+    k: Optional[int] = None, scale_mode: str = "ls",
+    row_align: Optional[int] = None,
+) -> PackedPVQ:
+    """Encode any tensor as row-major groups of its flattening.
+
+    ``row_align`` (e.g. the embedding dim) shrinks the group so it divides
+    the row length — then every original row covers whole groups and row
+    gathers touch only that row's codes.  K comes from ``n_over_k`` (scaled
+    with the effective group) or is passed explicitly via ``k``.
+    """
+    from repro.kernels import ops
+
+    g = _fit_group(group, row_align) if row_align else int(group)
+    k = _resolve_k(g, n_over_k, k)
+    flat = w.reshape(-1).astype(jnp.float32)
+    pulses_i32, scales = ops.pvq_encode_grouped_fast(flat, g, k, scale_mode=scale_mode)
+    pulses = ops.pulses_to_int8(pulses_i32)
+    if k > 127:
+        # K > 127 permits clamped coordinates: refit rho from stored pulses
+        from .pvq import _scales
+
+        pad = (-flat.shape[0]) % g
+        wg = (jnp.pad(flat, (0, pad)) if pad else flat).reshape(-1, g)
+        scales = _scales(wg, pulses, scale_mode)
+    scales = scales.astype(jnp.float32)
+    return PackedPVQ(
+        pulses=pulses, scales=scales, group=g, k=k, shape=tuple(w.shape),
+        dtype=str(w.dtype), layout="flat", scale_mode=scale_mode,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Tree transforms
+# ---------------------------------------------------------------------------
+
+
+def _pack_leaf(
+    pstr: str, leaf: Array, n_over_k: float, group: Optional[int],
+    scale_mode: str, interpret: Optional[bool],
+) -> Optional[PackedPVQ]:
+    """Pack one leaf if a packed consumer exists for it; else None."""
+    g = group or 256
+    if re.search(PACK_SKIP_REGEX, pstr):
+        return None
+    if re.search(r"(^|/)embedding$", pstr) and leaf.ndim == 2:
+        return pack_flat(
+            leaf, group=g, n_over_k=n_over_k, scale_mode=scale_mode,
+            row_align=leaf.shape[-1],
+        )
+    if re.search(r"kernel$", pstr) and leaf.ndim in (2, 3):
+        return pack_matmul(
+            leaf, group=g, n_over_k=n_over_k, scale_mode=scale_mode,
+            interpret=interpret,
+        )
+    return None
+
+
+def quantize_params(
+    params: Any,
+    policy: QuantPolicy,
+    *,
+    min_size: int = 64,
+    interpret: Optional[bool] = None,
+) -> Any:
+    """Encode a model pytree once into a mixed pytree of ``PackedPVQ`` leaves
+    (dense kernels, embeddings) and untouched leaves (norms, biases, and
+    anything without a packed consumer).
+
+    The result is the deployment artifact: serve it, checkpoint it, shard
+    it — the pulses are never re-encoded and never expanded to a full f32
+    matrix on the decode path.
+    """
+
+    def visit(path, leaf):
+        if is_packed(leaf):
+            return leaf  # idempotent: already the artifact
+        if not isinstance(leaf, (jax.Array, np.ndarray)) or leaf.ndim < 2:
+            return leaf
+        if leaf.size < min_size or not jnp.issubdtype(leaf.dtype, jnp.floating):
+            return leaf
+        pstr = _path_str(path)
+        m = policy.match(pstr)
+        if m is None:
+            return leaf
+        n_over_k, group = m
+        packed = _pack_leaf(
+            pstr, jnp.asarray(leaf), n_over_k, group, policy.scale_mode, interpret
+        )
+        return leaf if packed is None else packed
+
+    return jax.tree_util.tree_map_with_path(visit, params, is_leaf=is_packed)
+
+
+def dequantize_params(params: Any) -> Any:
+    """Inverse transform: expand every ``PackedPVQ`` leaf back to dense."""
+    return jax.tree.map(materialize, params, is_leaf=is_packed)
+
+
+def packed_leaves(params: Any) -> Dict[str, PackedPVQ]:
+    """{path: PackedPVQ} for every packed leaf (reporting/tests)."""
+    out: Dict[str, PackedPVQ] = {}
+
+    def visit(path, leaf):
+        if is_packed(leaf):
+            out[_path_str(path)] = leaf
+        return leaf
+
+    jax.tree_util.tree_map_with_path(visit, params, is_leaf=is_packed)
+    return out
+
+
+def packed_stats(params: Any) -> Dict[str, float]:
+    """Aggregate artifact-size report for a mixed pytree."""
+    packed_bytes = 0
+    replaced_dense_bytes = 0
+    untouched_bytes = 0
+    n_packed = 0
+    for leaf in jax.tree.leaves(params, is_leaf=is_packed):
+        if is_packed(leaf):
+            packed_bytes += leaf.nbytes_packed
+            replaced_dense_bytes += leaf.nbytes_dense
+            n_packed += 1
+        elif isinstance(leaf, (jax.Array, np.ndarray)):
+            untouched_bytes += int(leaf.size) * jnp.dtype(leaf.dtype).itemsize
+    return {
+        "packed_tensors": n_packed,
+        "packed_bytes": packed_bytes,
+        "replaced_dense_bytes": replaced_dense_bytes,
+        "untouched_bytes": untouched_bytes,
+        "weight_compression_ratio": replaced_dense_bytes / max(packed_bytes, 1),
+        "total_bytes": packed_bytes + untouched_bytes,
+    }
+
+
+# ---------------------------------------------------------------------------
+# Update semantics
+# ---------------------------------------------------------------------------
+
+
+def packed_update(packed: PackedPVQ, delta: Array) -> PackedPVQ:
+    """Apply a dense additive update to a packed leaf: dequantize, add,
+    re-encode onto the same pyramid (same layout/group/K).
+
+    This is the *explicit* re-encode point for fine-tuning or EMA on a
+    packed artifact; the gradient pipeline (``optim.grad_compress``) treats
+    packed leaves as frozen unless the caller opts in via this helper.
+    """
+    dense = packed.dequantize(jnp.float32)
+    lead = packed.pulses.shape[: packed.pulses.ndim - 2]
+    updated = dense + delta.astype(jnp.float32).reshape(*lead, *packed.shape)
+    if packed.layout == "matmul":
+        return pack_matmul(
+            updated.astype(packed.dtype), group=packed.group, k=packed.k,
+            scale_mode=packed.scale_mode,
+        )
+    return pack_flat(
+        updated.astype(packed.dtype), group=packed.group, k=packed.k,
+        scale_mode=packed.scale_mode,
+        row_align=packed.shape[-1] if len(packed.shape) >= 2 else None,
+    )

@@ -12,19 +12,36 @@ from __future__ import annotations
 
 from typing import Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from .pvq import PVQCode
 
 
-def pulses_to_int8(code: PVQCode) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """(int8 pulses, f32 scales). Raises if any pulse magnitude exceeds 127."""
+def pulses_to_int8(code: PVQCode, *, debug: bool = False) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(int8 pulses, f32 scales).
+
+    The int8-range check is *static*: a P(N, K) coordinate is bounded by K
+    (the whole L1 budget on one axis), so ``code.k <= 127`` guarantees the
+    cast is lossless without ever inspecting trace-time values — this
+    function is safe under ``jit`` (the old ``int(jnp.max(...))`` forced a
+    host sync and raised ``TracerConversionError`` when traced).
+    ``debug=True`` adds a host-callback runtime check of the actual range.
+    """
+    if code.k > 127:
+        raise ValueError(
+            f"pulse budget K={code.k} exceeds the int8 coordinate bound 127; "
+            "use kernels.ops.pulses_to_int8 for an explicit clamp"
+        )
     p = code.pulses
-    # A P(N,K) coordinate is bounded by K; check the actual range.
-    maxabs = jnp.max(jnp.abs(p))
-    if int(maxabs) > 127:
-        raise ValueError(f"pulse magnitude {int(maxabs)} exceeds int8 range")
+    if debug:
+
+        def _check(maxabs):
+            if int(maxabs) > 127:
+                raise ValueError(f"pulse magnitude {int(maxabs)} exceeds int8 range")
+
+        jax.debug.callback(_check, jnp.max(jnp.abs(p)))
     return p.astype(jnp.int8), code.scale.astype(jnp.float32)
 
 

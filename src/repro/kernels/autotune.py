@@ -11,7 +11,10 @@ Cache
 -----
 * location: ``$REPRO_PVQ_TUNE_CACHE`` if set, else
   ``~/.cache/repro/pvq_tune_cache.json``
-* key: ``"m x k x n : g<group> : <dtype> : <backend> : v1"`` (no spaces)
+* key: ``"m x k x n : g<group> : <dtype> : <backend> : kv<N> : v2"`` (no
+  spaces) — ``kv<N>`` is ``pvq_matmul.KERNEL_VERSION``, so a material kernel
+  body change (e.g. the v2 int8-native contraction) invalidates every tile
+  timing measured against the old body instead of silently serving it.
 * value: ``{"bm":…, "bn":…, "bk":…, "us":…, "candidates":…}``
 
 Dispatch contract (used by ``kernels.ops.pvq_matmul``):
@@ -38,9 +41,11 @@ from typing import Dict, Iterable, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from .pvq_matmul import normalize_tiles, pvq_matmul
+from .pvq_matmul import KERNEL_VERSION, normalize_tiles, pvq_matmul
 
-_SCHEMA = "v1"
+# v2: keys carry the kernel-body version tag (ROADMAP "tuned-tile
+# invalidation") — entries tuned against an older kernel body miss.
+_SCHEMA = "v2"
 # process-local mirror of the JSON file: avoids re-reading per dispatch
 _MEM: Dict[str, dict] = {}
 _MEM_LOADED_FROM: Optional[str] = None
@@ -60,7 +65,10 @@ def cache_path() -> Path:
 
 
 def cache_key(m: int, k: int, n: int, group: int, dtype, backend: str) -> str:
-    return f"{m}x{k}x{n}:g{group}:{jnp.dtype(dtype).name}:{backend}:{_SCHEMA}"
+    return (
+        f"{m}x{k}x{n}:g{group}:{jnp.dtype(dtype).name}:{backend}"
+        f":kv{KERNEL_VERSION}:{_SCHEMA}"
+    )
 
 
 def _load() -> Dict[str, dict]:

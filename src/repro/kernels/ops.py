@@ -15,6 +15,10 @@ autotuning, and the int8 pulse contract live in exactly one place:
   is the one sanctioned cast/clamp boundary, and
   :func:`encode_weight_matrix` produces matmul-ready (int8 pulses, scales)
   directly.
+* packed artifacts: :func:`packed_matmul` streams a
+  ``repro.core.packed.PackedPVQ`` (matmul layout) straight into the kernel —
+  the int8 pulses and f32 scales go to VMEM as-is; no dequantized weight
+  matrix ever exists.
 """
 
 from __future__ import annotations
@@ -77,6 +81,44 @@ def pvq_matmul(
     )
 
 
+def packed_matmul(
+    x,
+    packed,
+    *,
+    bias=None,
+    activation: str = "none",
+    interpret: bool | None = None,
+    tune: bool | None = None,
+):
+    """``act(x @ dequant(packed) + bias)`` on a matmul-layout ``PackedPVQ``
+    without ever dequantizing: pulses/scales stream into the int8-native
+    kernel and rho lands on the accumulator.
+
+    ``x``: (m, d_in) with ``d_in <= packed.k_pad``; the group-padding columns
+    are zero-filled here (zero lanes meet zero pulses).
+    """
+    if packed.layout != "matmul":
+        raise ValueError(f"packed_matmul needs layout='matmul', got {packed.layout!r}")
+    if packed.pulses.ndim != 2:
+        raise ValueError(
+            f"packed_matmul takes one matrix; got stacked pulses {packed.pulses.shape} "
+            "(slice the leading stack axis, e.g. inside lax.scan)"
+        )
+    k_pad = packed.pulses.shape[0]
+    if x.shape[-1] != k_pad:
+        x = jnp.pad(x, ((0, 0), (0, k_pad - x.shape[-1])))
+    return pvq_matmul(
+        x,
+        packed.pulses,
+        packed.scales,
+        group=packed.group,
+        bias=bias,
+        activation=activation,
+        interpret=interpret,
+        tune=tune,
+    )
+
+
 # ---------------------------------------------------------------------------
 # encoder
 # ---------------------------------------------------------------------------
@@ -105,9 +147,12 @@ def pvq_encode(
 def pulses_to_int8(pulses: jax.Array) -> jax.Array:
     """The sanctioned int32 -> int8 pulse boundary for the matmul kernel.
 
-    PVQ pulse magnitudes are bounded by K per group; for every supported
-    config (K <= group) a single coordinate never exceeds 127, but the clamp
-    makes the contract explicit rather than a silent overflow wrap.
+    A P(N, K) coordinate is bounded by K, so K <= 127 is always lossless.
+    For K > 127 a coordinate may legally exceed the int8 range and the clamp
+    is lossy — callers that persist the clamped code MUST refit the scale
+    against the clamped pulses (``core.packed`` does) so the stored artifact
+    stays self-consistent; the clamp here just makes the boundary explicit
+    rather than a silent overflow wrap.
     """
     return jnp.clip(pulses, -127, 127).astype(jnp.int8)
 

@@ -1,16 +1,24 @@
-"""Fused PVQ dequant-matmul Pallas TPU kernel.
+"""Fused PVQ int8-native matmul Pallas TPU kernel.
 
 Computes ``y = act(x @ (w_pulses * rho) + bias)`` where ``w_pulses`` is the
 int8 PVQ pulse tensor (K-sparse per group, |pulse| small) and ``rho`` holds
 one f32 scale per (contraction-group, output-column).  This is the TPU-native
 form of the paper's "K-1 adds + ONE multiplication" dot product: the integer
 pulse matrix streams from HBM at 1 byte/weight (2-4x less than bf16/f32 — the
-win for weight-memory-bound decode/MoE ops), is dequantized in VMEM, and the
-single rho multiply is fused per group before the MXU contraction.
+win for weight-memory-bound decode/MoE ops) and feeds the MXU *as integers*.
 
-Epilogue fusion (beyond the seed kernel): an optional bias add and activation
-run inside the final ``@pl.when`` store, so a quantized dense layer costs one
-HBM round-trip for the output instead of three (matmul out + bias + act).
+Int8-native contraction (kernel v2): the old body materialized a dequantized
+``(bk, bn)`` f32/bf16 weight tile in VMEM (``w * rho`` expanded per element)
+before a single big dot.  The v2 body never builds that tile — it contracts
+each ``(bm, group) x (group, bn)`` slice with the raw int8 pulses (the cast
+to the MXU input dtype fuses into the matmul feed; on v5e+ the MXU consumes
+int8 directly) and applies rho to the ``(bm, bn)`` f32 *accumulator*, i.e.
+ONE multiply per group exactly as the paper counts it.  VMEM traffic per
+tile drops by the dequantized-weight materialization (4 bytes/weight).
+
+Epilogue fusion: an optional bias add and activation run inside the final
+``@pl.when`` store, so a quantized dense layer costs one HBM round-trip for
+the output instead of three (matmul out + bias + act).
 
 Tiling: grid (m/bm, n/bn, k/bk); x tile (bm,bk) VMEM, w tile (bk,bn) int8
 VMEM, rho tile (bk/group, bn) f32 VMEM, f32 accumulator scratch (bm,bn).
@@ -32,6 +40,10 @@ from jax.experimental.pallas import tpu as pltpu
 # jax renamed TPUCompilerParams -> CompilerParams across 0.4.x/0.5.x
 _CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
 
+#: bumped whenever the kernel body changes materially; feeds the autotune
+#: cache key so stale tile timings from an older body never win dispatch.
+KERNEL_VERSION = 2  # v2: int8-native contraction, rho on the accumulator
+
 ACTIVATIONS = ("none", "relu", "relu2", "gelu", "silu")
 
 
@@ -50,6 +62,37 @@ def _apply_activation(y: jax.Array, activation: str) -> jax.Array:
     raise ValueError(f"unknown activation {activation!r}; expected one of {ACTIVATIONS}")
 
 
+#: beyond this many groups per k-tile the unrolled per-group dot chain costs
+#: more than the dequantized-tile materialization it avoids (and bloats the
+#: interpret-mode proxy); fall back to the v1 dequant-in-VMEM body there.
+_MAX_UNROLL_GROUPS = 8
+
+
+def _accumulate_int8(x, w, s, group: int, acc_ref) -> None:
+    """Int8-native tile contraction: per group-slice, contract the raw int8
+    pulses against x (the dtype convert fuses into the MXU feed — no
+    dequantized (bk, bn) weight tile is ever materialized in VMEM) and apply
+    the group's rho row to the f32 accumulator: ONE multiply per group."""
+    bk, bn = w.shape
+    n_groups = bk // group
+    if n_groups > _MAX_UNROLL_GROUPS:
+        # v1 fallback: one big dot on a dequantized tile — bounded unroll
+        w_f = w.astype(jnp.float32).reshape(n_groups, group, bn) * s[:, None, :]
+        acc_ref[...] += jax.lax.dot_general(
+            x, w_f.reshape(bk, bn).astype(x.dtype), (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        return
+    for g in range(n_groups):
+        xg = x[:, g * group : (g + 1) * group]  # (bm, group)
+        wg = w[g * group : (g + 1) * group, :]  # (group, bn) int8
+        part = jax.lax.dot_general(
+            xg, wg.astype(x.dtype), (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        acc_ref[...] += part * s[g, :][None, :]
+
+
 def _kernel(
     x_ref, w_ref, s_ref, o_ref, acc_ref, *, group: int, n_k: int, activation: str
 ):
@@ -57,16 +100,8 @@ def _kernel(
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    x = x_ref[...]  # (bm, bk)
-    w = w_ref[...]  # (bk, bn) int8
-    s = s_ref[...]  # (bk // group, bn) f32
-    bk, bn = w.shape
-    # dequantize in VMEM: per-group rho applied to the pulse block
-    w_f = w.astype(jnp.float32).reshape(bk // group, group, bn) * s[:, None, :]
-    w_f = w_f.reshape(bk, bn).astype(x.dtype)
-    acc_ref[...] += jax.lax.dot_general(
-        x, w_f, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
-    )
+    # x (bm, bk) / w (bk, bn) int8 / s (bk // group, bn) f32
+    _accumulate_int8(x_ref[...], w_ref[...], s_ref[...], group, acc_ref)
 
     @pl.when(pl.program_id(2) == n_k - 1)
     def _done():
@@ -80,15 +115,7 @@ def _kernel_bias(
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    x = x_ref[...]
-    w = w_ref[...]
-    s = s_ref[...]
-    bk, bn = w.shape
-    w_f = w.astype(jnp.float32).reshape(bk // group, group, bn) * s[:, None, :]
-    w_f = w_f.reshape(bk, bn).astype(x.dtype)
-    acc_ref[...] += jax.lax.dot_general(
-        x, w_f, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
-    )
+    _accumulate_int8(x_ref[...], w_ref[...], s_ref[...], group, acc_ref)
 
     @pl.when(pl.program_id(2) == n_k - 1)
     def _done():

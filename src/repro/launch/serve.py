@@ -4,6 +4,13 @@ weights (the paper's inference-cost story).
 
     PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m --reduced \
         --batch 4 --prompt-len 16 --gen 16 [--pvq]
+
+``--pvq`` serves the *packed* artifact: the model pytree is encoded ONCE
+into ``PackedPVQ`` leaves (int8 pulses + f32 group scales) and the decode
+loop streams those codes straight into the int8-native Pallas matmul —
+no per-layer re-encode, no full-matrix f32 dequantization anywhere on the
+hot path.  ``--pvq-sim`` keeps the old dequantize-back-to-f32 simulation
+(same numerics as the paper tables, none of the memory win) for A/B runs.
 """
 
 from __future__ import annotations
@@ -16,6 +23,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get_config
+from repro.core.packed import packed_stats, quantize_params
 from repro.core.quantize import QuantPolicy, quantize_tree, total_bits
 from repro.nn.models import build_model
 
@@ -45,7 +53,18 @@ def main() -> int:
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=16)
-    ap.add_argument("--pvq", action="store_true", help="serve PVQ-quantized weights")
+    ap.add_argument(
+        "--pvq",
+        action="store_true",
+        help="serve the packed PVQ artifact (int8 pulses streamed into the "
+        "int8-native kernel; encode once, zero dequant on the hot path)",
+    )
+    ap.add_argument(
+        "--pvq-sim",
+        action="store_true",
+        help="legacy dequantized simulation: encode then expand back to f32 "
+        "(paper-table numerics, no memory win)",
+    )
     ap.add_argument("--n-over-k", type=float, default=1.0)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument(
@@ -65,13 +84,17 @@ def main() -> int:
 
     report = {}
     if args.tune:
+        from repro.core.packed import matmul_plan
         from repro.kernels import autotune
 
         d_model = cfg.d_model
         d_ff = getattr(cfg, "d_ff", 0) or 4 * d_model
         group = cfg.pvq.group or 128
         tuned = {}
-        # decode (m=batch) and prefill (m=batch*prompt) GEMMs of the block
+        # decode (m=batch) and prefill (m=batch*prompt) GEMMs of the block,
+        # keyed exactly as the packed artifact will dispatch them (same
+        # effective group + group-padded contraction dim via matmul_plan) —
+        # otherwise the pre-tuned entries can never be cache hits
         for m, k, n in sorted(
             {
                 (args.batch, d_model, d_model),
@@ -80,24 +103,32 @@ def main() -> int:
                 (args.batch * args.prompt_len, d_model, d_ff),
             }
         ):
-            g = group
-            while k % g:  # group must divide the contraction dim
-                g //= 2
-            e = autotune.autotune(m, k, n, group=g)
-            tuned[f"{m}x{k}x{n}"] = {kk: e[kk] for kk in ("bm", "bn", "bk", "us")}
+            g, k_pad = matmul_plan(group, k)
+            e = autotune.autotune(m, k_pad, n, group=g)
+            tuned[f"{m}x{k_pad}x{n}"] = {kk: e[kk] for kk in ("bm", "bn", "bk", "us")}
         report["tuned_tiles"] = tuned
         report["tune_cache"] = str(autotune.cache_path())
-    if args.pvq:
+    if args.pvq or args.pvq_sim:
         policy = QuantPolicy(
             rules=(("embedding", cfg.pvq.n_over_k_embed, cfg.pvq.group),
                    ("kernel|experts", args.n_over_k, cfg.pvq.group)),
             scale_mode="ls",
         )
         t0 = time.time()
-        params, codes, _ = quantize_tree(params, policy)
+        if args.pvq_sim:
+            params, codes, _ = quantize_tree(params, policy)
+            report["pvq_mode"] = "dequant-sim"
+            report["pvq_tensors"] = len(codes)
+            report.update({k: round(v, 3) for k, v in total_bits(codes).items()
+                           if "ratio" in k or "bits_per" in k})
+        else:
+            params = quantize_params(params, policy)
+            st = packed_stats(params)
+            report["pvq_mode"] = "packed"
+            report["pvq_tensors"] = st["packed_tensors"]
+            report["packed_bytes"] = st["packed_bytes"]
+            report["weight_compression_ratio"] = round(st["weight_compression_ratio"], 3)
         report["pvq_encode_s"] = round(time.time() - t0, 1)
-        report["pvq_tensors"] = len(codes)
-        report.update({k: round(v, 3) for k, v in total_bits(codes).items() if "ratio" in k or "bits_per" in k})
 
     key = jax.random.PRNGKey(args.seed + 1)
     tokens = jax.random.randint(key, (args.batch, args.prompt_len), 0, cfg.vocab_size)

@@ -103,6 +103,16 @@ def init_dense(key, d_in: int, d_out: int, *, bias: bool = False, dtype=jnp.floa
 
 
 def dense(p: Params, x: jax.Array) -> jax.Array:
+    """Dense layer; accepts a float ``kernel`` or a packed PVQ one.
+
+    A ``PackedPVQ`` kernel (the unified quantized artifact, see
+    ``repro.core.packed``) dispatches to the int8-native Pallas kernel —
+    the pulses are streamed as stored, never expanded to a dense matrix.
+    """
+    from repro.core.packed import is_packed
+
+    if is_packed(p["kernel"]):
+        return pvq_dense(p, x)
     y = jnp.einsum("...d,df->...f", x, p["kernel"].astype(x.dtype))
     if "bias" in p:
         y = y + p["bias"].astype(y.dtype)
@@ -110,48 +120,39 @@ def dense(p: Params, x: jax.Array) -> jax.Array:
 
 
 def pvq_quantize_dense(p: Params, *, group: int = 128, k_pulses: int) -> Params:
-    """Convert a float dense param dict to PVQ-kernel serving format.
+    """Convert a float dense param dict to the packed serving artifact.
 
-    Returns ``{"pvq_pulses" int8 (k_pad, n), "pvq_scales" f32 (k_pad//group, n)
-    [, "bias"]}`` — the layout ``repro.kernels.ops.pvq_matmul`` streams from
-    HBM at ~1 byte/weight.  The bias stays float: it rides the kernel's fused
+    Returns ``{"kernel": PackedPVQ (matmul layout) [, "bias"]}`` — the same
+    param-dict shape as the float layer, so ``dense``/``pvq_dense`` apply it
+    transparently.  The bias stays float: it rides the kernel's fused
     epilogue instead of being folded into the pyramid code.
     """
-    from repro.kernels import ops
+    from repro.core.packed import pack_matmul
 
-    pulses, scales, _ = ops.encode_weight_matrix(
-        p["kernel"].astype(jnp.float32), group=group, k_pulses=k_pulses
-    )
-    q: Params = {"pvq_pulses": pulses, "pvq_scales": scales}
+    q: Params = {
+        "kernel": pack_matmul(
+            p["kernel"].astype(jnp.float32), group=group, k=k_pulses
+        )
+    }
     if "bias" in p:
         q["bias"] = p["bias"]
     return q
 
 
-def pvq_dense(p: Params, x: jax.Array, *, group: int = 128, activation: str = "none") -> jax.Array:
-    """Dense layer on PVQ-kernel params (see :func:`pvq_quantize_dense`).
+def pvq_dense(p: Params, x: jax.Array, *, activation: str = "none") -> jax.Array:
+    """Dense layer on packed params (``{"kernel": PackedPVQ [, "bias"]}``).
 
-    Runs the fused dequant-matmul Pallas kernel with the bias + activation
+    Runs the fused int8-native Pallas kernel with the bias + activation
     epilogue; tiles come from the persistent autotune cache via kernels.ops.
     Inputs whose feature dim is smaller than the encoded (group-padded)
     contraction dim are zero-padded — zero lanes meet zero pulses.
     """
     from repro.kernels import ops
 
-    pulses = p["pvq_pulses"]
+    packed = p["kernel"]
     lead, k_in = x.shape[:-1], x.shape[-1]
     xf = x.reshape(-1, k_in).astype(jnp.float32)
-    k_pad = pulses.shape[0]
-    if k_pad != k_in:
-        xf = jnp.pad(xf, ((0, 0), (0, k_pad - k_in)))
-    y = ops.pvq_matmul(
-        xf,
-        pulses,
-        p["pvq_scales"],
-        group=group,
-        bias=p.get("bias"),
-        activation=activation,
-    )
+    y = ops.packed_matmul(xf, packed, bias=p.get("bias"), activation=activation)
     return y.reshape(*lead, y.shape[-1]).astype(x.dtype)
 
 
@@ -209,16 +210,68 @@ def init_embedding(key, vocab: int, d: int, dtype=jnp.float32) -> Params:
     return {"embedding": (jax.random.normal(key, (vocab, d)) * 0.02).astype(dtype)}
 
 
+def _packed_embed_rows(table, tokens: jax.Array) -> jax.Array:
+    """Gather + dequantize ONLY the token rows of a packed embedding.
+
+    Flat-layout packing aligns groups to the embedding dim (``group | d``),
+    so a token row is exactly ``d // group`` whole codes — the lookup
+    touches ``d`` int8 pulses + ``d/group`` scales per token instead of ever
+    expanding the (vocab, d) table.
+    """
+    vocab, d = table.shape
+    g = table.group
+    pp = table.pulses.reshape(vocab, d // g, g)
+    sc = table.scales.reshape(vocab, d // g)
+    rows = pp[tokens].astype(jnp.float32) * sc[tokens][..., None]
+    return rows.reshape(*tokens.shape, d)
+
+
+def _packed_unembed(table, x: jax.Array) -> jax.Array:
+    """Tied-head logits against a packed embedding without dequantizing it.
+
+    ``lax.scan`` over group slices: one int8 matmul ``x_g @ pulses_g^T``
+    (the cast feeds the MXU) and one rho multiply on the (…, vocab)
+    accumulator per step — the paper's adds + ONE multiply structure, never
+    a (vocab, d) f32 matrix and never a (…, G, vocab) intermediate, with
+    compact HLO (no per-group unroll on the decode hot path).
+    """
+    vocab, d = table.shape
+    g = table.group
+    n_groups = d // g
+    # group-major operands: x (G, ..., g), pulses (G, vocab, g), rho (G, vocab)
+    xs = jnp.moveaxis(x.astype(jnp.float32).reshape(*x.shape[:-1], n_groups, g), -2, 0)
+    pp = jnp.moveaxis(table.pulses.reshape(vocab, n_groups, g), 1, 0)
+    sc = jnp.moveaxis(table.scales.reshape(vocab, n_groups), 1, 0).astype(jnp.float32)
+
+    def body(acc, inp):
+        xg, pg, sg = inp
+        return acc + jnp.einsum("...p,vp->...v", xg, pg.astype(jnp.float32)) * sg, None
+
+    logits0 = jnp.zeros(x.shape[:-1] + (vocab,), jnp.float32)
+    logits, _ = jax.lax.scan(body, logits0, (xs, pp, sc))
+    return logits
+
+
 def embed(p: Params, tokens: jax.Array, dtype=None) -> jax.Array:
+    from repro.core.packed import is_packed
+
     table = p["embedding"]
-    out = jnp.take(table, tokens, axis=0)
+    if is_packed(table):
+        out = _packed_embed_rows(table, tokens)
+    else:
+        out = jnp.take(table, tokens, axis=0)
     return out.astype(dtype) if dtype is not None else out
 
 
 def unembed(p: Params, x: jax.Array) -> jax.Array:
     """Tied output head: logits in f32 for loss stability."""
+    from repro.core.packed import is_packed
+
+    table = p["embedding"]
+    if is_packed(table):
+        return _packed_unembed(table, x)
     return jnp.einsum(
-        "...d,vd->...v", x.astype(jnp.float32), p["embedding"].astype(jnp.float32)
+        "...d,vd->...v", x.astype(jnp.float32), table.astype(jnp.float32)
     )
 
 

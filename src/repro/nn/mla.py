@@ -129,7 +129,11 @@ def mla_decode(
     r = cfg.kv_lora_rank
     seq_sharded = current_policy().cache_seq_tp or current_policy().context_parallel
     # absorb W_uk:  q_abs[b,h,r] = sum_d q_nope[b,h,d] * W_uk[r, h, d]
-    wk_b = p["wk_b"]["kernel"].reshape(r, n_heads, cfg.nope_head_dim)
+    # (materialize: the b-projections are reshaped per head here, so the
+    # default pack policy leaves them dense; a packed leaf still works)
+    from repro.core.packed import materialize
+
+    wk_b = materialize(p["wk_b"]["kernel"]).reshape(r, n_heads, cfg.nope_head_dim)
     q_abs = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0], wk_b.astype(q_nope.dtype))
     if seq_sharded:
         # the S axis sharding must win over head-sharded queries (see
@@ -150,7 +154,7 @@ def mla_decode(
     out_lat = jnp.einsum("bhs,bsr->bhr", probs, cache["c_kv"])  # (b, h, r)
     if seq_sharded:
         out_lat = constrain(out_lat, "dp", None, None)
-    wv_b = p["wv_b"]["kernel"].reshape(r, n_heads, cfg.v_head_dim)
+    wv_b = materialize(p["wv_b"]["kernel"]).reshape(r, n_heads, cfg.v_head_dim)
     out = jnp.einsum("bhr,rhd->bhd", out_lat.astype(x.dtype), wv_b.astype(x.dtype))
     y = dense(p["wo"], out.reshape(b, 1, n_heads * cfg.v_head_dim))
     return y, cache

@@ -192,7 +192,18 @@ class Model:
     # ------------------------------------------------------------- accounting
 
     def param_count(self, params: Params) -> int:
-        return sum(int(x.size) for x in jax.tree.leaves(params))
+        """Logical parameter count; PackedPVQ leaves count their dense shape
+        (the artifact's pulses/scales are an encoding, not extra params)."""
+        from repro.core.packed import is_packed
+
+        total = 0
+        for x in jax.tree.leaves(params, is_leaf=is_packed):
+            if is_packed(x):
+                lead = x.pulses.shape[: x.pulses.ndim - 2]
+                total += int(math.prod(lead)) * int(math.prod(x.shape))
+            else:
+                total += int(x.size)
+        return total
 
     def active_param_count(self, params: Params) -> int:
         """MoE-aware active parameters per token (for MODEL_FLOPS = 6*N_active*D)."""

@@ -149,9 +149,10 @@ class SequentialNet:
 
         Unlike :meth:`pvq_encode_layers` (the paper's whole-layer single-rho
         procedure), this is the TPU serving variant: each (group, out-column)
-        slice gets its own pyramid code, matching what
-        ``repro.kernels.ops.pvq_matmul`` consumes.  K per group comes from the
-        layer's N/K ratio.  Returns {layer_name: kernel-format params}.
+        slice gets its own pyramid code, stored as the unified ``PackedPVQ``
+        artifact (``{"kernel": PackedPVQ, "bias"}``) that
+        ``repro.kernels.ops.packed_matmul`` streams.  K per group comes from
+        the layer's N/K ratio.  Returns {layer_name: packed params}.
         """
         kparams: Dict[str, Any] = {}
         for i, spec in enumerate(self.cfg.layers):
@@ -186,7 +187,7 @@ class SequentialNet:
                     x = x.reshape(x.shape[0], -1)
                 if pname in kparams:
                     fused = spec.activation if spec.activation in ("relu", "none") else "none"
-                    y = pvq_dense(kparams[pname], x, group=group, activation=fused)
+                    y = pvq_dense(kparams[pname], x, activation=fused)
                     x = y if fused == spec.activation else _act(spec.activation, y)
                 else:
                     p = params[pname]

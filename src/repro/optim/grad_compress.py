@@ -27,6 +27,7 @@ from typing import Any, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.packed import is_packed
 from repro.core.pvq import pvq_encode_grouped
 from repro.kernels import ops as kernel_ops
 
@@ -61,7 +62,14 @@ def _encode_grouped(flat: jax.Array, cfg: CompressionConfig):
 
 
 def compress_decompress(g: jax.Array, cfg: CompressionConfig) -> jax.Array:
-    """Quantization channel Q(g): PVQ encode+decode (per-leaf, grouped)."""
+    """Quantization channel Q(g): PVQ encode+decode (per-leaf, grouped).
+
+    ``PackedPVQ`` leaves pass through unchanged: they are *already* the
+    quantization channel's output (frozen packed params carry no gradient;
+    apply explicit updates with ``repro.core.packed.packed_update``).
+    """
+    if is_packed(g):
+        return g
     flat = g.reshape(-1).astype(jnp.float32)
     if flat.size < cfg.min_size:
         return g
@@ -71,20 +79,31 @@ def compress_decompress(g: jax.Array, cfg: CompressionConfig) -> jax.Array:
 
 
 def make_ef_compressor(cfg: CompressionConfig):
-    """Error-feedback wrapper:  decoded = Q(g + e);  e' = g + e - decoded."""
+    """Error-feedback wrapper:  decoded = Q(g + e);  e' = g + e - decoded.
+
+    ``PackedPVQ`` leaves in the grad tree (frozen packed params under a
+    mixed fine-tune) carry a zero-size EF state and pass through untouched.
+    """
 
     def init(grads: Any) -> Any:
-        return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+        return jax.tree.map(
+            lambda g: g if is_packed(g) else jnp.zeros(g.shape, jnp.float32),
+            grads,
+            is_leaf=is_packed,
+        )
 
     def apply(grads: Any, ef: Any) -> Tuple[Any, Any]:
         def one(g, e):
+            if is_packed(g):
+                return g, e  # frozen: no update, EF state untouched
             corrected = g.astype(jnp.float32) + e
             q = compress_decompress(corrected, cfg)
             return q.astype(g.dtype), corrected - q.astype(jnp.float32)
 
-        out = jax.tree.map(one, grads, ef)
-        decoded = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
-        new_ef = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+        out = jax.tree.map(one, grads, ef, is_leaf=is_packed)
+        is_pair = lambda t: isinstance(t, tuple)
+        decoded = jax.tree.map(lambda t: t[0], out, is_leaf=is_pair)
+        new_ef = jax.tree.map(lambda t: t[1], out, is_leaf=is_pair)
         return decoded, new_ef
 
     return init, apply
@@ -99,6 +118,8 @@ def cross_pod_mean(grads: Any, cfg: CompressionConfig, axis: str = "pod") -> Any
     """
 
     def one(g):
+        if is_packed(g):
+            return g  # frozen packed artifact: replicated, nothing to reduce
         flat = g.reshape(-1).astype(jnp.float32)
         if flat.size < cfg.min_size:
             return jax.lax.pmean(g, axis)
@@ -111,14 +132,16 @@ def cross_pod_mean(grads: Any, cfg: CompressionConfig, axis: str = "pod") -> Any
         mean = jnp.mean(deq, axis=0).reshape(-1)[: flat.size]
         return mean.reshape(g.shape).astype(g.dtype)
 
-    return jax.tree.map(one, grads)
+    return jax.tree.map(one, grads, is_leaf=is_packed)
 
 
 def wire_bytes(grads: Any, cfg: CompressionConfig) -> Tuple[int, int]:
     """(compressed, uncompressed f32) bytes per all-reduce participant."""
     comp = 0
     raw = 0
-    for g in jax.tree.leaves(grads):
+    for g in jax.tree.leaves(grads, is_leaf=is_packed):
+        if is_packed(g):  # frozen packed leaves never cross the wire
+            continue
         n = int(g.size)
         raw += 4 * n
         if n < cfg.min_size:

@@ -152,6 +152,20 @@ def constrain(x: jax.Array, *syms) -> jax.Array:
 # UNSTACKED tensor; scan-stacked params (path contains 'blocks/') get a
 # leading None prepended automatically when rank exceeds the rule's.
 _PARAM_RULES: Tuple[Tuple[str, Tuple[Any, ...]], ...] = (
+    # --- packed PVQ artifact children (PackedPVQ pytree nodes flatten to
+    # <param>/pulses + <param>/scales; see repro.core.packed) ---
+    # flat-layout embedding: groups are row-major over vocab, so the leading
+    # axis shards like the vocab axis (vocab-parallel logits)
+    (r"embedding/pulses$", ("tp", None)),
+    (r"embedding/scales$", ("tp",)),
+    # row-parallel matmul layout: contraction (k_pad) axis on model; the
+    # scales' group axis tiles the same contraction dim
+    (r"(wo|out|out_proj)/kernel/pulses$", ("tp", "fsdp")),
+    (r"(wo|out|out_proj)/kernel/scales$", ("tp", "fsdp")),
+    # column-parallel / generic matmul layout: FSDP in, TP out (scales'
+    # group axis is short — k_pad/group — so only the n axis shards)
+    (r"kernel/pulses$", ("fsdp", "tp")),
+    (r"kernel/scales$", (None, "tp")),
     # embeddings: vocab on model (vocab-parallel logits), d on data (FSDP)
     (r"embedding$", ("tp", "fsdp")),
     (r"pos_embedding$", (None, "fsdp")),

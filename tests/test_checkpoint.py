@@ -80,6 +80,38 @@ def test_pvq_compressed_checkpoint(tmp_path):
     assert pulses_file.stat().st_size < 128 * 64 * 4 / 2  # < fp32/2
 
 
+def test_packed_leaf_roundtrip_bit_exact(tmp_path):
+    """A PackedPVQ leaf restores to IDENTICAL int8 pulses + f32 scales —
+    no re-encode, no dequantize — under any compress mode."""
+    from repro.core.packed import is_packed, pack_flat, pack_matmul
+
+    w = jax.random.laplace(jax.random.PRNGKey(6), (100, 72)) * 0.1
+    pk = pack_matmul(w, group=64, n_over_k=4.0)  # small K: nibble-packable
+    e = jax.random.normal(jax.random.PRNGKey(7), (64, 32)) * 0.02
+    pe = pack_flat(e, group=32, n_over_k=0.5, row_align=32)
+    state = {"params": {"w": {"kernel": pk}, "emb": {"embedding": pe}},
+             "step": jnp.int32(3)}
+    for compress in (None, "pvq"):
+        ck = Checkpointer(tmp_path / str(compress), compress=compress)
+        ck.save(1, state)
+        restored, _ = ck.restore(state)
+        for got, want in (
+            (restored["params"]["w"]["kernel"], pk),
+            (restored["params"]["emb"]["embedding"], pe),
+        ):
+            assert is_packed(got)
+            assert got.pulses.dtype == jnp.int8
+            np.testing.assert_array_equal(np.asarray(got.pulses), np.asarray(want.pulses))
+            np.testing.assert_array_equal(np.asarray(got.scales), np.asarray(want.scales))
+            assert (got.group, got.k, got.shape, got.dtype, got.layout, got.scale_mode) == (
+                want.group, want.k, want.shape, want.dtype, want.layout, want.scale_mode
+            )
+        # the artifact is stored as the code, not expanded weights
+        man = json.loads((tmp_path / str(compress) / "step_000000001" / "manifest.json").read_text())
+        assert man["leaves"]["params/w/kernel"]["codec"] == "pvq-packed"
+        assert man["leaves"]["params/w/kernel"]["pulse_format"] == "nibble"
+
+
 def test_pvq_checkpoint_skips_small_and_nonmatrix(tmp_path):
     ck = Checkpointer(tmp_path, compress="pvq", min_compress_size=10**6)
     state = _state(5)

@@ -277,9 +277,9 @@ def test_sequential_kernel_apply_matches_dequant_forward():
 
     h = x
     for i, spec in enumerate(cfg.layers):
-        kp = kparams[f"layer{i}"]
-        w_deq = kp["pvq_pulses"].astype(jnp.float32) * jnp.repeat(
-            kp["pvq_scales"], group, axis=0
+        packed = kparams[f"layer{i}"]["kernel"]  # the unified PackedPVQ artifact
+        w_deq = packed.pulses.astype(jnp.float32) * jnp.repeat(
+            packed.scales, packed.group, axis=0
         )
         hp = jnp.pad(h, ((0, 0), (0, w_deq.shape[0] - h.shape[-1])))
         pre = hp @ w_deq + params[f"layer{i}"]["bias"]

@@ -1,0 +1,407 @@
+"""The unified PackedPVQ artifact: container semantics, tree transforms,
+layer/model transparency, int8-native kernel equivalence, sharding rules,
+grad-pipeline update semantics, and the jit-safe int8 boundary."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hyp import given, settings, st
+
+from repro.core.packed import (
+    PackedPVQ,
+    dequantize_params,
+    is_packed,
+    materialize,
+    pack_flat,
+    pack_matmul,
+    packed_leaves,
+    packed_stats,
+    packed_update,
+    quantize_params,
+)
+from repro.core.packing import pack_nibbles, pulses_to_int8, unpack_nibbles
+from repro.core.pvq import pvq_encode
+from repro.core.quantize import QuantPolicy
+from repro.kernels import ops
+
+
+# ---------------------------------------------------------------------------
+# container + pytree semantics
+# ---------------------------------------------------------------------------
+
+
+def _packed_2d(seed=0, d_in=100, d_out=72, group=64, n_over_k=2.0):
+    w = jax.random.laplace(jax.random.PRNGKey(seed), (d_in, d_out)) * 0.1
+    return w, pack_matmul(w, group=group, n_over_k=n_over_k)
+
+
+def test_pack_matmul_layout_and_dequantize():
+    w, pk = _packed_2d()
+    assert pk.pulses.dtype == jnp.int8
+    assert pk.pulses.shape == (128, 72)  # d_in=100 padded to group multiple
+    assert pk.scales.shape == (2, 72)
+    assert pk.shape == (100, 72) and pk.layout == "matmul"
+    deq = pk.dequantize()
+    assert deq.shape == (100, 72) and deq.dtype == jnp.float32
+    rel = float(jnp.linalg.norm(deq - w) / jnp.linalg.norm(w))
+    assert rel < 0.45  # N/K=2 quantization error regime
+
+
+def test_packed_is_pytree_with_named_children():
+    _, pk = _packed_2d()
+    leaves, treedef = jax.tree_util.tree_flatten(pk)
+    assert len(leaves) == 2
+    pk2 = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert is_packed(pk2) and pk2.group == pk.group and pk2.shape == pk.shape
+    # keyed paths expose pulses/scales (consumed by sharding + checkpointer)
+    keyed = jax.tree_util.tree_flatten_with_path(pk)[0]
+    names = {str(getattr(path[-1], "key", path[-1])) for path, _ in keyed}
+    assert names == {"pulses", "scales"}
+
+
+def test_packed_roundtrips_through_jit_and_scan():
+    w3 = jax.random.laplace(jax.random.PRNGKey(3), (3, 64, 64)) * 0.1
+    pk = pack_matmul(w3, group=64, n_over_k=2.0)  # stacked (repeats, ...)
+    assert pk.pulses.shape == (3, 64, 64) and pk.scales.shape == (3, 1, 64)
+    x = jax.random.normal(jax.random.PRNGKey(4), (4, 64))
+
+    @jax.jit
+    def scan_layers(pk, x):
+        def body(h, layer):  # layer: PackedPVQ with 2-D children
+            return ops.packed_matmul(h, layer, interpret=True), None
+
+        out, _ = jax.lax.scan(body, x, pk)
+        return out
+
+    got = scan_layers(pk, x)
+    want = x
+    for i in range(3):
+        want = want @ pk.dequantize()[i]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_pack_flat_row_aligned_gather():
+    e = jax.random.normal(jax.random.PRNGKey(5), (64, 48)) * 0.02
+    pe = pack_flat(e, group=256, n_over_k=0.5, row_align=48)
+    assert pe.group == 16  # 256 shrunk to divide d=48
+    assert pe.layout == "flat"
+    deq = pe.dequantize()
+    assert deq.shape == (64, 48)
+    rel = float(jnp.linalg.norm(deq - e) / jnp.linalg.norm(e))
+    assert rel < 0.25  # K = 2N
+
+
+def test_large_k_clamp_refits_scale_from_stored_pulses():
+    """K > 127 may clamp a dominant coordinate to +-127; the stored scale
+    must be the ls-optimal fit for the CLAMPED pulses, not the unclamped
+    ones, so the artifact stays self-consistent."""
+    from repro.core.pvq import _scales
+
+    # one coordinate carries most of the group's L1 mass -> >127 pulses
+    w = jnp.full((256,), 0.01).at[3].set(10.0)
+    pk = pack_flat(w, group=256, n_over_k=1.0)  # K = 256 > 127
+    assert int(jnp.max(jnp.abs(pk.pulses))) == 127  # clamp engaged
+    want = _scales(w.reshape(1, 256), pk.pulses.astype(jnp.int32), "ls")
+    np.testing.assert_allclose(np.asarray(pk.scales), np.asarray(want), rtol=1e-6)
+    # and the matmul layout path refits too
+    wm = jnp.tile(w[:, None], (1, 4))
+    pm = pack_matmul(wm, group=256, n_over_k=1.0)
+    assert int(jnp.max(jnp.abs(pm.pulses))) == 127
+    deq = pm.dequantize()
+    # ls-refit scale keeps the dominant-coordinate error bounded
+    rel = float(jnp.linalg.norm(deq - wm) / jnp.linalg.norm(wm))
+    assert rel < 0.5
+
+
+def test_materialize_passthrough_and_dequant():
+    w, pk = _packed_2d()
+    np.testing.assert_array_equal(np.asarray(materialize(w)), np.asarray(w))
+    assert materialize(pk).shape == (100, 72)
+
+
+# ---------------------------------------------------------------------------
+# tree transforms
+# ---------------------------------------------------------------------------
+
+
+def _toy_tree(seed=0):
+    k = jax.random.split(jax.random.PRNGKey(seed), 4)
+    return {
+        "embed": {"embedding": jax.random.normal(k[0], (128, 64)) * 0.02},
+        "blocks": {
+            "wq": {"kernel": jax.random.laplace(k[1], (64, 64)) * 0.1},
+            "wo": {"kernel": jax.random.laplace(k[2], (64, 64)) * 0.1,
+                   "bias": jnp.zeros(64)},
+        },
+        "ln": {"rms_scale": jnp.ones(64)},
+        "conv": {"conv_kernel": jax.random.normal(k[3], (4, 64))},
+    }
+
+
+POLICY = QuantPolicy(rules=(("", 1.0, 64),), scale_mode="ls")
+
+
+def test_quantize_params_mixed_tree():
+    tree = _toy_tree()
+    q = quantize_params(tree, POLICY)
+    pl = packed_leaves(q)
+    assert set(pl) == {"embed/embedding", "blocks/wq/kernel", "blocks/wo/kernel"}
+    # norm scale, bias, conv kernel untouched
+    np.testing.assert_array_equal(np.asarray(q["ln"]["rms_scale"]), np.ones(64))
+    assert not is_packed(q["conv"]["conv_kernel"])
+    assert not is_packed(q["blocks"]["wo"]["bias"])
+
+
+def test_quantize_params_idempotent():
+    q = quantize_params(_toy_tree(), POLICY)
+    q2 = quantize_params(q, POLICY)  # encode ONCE: packed leaves pass through
+    for (p1, l1), (p2, l2) in zip(packed_leaves(q).items(), packed_leaves(q2).items()):
+        assert p1 == p2
+        np.testing.assert_array_equal(np.asarray(l1.pulses), np.asarray(l2.pulses))
+
+
+def test_dequantize_params_inverts_structure():
+    tree = _toy_tree()
+    dq = dequantize_params(quantize_params(tree, POLICY))
+    assert jax.tree_util.tree_structure(dq) == jax.tree_util.tree_structure(tree)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(dq)):
+        assert a.shape == b.shape
+
+
+def test_packed_stats_reports_compression():
+    st_ = packed_stats(quantize_params(_toy_tree(), POLICY))
+    assert st_["packed_tensors"] == 3
+    assert st_["weight_compression_ratio"] > 2.0  # int8+scales vs f32
+
+
+# ---------------------------------------------------------------------------
+# layer / model transparency
+# ---------------------------------------------------------------------------
+
+
+def test_dense_accepts_packed_kernel():
+    from repro.nn.layers import dense
+
+    w, pk = _packed_2d(d_in=64, d_out=32)
+    x = jax.random.normal(jax.random.PRNGKey(7), (2, 5, 64))
+    got = dense({"kernel": pk, "bias": jnp.ones(32)}, x)
+    want = x @ pk.dequantize() + 1.0
+    assert got.shape == (2, 5, 32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_embed_and_unembed_packed_match_dequant():
+    from repro.nn.layers import embed, unembed
+
+    e = jax.random.normal(jax.random.PRNGKey(8), (128, 64)) * 0.02
+    pe = pack_flat(e, group=64, n_over_k=0.5, row_align=64)
+    toks = jax.random.randint(jax.random.PRNGKey(9), (2, 6), 0, 128)
+    got = embed({"embedding": pe}, toks)
+    want = jnp.take(pe.dequantize(), toks, axis=0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6)
+
+    x = jax.random.normal(jax.random.PRNGKey(10), (2, 3, 64))
+    got_l = unembed({"embedding": pe}, x)
+    want_l = jnp.einsum("...d,vd->...v", x, pe.dequantize())
+    np.testing.assert_allclose(np.asarray(got_l), np.asarray(want_l), rtol=1e-4, atol=1e-4)
+
+
+def test_model_serves_packed_params_matches_dequant_sim():
+    """prefill+decode on the packed artifact == the dequantized simulation."""
+    from repro.configs import get_config
+    from repro.launch.serve import generate
+    from repro.nn.models import build_model
+
+    cfg = get_config("smollm-360m").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0), max_seq=24)
+    policy = QuantPolicy(
+        rules=(("embedding", 0.5, 256), ("kernel", 1.0, 256)), scale_mode="ls"
+    )
+    qparams = quantize_params(params, policy)
+    assert packed_leaves(qparams), "nothing was packed"
+    toks = jax.random.randint(jax.random.PRNGKey(2), (2, 6), 0, cfg.vocab_size)
+    out_packed = generate(model, qparams, toks, gen=4, cache_len=12)
+    out_sim = generate(model, dequantize_params(qparams), toks, gen=4, cache_len=12)
+    agree = float(jnp.mean((out_packed == out_sim).astype(jnp.float32)))
+    assert agree >= 0.9, agree  # identical weights; rare argmax ties may flip
+
+
+# ---------------------------------------------------------------------------
+# int8-native kernel path
+# ---------------------------------------------------------------------------
+
+
+def test_packed_matmul_requires_matmul_layout():
+    e = jax.random.normal(jax.random.PRNGKey(11), (16, 32))
+    pe = pack_flat(e, group=32, n_over_k=1.0, row_align=32)
+    with pytest.raises(ValueError):
+        ops.packed_matmul(jnp.zeros((2, 32)), pe, interpret=True)
+
+
+def test_packed_matmul_epilogue_fusion():
+    w, pk = _packed_2d(d_in=128, d_out=64, group=64)
+    x = jax.random.normal(jax.random.PRNGKey(12), (4, 128))
+    bias = jax.random.normal(jax.random.PRNGKey(13), (64,))
+    got = ops.packed_matmul(x, pk, bias=bias, activation="relu", interpret=True)
+    want = jax.nn.relu(x @ pk.dequantize() + bias)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_autotune_cache_key_carries_kernel_version():
+    """Satellite: a kernel-body bump must invalidate stale tile timings."""
+    from repro.kernels import autotune
+    from repro.kernels.pvq_matmul import KERNEL_VERSION
+
+    key = autotune.cache_key(8, 128, 128, 128, jnp.float32, "cpu")
+    assert f":kv{KERNEL_VERSION}:" in key
+    assert key.endswith(":v2")
+
+
+# ---------------------------------------------------------------------------
+# grad-pipeline update semantics
+# ---------------------------------------------------------------------------
+
+
+def test_grad_compress_passes_packed_leaves_through():
+    from repro.optim.grad_compress import (
+        CompressionConfig,
+        compress_decompress,
+        make_ef_compressor,
+        wire_bytes,
+    )
+
+    cfg = CompressionConfig(group=64, n_over_k=2.0, min_size=16)
+    w, pk = _packed_2d(d_in=64, d_out=32)
+    g = {"dense": jax.random.laplace(jax.random.PRNGKey(14), (1024,)),
+         "frozen": pk}
+    assert compress_decompress(pk, cfg) is pk
+    init, apply = make_ef_compressor(cfg)
+    ef = init(g)
+    dec, ef2 = apply(g, ef)
+    assert dec["frozen"] is pk  # packed leaf untouched
+    assert dec["dense"].shape == (1024,)
+    comp, raw = wire_bytes(g, cfg)
+    assert raw == 4 * 1024  # packed leaf never crosses the wire
+
+
+def test_packed_update_reencodes_on_same_pyramid():
+    w, pk = _packed_2d(d_in=64, d_out=32, n_over_k=1.0)
+    delta = jax.random.normal(jax.random.PRNGKey(15), (64, 32)) * 0.01
+    pk2 = packed_update(pk, delta)
+    assert is_packed(pk2)
+    assert (pk2.group, pk2.k, pk2.shape, pk2.layout) == (pk.group, pk.k, pk.shape, pk.layout)
+    # the re-encoded artifact approximates dequant(pk) + delta
+    target = pk.dequantize() + delta
+    rel = float(jnp.linalg.norm(pk2.dequantize() - target) / jnp.linalg.norm(target))
+    assert rel < 0.45
+
+
+# ---------------------------------------------------------------------------
+# sharding rules for packed children
+# ---------------------------------------------------------------------------
+
+
+class _FakeMesh:
+    def __init__(self, shape):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+
+
+def test_packed_param_sharding_rules():
+    from jax.sharding import PartitionSpec as P
+
+    from repro.parallel.sharding import ShardingPolicy, param_pspec
+
+    mesh = _FakeMesh({"data": 16, "model": 16})
+    pol = ShardingPolicy()
+    # column-parallel packed kernel: pulses shard like the dense kernel
+    assert param_pspec("mixer/wq/kernel/pulses", (4096, 4096), mesh, pol) == P(("data",), "model")
+    assert param_pspec("mixer/wq/kernel/scales", (32, 4096), mesh, pol) == P(None, "model")
+    # row-parallel
+    assert param_pspec("mixer/wo/kernel/pulses", (4096, 4096), mesh, pol) == P("model", ("data",))
+    # flat-layout embedding: leading group axis is vocab-major
+    assert param_pspec("embed/embedding/pulses", (49152 * 32, 128), mesh, pol) == P("model", None)
+    assert param_pspec("embed/embedding/scales", (49152 * 32,), mesh, pol) == P("model")
+    # scan-stacked packed pulses get the leading None
+    assert param_pspec("segments/seg0/b0/mixer/wq/kernel/pulses", (8, 4096, 4096), mesh, pol) == P(None, ("data",), "model")
+
+
+# ---------------------------------------------------------------------------
+# satellite: jit-safe int8 boundary + nibble packing properties
+# ---------------------------------------------------------------------------
+
+
+def test_pulses_to_int8_is_jit_safe():
+    """The old int(maxabs) host sync raised TracerConversionError under jit."""
+    w = jax.random.laplace(jax.random.PRNGKey(16), (8, 64))
+
+    @jax.jit
+    def encode_cast(w):
+        code = pvq_encode(w, 32, "ls")
+        return pulses_to_int8(code)
+
+    p8, sc = encode_cast(w)
+    assert p8.dtype == jnp.int8
+    code = pvq_encode(w, 32, "ls")
+    np.testing.assert_array_equal(np.asarray(p8), np.asarray(code.pulses, np.int8))
+
+
+def test_pulses_to_int8_static_k_bound():
+    w = jax.random.laplace(jax.random.PRNGKey(17), (512,))
+    code = pvq_encode(w, 200, "ls")  # K > 127: statically rejected
+    with pytest.raises(ValueError, match="K=200"):
+        pulses_to_int8(code)
+
+
+def test_pulses_to_int8_debug_check_runs_under_jit():
+    w = jax.random.laplace(jax.random.PRNGKey(18), (8, 64))
+
+    @jax.jit
+    def f(w):
+        return pulses_to_int8(pvq_encode(w, 16, "ls"), debug=True)[0]
+
+    assert f(w).dtype == jnp.int8
+
+
+def test_pack_nibbles_odd_length_roundtrip():
+    p = np.array([-7, 7, 0, 1, -1], np.int64)  # odd count: padding nibble
+    packed, shape = pack_nibbles(p)
+    assert packed.size == 3
+    np.testing.assert_array_equal(unpack_nibbles(packed, shape), p)
+
+
+def test_pack_nibbles_boundary_magnitude():
+    p = np.full((13,), 7, np.int64)
+    np.testing.assert_array_equal(unpack_nibbles(*pack_nibbles(p)), p)
+    np.testing.assert_array_equal(unpack_nibbles(*pack_nibbles(-p)), -p)
+    with pytest.raises(ValueError):
+        pack_nibbles(np.array([8]))
+    with pytest.raises(ValueError):
+        pack_nibbles(np.array([-8]))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(1, 257),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_prop_nibble_roundtrip(n, seed):
+    rng = np.random.default_rng(seed)
+    p = rng.integers(-7, 8, size=(n,))
+    packed, shape = pack_nibbles(p)
+    assert packed.size == (n + 1) // 2
+    np.testing.assert_array_equal(unpack_nibbles(packed, shape), p)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    rows=st.integers(1, 5), cols=st.integers(1, 9), seed=st.integers(0, 2**31 - 1)
+)
+def test_prop_nibble_roundtrip_2d(rows, cols, seed):
+    rng = np.random.default_rng(seed)
+    p = rng.integers(-7, 8, size=(rows, cols))
+    packed, shape = pack_nibbles(p)
+    assert shape == (rows, cols)
+    np.testing.assert_array_equal(unpack_nibbles(packed, shape), p)
