@@ -1,0 +1,89 @@
+"""Artifact-compression benchmark: bits/weight + codec throughput (§VI).
+
+Encodes real packed artifacts — a paper-net FC layer and the reduced smollm
+config — under each pulse codec and reports the measured bits/weight plus
+encode/decode throughput in dense-equivalent MB/s (numel * 4 bytes over the
+wall time of the entropy codec alone).  Rows land in ``BENCH_artifact.json``
+via benchmarks.run for cross-PR trajectories.
+
+Throughput numbers on this CPU container measure the vectorized numpy
+codecs themselves (the .pvqz path has no accelerator dependency); the
+bits/weight columns are backend-independent ground truth.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+
+CODECS = ("golomb", "rle", "nibble", "int8")
+
+
+def _bench_leaf(name: str, pk, reps: int = 3) -> List[Dict]:
+    from repro.core import bitstream
+    from repro.core.packed import pulse_stream
+
+    stream = pulse_stream(pk)
+    dense_mb = stream.size * 4 / 1e6
+    scale_bits = 32 * int(np.prod(pk.scales.shape))
+    rows = []
+    for codec in CODECS:
+        if codec == "nibble" and np.abs(stream).max(initial=0) > 7:
+            continue
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            blob, info = bitstream.encode_pulses(stream, codec)
+        enc_s = (time.perf_counter() - t0) / reps
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            out = bitstream.decode_pulses(blob, info)
+        dec_s = (time.perf_counter() - t0) / reps
+        np.testing.assert_array_equal(out, stream)  # the bench IS a roundtrip
+        rows.append({
+            "bench": f"artifact:{name}:{codec}",
+            "us_per_call": round(1e6 * (enc_s + dec_s), 1),
+            "numel": int(stream.size),
+            "bits_per_weight": round(info["nbits"] / stream.size, 4),
+            "bits_per_weight_with_scales": round(
+                (info["nbits"] + scale_bits) / stream.size, 4
+            ),
+            "encode_mb_s": round(dense_mb / enc_s, 2),
+            "decode_mb_s": round(dense_mb / dec_s, 2),
+        })
+    return rows
+
+
+def bench_artifact_codecs() -> List[Dict]:
+    import jax
+
+    from repro.configs import get_config
+    from repro.configs.paper_nets import PAPER_NETS
+    from repro.core.packed import packed_leaves, quantize_params
+    from repro.core.quantize import QuantPolicy
+    from repro.nn.models import build_model
+    from repro.nn.sequential import SequentialNet
+
+    rows: List[Dict] = []
+
+    # paper net A, first FC layer (784x512 at the Table-1 N/K = 5)
+    net = SequentialNet(PAPER_NETS["A"])
+    params = net.init(jax.random.PRNGKey(0))
+    kparams = net.pvq_kernel_encode(params, group=256)
+    rows += _bench_leaf("paper-A-fc0", kparams["layer0"]["kernel"])
+
+    # the reduced smollm config, biggest packed leaf (transformer-shaped)
+    cfg = get_config("smollm-360m").reduced()
+    model = build_model(cfg)
+    mparams = model.init(jax.random.PRNGKey(0), max_seq=16)
+    policy = QuantPolicy(
+        rules=(("embedding", cfg.pvq.n_over_k_embed, cfg.pvq.group),
+               ("kernel|experts", cfg.pvq.n_over_k, cfg.pvq.group)),
+        scale_mode="ls",
+    )
+    q = quantize_params(mparams, policy)
+    leaves = packed_leaves(q)
+    biggest = max(leaves, key=lambda p: int(np.prod(leaves[p].pulses.shape)))
+    rows += _bench_leaf(f"smollm-reduced:{biggest.split('/')[-2]}", leaves[biggest])
+    return rows

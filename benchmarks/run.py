@@ -4,9 +4,10 @@
 
 Prints ``name,us_per_call,derived`` CSV rows (one per benchmark), then a
 human-readable table dump.  Kernel rows are additionally written to
-``BENCH_kernels.json`` (us_per_call + bytes-ratios per kernel/shape) and the
-packed-vs-f32 serving rows to ``BENCH_serve.json`` so future PRs can diff
-perf trajectories.
+``BENCH_kernels.json`` (us_per_call + bytes-ratios per kernel/shape), the
+packed-vs-f32 serving rows to ``BENCH_serve.json``, and the .pvqz codec
+rows (bits/weight + encode/decode MB/s) to ``BENCH_artifact.json`` so
+future PRs can diff perf trajectories.
 """
 
 from __future__ import annotations
@@ -22,7 +23,7 @@ def main() -> None:
     ap.add_argument("--only", default="", help="run only benches whose name starts with this")
     args = ap.parse_args()
 
-    from benchmarks import kernel_bench, paper_tables, serve_bench
+    from benchmarks import artifact_bench, kernel_bench, paper_tables, serve_bench
 
     all_rows = []
 
@@ -42,6 +43,7 @@ def main() -> None:
     run("kernel_pvq_matmul", kernel_bench.bench_pvq_matmul)
     run("kernel_pvq_encode", kernel_bench.bench_pvq_encode)
     run("serve_packed", serve_bench.bench_serve_throughput)
+    run("artifact_codecs", artifact_bench.bench_artifact_codecs)
 
     # CSV contract: name,us_per_call,derived
     print("name,us_per_call,derived")
@@ -78,6 +80,14 @@ def main() -> None:
         with open("BENCH_serve.json", "w") as f:
             json.dump(payload, f, indent=1, default=str)
         print("wrote BENCH_serve.json", file=sys.stderr)
+
+    # .pvqz codec trajectory: bits/weight + encode/decode MB/s per codec
+    artifact_rows = [r for r in all_rows if r["bench_group"].startswith("artifact_")]
+    if artifact_rows:
+        payload = {"schema": "bench-artifact-v1", "rows": artifact_rows}
+        with open("BENCH_artifact.json", "w") as f:
+            json.dump(payload, f, indent=1, default=str)
+        print("wrote BENCH_artifact.json", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -1,3 +1,4 @@
+from .artifact import iter_pvqz, load_pvqz, read_toc, write_pvqz
 from .checkpointer import Checkpointer
 
-__all__ = ["Checkpointer"]
+__all__ = ["Checkpointer", "write_pvqz", "load_pvqz", "iter_pvqz", "read_toc"]

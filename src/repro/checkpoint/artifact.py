@@ -1,0 +1,380 @@
+"""The ``.pvqz`` single-file compressed artifact (paper §VI, end to end).
+
+``PackedPVQ`` (PR 2) made the PVQ code the in-memory deployment format —
+int8 pulses + f32 group scales, 4–8 bits/weight.  This module is the at-rest
+and over-the-wire half of the story: the pulse streams are entropy-coded
+(``repro.core.bitstream``) down to the paper's ~1.4–2 bits/weight, packed
+into one seekable container, and decoded leaf-by-leaf straight back into
+``PackedPVQ`` — bit-exact pulses and scales, no re-encode, peak memory
+bounded by the largest single leaf.
+
+File layout (all integers little-endian)::
+
+    [magic b"PVQZ" | u8 version | 3 reserved bytes]
+    [leaf blob 0][leaf blob 1]...          # written sequentially
+    [TOC: json, utf-8]
+    [footer: u64 toc_offset | u64 toc_len | magic b"ZPVQ"]
+
+The TOC carries one record per leaf: path, kind (``packed`` | ``raw``),
+blob offset/size, CRC32, and for packed leaves the full ``PackedPVQ``
+static metadata plus the pulse-codec info and a separate scales section
+(raw ``<f4``, CRC'd).  Readers parse the footer, then seek per leaf.
+
+Pulse streams cover only the *logical* weight region — the structural
+group-padding rows of the matmul layout (and the tail padding of the flat
+layout) are dropped on encode and reconstructed as zeros on decode, so
+padding never costs wire bits.  The fixed-length enumeration codec is the
+exception: it codes whole (G, group) rows, padded groups included.
+
+Codec selection (``codec="auto"``) follows the paper's §VI practicality
+order, but *measured*: price every candidate with the exact size models
+(``bitstream.measured_bits``) and take the cheapest in bits — enumeration
+is only admitted when its O(N*K) bigint encode cost fits ``enum_budget``.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import struct
+import zlib
+from pathlib import Path
+from typing import Any, Dict, Iterator, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bitstream
+from repro.core.bitstream import (  # noqa: F401  (re-exported API)
+    DEFAULT_ENUM_BUDGET,
+    PULSE_CODECS,
+    choose_codec,
+)
+from repro.core.packed import PackedPVQ, is_packed, pulse_groups, pulse_stream
+
+MAGIC = b"PVQZ"
+END_MAGIC = b"ZPVQ"
+VERSION = 1
+_FOOTER = struct.Struct("<QQ4s")
+
+
+# ---------------------------------------------------------------------------
+# pulse layout <-> stream transforms
+# ---------------------------------------------------------------------------
+
+
+def _logical_numel(pk: PackedPVQ) -> int:
+    lead = pk.pulses.shape[: pk.pulses.ndim - 2]
+    return int(np.prod(lead, initial=1)) * int(np.prod(pk.shape))
+
+
+def _unstream(
+    flat: np.ndarray, layout: str, pulse_shape: Tuple[int, ...], shape: Tuple[int, ...]
+) -> np.ndarray:
+    """Inverse of :func:`_stream_view`: rebuild the physical int8 tensor,
+    structural padding re-materialized as zeros."""
+    if layout == "matmul":
+        *lead, k_pad, n = pulse_shape
+        d_in = int(shape[-2])
+        arr = np.asarray(flat, np.int64).reshape(*lead, n, d_in)
+        out = np.zeros((*lead, n, k_pad), np.int64)
+        out[..., :d_in] = arr
+        return np.swapaxes(out, -1, -2).astype(np.int8)
+    *lead, g, group = pulse_shape
+    numel = int(np.prod(shape))
+    out = np.zeros((*lead, g * group), np.int64)
+    out[..., :numel] = np.asarray(flat, np.int64).reshape(*lead, numel)
+    return out.reshape(*pulse_shape).astype(np.int8)
+
+
+def _groups_to_physical(
+    groups: np.ndarray, layout: str, pulse_shape: Tuple[int, ...]
+) -> np.ndarray:
+    if layout == "matmul":
+        *lead, k_pad, n = pulse_shape
+        return np.swapaxes(
+            groups.reshape(*lead, n, k_pad), -1, -2
+        ).astype(np.int8)
+    return groups.reshape(*pulse_shape).astype(np.int8)
+
+
+# ---------------------------------------------------------------------------
+# writer
+# ---------------------------------------------------------------------------
+
+
+def _flatten(tree: Any) -> Dict[str, Any]:
+    from .checkpointer import _flatten as ck_flatten
+
+    return ck_flatten(tree)
+
+
+def write_pvqz(
+    path: str | Path,
+    params: Any,
+    *,
+    codec: str = "auto",
+    chunk: int = bitstream.DEFAULT_CHUNK,
+    enum_budget: int = DEFAULT_ENUM_BUDGET,
+    meta: Optional[Dict[str, Any]] = None,
+) -> Dict[str, Any]:
+    """Encode a (mixed) parameter pytree into a ``.pvqz`` file.
+
+    ``PackedPVQ`` leaves get entropy-coded pulse streams + raw f32 scales;
+    every other leaf is stored raw (bf16 upcast to f32, like the
+    checkpointer).  ``codec`` is one of :data:`PULSE_CODECS` or ``"auto"``
+    (per-leaf cheapest by measured bits).  Returns the compression report:
+    per-leaf codec + bits/weight and artifact-level totals.
+
+    Writes go through a tmp file + atomic rename: a mid-write crash (or an
+    encode error) can never truncate or corrupt an existing good artifact,
+    and a failed write leaves no tmp behind.
+    """
+    path = Path(path)
+    tmp_path = path.with_name(f".{path.name}.tmp{os.getpid()}")
+    try:
+        report = _write_pvqz_file(
+            tmp_path, params, codec=codec, chunk=chunk,
+            enum_budget=enum_budget, meta=meta,
+        )
+    except BaseException:
+        try:
+            os.unlink(tmp_path)
+        except OSError:
+            pass
+        raise
+    os.replace(tmp_path, path)
+    report["path"] = str(path)
+    return report
+
+
+def _write_pvqz_file(
+    tmp_path: Path,
+    params: Any,
+    *,
+    codec: str,
+    chunk: int,
+    enum_budget: int,
+    meta: Optional[Dict[str, Any]],
+) -> Dict[str, Any]:
+    flat = _flatten(params)
+    report_leaves: Dict[str, Dict[str, Any]] = {}
+    toc: Dict[str, Any] = {"version": VERSION, "meta": meta or {}, "leaves": []}
+    packed_payload_bits = 0.0
+    packed_scale_bits = 0.0
+    packed_numel = 0
+    replaced_dense_bytes = 0
+    with open(tmp_path, "wb") as f:
+        f.write(MAGIC + bytes([VERSION]) + b"\0\0\0")
+        for key, leaf in flat.items():
+            rec: Dict[str, Any] = {"path": key}
+            if is_packed(leaf):
+                pulses = np.asarray(leaf.pulses, np.int8)
+                stream = pulse_stream(leaf)
+                groups = pulse_groups(leaf)
+                if codec == "auto":
+                    leaf_codec, sizes = choose_codec(
+                        stream, groups, leaf.k, enum_budget=enum_budget
+                    )
+                else:
+                    leaf_codec = codec
+                    _, sizes = choose_codec(
+                        stream, groups, leaf.k, enum_budget=enum_budget
+                    )
+                symbols = groups if leaf_codec == "enum" else stream
+                blob, info = bitstream.encode_pulses(
+                    symbols, leaf_codec, k_max=leaf.k, chunk=chunk
+                )
+                scales = np.ascontiguousarray(
+                    np.asarray(leaf.scales, np.float32), dtype="<f4"
+                )
+                sblob = scales.tobytes()
+                rec.update(
+                    kind="packed",
+                    offset=f.tell(),
+                    nbytes=len(blob),
+                    crc32=zlib.crc32(blob),
+                    pulse_info=info,
+                    group=int(leaf.group),
+                    k=int(leaf.k),
+                    shape=list(leaf.shape),
+                    dtype=leaf.dtype,
+                    layout=leaf.layout,
+                    scale_mode=leaf.scale_mode,
+                    pulse_shape=list(pulses.shape),
+                    scales_shape=list(scales.shape),
+                )
+                f.write(blob)
+                rec["scales_offset"] = f.tell()
+                rec["scales_nbytes"] = len(sblob)
+                rec["scales_crc32"] = zlib.crc32(sblob)
+                f.write(sblob)
+                numel = _logical_numel(leaf)
+                payload_bits = info["nbits"]
+                scale_bits = 32 * scales.size
+                packed_payload_bits += payload_bits
+                packed_scale_bits += scale_bits
+                packed_numel += numel
+                replaced_dense_bytes += leaf.nbytes_dense
+                report_leaves[key] = {
+                    "codec": leaf_codec,
+                    "numel": numel,
+                    "pulse_bits": int(payload_bits),
+                    "bits_per_weight": round(
+                        (payload_bits + scale_bits) / max(numel, 1), 4
+                    ),
+                    "candidate_bits_per_weight": {
+                        c: round(b / max(numel, 1), 4) for c, b in sizes.items()
+                    },
+                }
+            else:
+                arr = np.asarray(leaf)
+                orig_dtype = str(arr.dtype)
+                stored_dtype = orig_dtype
+                if stored_dtype == "bfloat16":
+                    arr = arr.astype(np.float32)
+                    stored_dtype = "float32"
+                blob = np.ascontiguousarray(arr).tobytes()
+                rec.update(
+                    kind="raw",
+                    offset=f.tell(),
+                    nbytes=len(blob),
+                    crc32=zlib.crc32(blob),
+                    shape=list(arr.shape),
+                    dtype=orig_dtype,
+                    stored_dtype=stored_dtype,
+                )
+                f.write(blob)
+                report_leaves[key] = {"codec": "raw", "nbytes": len(blob)}
+            toc["leaves"].append(rec)
+        toc_offset = f.tell()
+        toc_blob = json.dumps(toc).encode()
+        f.write(toc_blob)
+        f.write(_FOOTER.pack(toc_offset, len(toc_blob), END_MAGIC))
+        file_bytes = f.tell()
+    return {
+        "file_bytes": file_bytes,
+        "packed_numel": packed_numel,
+        "packed_payload_bits": int(packed_payload_bits),
+        "packed_scale_bits": int(packed_scale_bits),
+        "bits_per_weight": round(
+            (packed_payload_bits + packed_scale_bits) / max(packed_numel, 1), 4
+        ),
+        "replaced_dense_bytes": replaced_dense_bytes,
+        "compression_vs_dense": round(
+            8.0
+            * replaced_dense_bytes
+            / max(packed_payload_bits + packed_scale_bits, 1.0),
+            2,
+        ),
+        "leaves": report_leaves,
+    }
+
+
+# ---------------------------------------------------------------------------
+# reader
+# ---------------------------------------------------------------------------
+
+
+def read_toc(path: str | Path) -> Dict[str, Any]:
+    with open(path, "rb") as f:
+        head = f.read(8)
+        if head[:4] != MAGIC:
+            raise ValueError(f"{path}: not a .pvqz file (bad magic {head[:4]!r})")
+        if head[4] != VERSION:
+            raise ValueError(f"{path}: unsupported .pvqz version {head[4]}")
+        f.seek(-_FOOTER.size, 2)
+        toc_offset, toc_len, end = _FOOTER.unpack(f.read(_FOOTER.size))
+        if end != END_MAGIC:
+            raise ValueError(f"{path}: truncated .pvqz (bad end magic)")
+        f.seek(toc_offset)
+        return json.loads(f.read(toc_len).decode())
+
+
+def _read_checked(f, offset: int, nbytes: int, crc: int, what: str) -> bytes:
+    f.seek(offset)
+    blob = f.read(nbytes)
+    if len(blob) != nbytes or zlib.crc32(blob) != crc:
+        raise ValueError(f"CRC mismatch in {what} (corrupt .pvqz)")
+    return blob
+
+
+def _decode_packed(f, rec: Dict[str, Any]) -> PackedPVQ:
+    blob = _read_checked(
+        f, rec["offset"], rec["nbytes"], rec["crc32"], f"pulses of {rec['path']}"
+    )
+    info = rec["pulse_info"]
+    pulse_shape = tuple(rec["pulse_shape"])
+    if info["codec"] == "enum":
+        groups = bitstream.decode_pulses(blob, info, rec["group"])
+        pulses = _groups_to_physical(groups, rec["layout"], pulse_shape)
+    else:
+        flat = bitstream.decode_pulses(blob, info)
+        pulses = _unstream(flat, rec["layout"], pulse_shape, tuple(rec["shape"]))
+    sblob = _read_checked(
+        f,
+        rec["scales_offset"],
+        rec["scales_nbytes"],
+        rec["scales_crc32"],
+        f"scales of {rec['path']}",
+    )
+    scales = np.frombuffer(sblob, "<f4").reshape(rec["scales_shape"])
+    return PackedPVQ(
+        pulses=jnp.asarray(pulses),
+        scales=jnp.asarray(scales.astype(np.float32)),
+        group=int(rec["group"]),
+        k=int(rec["k"]),
+        shape=tuple(rec["shape"]),
+        dtype=rec["dtype"],
+        layout=rec["layout"],
+        scale_mode=rec["scale_mode"],
+    )
+
+
+def _decode_raw(f, rec: Dict[str, Any]) -> np.ndarray:
+    blob = _read_checked(f, rec["offset"], rec["nbytes"], rec["crc32"], rec["path"])
+    arr = np.frombuffer(blob, dtype=np.dtype(rec["stored_dtype"])).reshape(
+        rec["shape"]
+    )
+    if rec["dtype"] != rec["stored_dtype"]:
+        arr = np.asarray(jnp.asarray(arr).astype(rec["dtype"]))
+    return arr
+
+
+def iter_pvqz(path: str | Path) -> Iterator[Tuple[str, Any]]:
+    """Stream (path_key, leaf) pairs, decoding ONE leaf at a time.
+
+    Packed leaves come back as bit-exact ``PackedPVQ`` (identical pulses and
+    scales to what was exported — no re-encode anywhere); raw leaves as
+    numpy arrays.  Peak decode memory is bounded by the largest single leaf,
+    never the whole artifact.
+    """
+    toc = read_toc(path)
+    with open(path, "rb") as f:
+        for rec in toc["leaves"]:
+            if rec["kind"] == "packed":
+                yield rec["path"], _decode_packed(f, rec)
+            else:
+                yield rec["path"], _decode_raw(f, rec)
+
+
+def load_pvqz(path: str | Path, target: Optional[Any] = None) -> Any:
+    """Load a ``.pvqz`` into a parameter pytree.
+
+    With ``target`` (e.g. ``model.init(...)`` params), leaves are restored
+    into its structure/dtypes — the serving entry point.  Without it, returns
+    a nested dict keyed by the stored slash paths.
+    """
+    flat = dict(iter_pvqz(path))
+    if target is not None:
+        from .checkpointer import _unflatten_into
+
+        return _unflatten_into(target, flat)
+    nested: Dict[str, Any] = {}
+    for key, leaf in flat.items():
+        node = nested
+        parts = key.split("/")
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = leaf
+    return nested

@@ -8,10 +8,19 @@ steps, so a mid-write crash can never be restored from (fault tolerance).
 Two PVQ paths:
 
 * ``PackedPVQ`` leaves (the unified packed artifact, any compress mode) are
-  stored *as the code*: int8 pulses (nibble-packed when |pulse| <= 7) +
-  f32 scales + the static metadata.  Restore reconstructs the identical
-  ``PackedPVQ`` — bit-exact pulses, **no re-encode** — so a serving job
-  restarts on exactly the artifact it checkpointed.
+  stored *as the code*, never the dequantized weights, under one of two
+  codecs selected by ``packed_codec``:
+
+  - ``'packed'`` (default): int8 pulses (nibble-packed when |pulse| <= 7)
+    + f32 scales, manifest codec ``pvq-packed`` — 4–8 bits/weight.
+  - ``'golomb'``: the pulse tensor as a chunked signed exp-Golomb bitstream
+    (``repro.core.bitstream``), manifest codec ``pvq-golomb`` — the paper's
+    §VI entropy coding, ~1.4–2 bits/weight at rest for N/K >= 5 layers.
+
+  Either way restore reconstructs the identical ``PackedPVQ`` — bit-exact
+  pulses, **no re-encode** — so a serving job restarts on exactly the
+  artifact it checkpointed.  (For a shippable single-file artifact with
+  per-leaf codec selection, see ``repro.checkpoint.artifact`` / ``.pvqz``.)
 * ``compress='pvq'`` additionally re-encodes *dense float* matrix leaves as
   PVQ codes on save and dequantizes on restore.  This is *lossy* for those
   weights (exactly the paper's trade) and bit-exact for everything else
@@ -32,7 +41,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import pvq_encode_grouped, pvq_decode_grouped
+from repro.core import bitstream, pvq_encode_grouped, pvq_decode_grouped
 from repro.core.codes import golomb_encode
 from repro.core.packed import PackedPVQ, is_packed
 from repro.core.packing import pack_nibbles, unpack_nibbles
@@ -69,14 +78,18 @@ class Checkpointer:
         *,
         keep: int = 3,
         compress: Optional[str] = None,  # None | 'pvq'
+        packed_codec: str = "packed",  # 'packed' | 'golomb'
         pvq_n_over_k: float = 1.0,
         pvq_group: int = 256,
         min_compress_size: int = 4096,
     ):
+        if packed_codec not in ("packed", "golomb"):
+            raise ValueError(f"packed_codec must be 'packed' or 'golomb', got {packed_codec!r}")
         self.dir = Path(directory)
         self.dir.mkdir(parents=True, exist_ok=True)
         self.keep = keep
         self.compress = compress
+        self.packed_codec = packed_codec
         self.pvq_n_over_k = pvq_n_over_k
         self.pvq_group = pvq_group
         self.min_compress_size = min_compress_size
@@ -114,17 +127,7 @@ class Checkpointer:
                 # the unified packed artifact: store the CODE, never the
                 # dequantized weights — restore is bit-exact, no re-encode
                 pulses = np.asarray(arr.pulses, np.int8)
-                if np.abs(pulses).max(initial=0) <= 7:
-                    packed_bits, pshape = pack_nibbles(pulses)
-                    np.save(tmp / f"{fname}.pulses.npy", packed_bits)
-                    pulse_format = "nibble"
-                else:
-                    np.save(tmp / f"{fname}.pulses.npy", pulses)
-                    pulse_format = "int8"
-                np.save(tmp / f"{fname}.scales.npy", np.asarray(arr.scales, np.float32))
-                manifest["leaves"][key] = {
-                    "codec": "pvq-packed",
-                    "pulse_format": pulse_format,
+                entry = {
                     "pulse_shape": list(pulses.shape),
                     "scales_shape": list(np.asarray(arr.scales).shape),
                     "group": int(arr.group),
@@ -134,6 +137,24 @@ class Checkpointer:
                     "layout": arr.layout,
                     "scale_mode": arr.scale_mode,
                 }
+                if self.packed_codec == "golomb":
+                    # §VI entropy coding at rest: chunked signed exp-Golomb
+                    # over the physical pulse tensor (~1.4-2 bits/weight)
+                    blob, info = bitstream.encode_pulses(pulses, "golomb")
+                    (tmp / f"{fname}.pulses.bin").write_bytes(blob)
+                    entry["codec"] = "pvq-golomb"
+                    entry["pulse_info"] = info
+                elif np.abs(pulses).max(initial=0) <= 7:
+                    packed_bits, pshape = pack_nibbles(pulses)
+                    np.save(tmp / f"{fname}.pulses.npy", packed_bits)
+                    entry["codec"] = "pvq-packed"
+                    entry["pulse_format"] = "nibble"
+                else:
+                    np.save(tmp / f"{fname}.pulses.npy", pulses)
+                    entry["codec"] = "pvq-packed"
+                    entry["pulse_format"] = "int8"
+                np.save(tmp / f"{fname}.scales.npy", np.asarray(arr.scales, np.float32))
+                manifest["leaves"][key] = entry
                 continue
             entry: Dict[str, Any] = {"shape": list(arr.shape), "dtype": str(arr.dtype)}
             is_float = str(arr.dtype) in ("float32", "float16", "bfloat16")
@@ -211,11 +232,17 @@ class Checkpointer:
         flat: Dict[str, Any] = {}
         for key, entry in manifest["leaves"].items():
             fname = key.replace("/", "__")
-            if entry["codec"] == "pvq-packed":
-                raw = np.load(d / f"{fname}.pulses.npy")
-                if entry["pulse_format"] == "nibble":
+            if entry["codec"] in ("pvq-packed", "pvq-golomb"):
+                if entry["codec"] == "pvq-golomb":
+                    blob = (d / f"{fname}.pulses.bin").read_bytes()
+                    pulses = bitstream.decode_pulses(blob, entry["pulse_info"]).reshape(
+                        entry["pulse_shape"]
+                    ).astype(np.int8)
+                elif entry["pulse_format"] == "nibble":
+                    raw = np.load(d / f"{fname}.pulses.npy")
                     pulses = unpack_nibbles(raw, tuple(entry["pulse_shape"])).astype(np.int8)
                 else:
+                    raw = np.load(d / f"{fname}.pulses.npy")
                     pulses = raw.astype(np.int8)
                 scales = np.load(d / f"{fname}.scales.npy").astype(np.float32)
                 flat[key] = PackedPVQ(

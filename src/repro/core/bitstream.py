@@ -1,0 +1,405 @@
+"""Vectorized bit-level I/O for PVQ pulse streams (paper §VI, at rest).
+
+``repro.core.codes`` carries the bit-exact *size models* and slow per-symbol
+reference codecs; this module is the production path: numpy-vectorized
+bit packing and **chunked** streams that decode with bounded Python overhead
+regardless of leaf size (all chunks advance one symbol per vectorized round,
+so a million-weight leaf costs ~``chunk`` numpy rounds, not a million).
+
+Three stream families, all bit-exact round-trips:
+
+* ``golomb``  — signed exp-Golomb order 0 (zigzag mapped), the paper's
+  Table-5 ladder: 1 bit for 0, 3 for +/-1, 5 for +/-2..3, ...
+* ``rle``     — (zero-run, nonzero-value) pairs, both Golomb coded; the
+  natural fit for N/K >= 5 layers (>= 4/5 zeros guaranteed).
+* ``enum``    — fixed-length Fischer enumeration: per group, the L1 norm
+  k_g in ``ceil(log2(K+1))`` bits then the lexicographic rank within
+  P(N, k_g) in ``index_bits(N, K)`` bits (``repro.core.enumeration``).
+  Optimal-length but O(N*K) bigint work per group — offline/small leaves.
+
+Chunked streams embed their per-chunk bit-offset table in the blob header
+(``[u32 n_chunks][u64 * n_chunks bit offsets][stream bytes]``) so a blob +
+its info dict is self-contained; :func:`encode_pulses` / :func:`decode_pulses`
+are the single entry points the ``.pvqz`` container and the checkpointer use.
+"""
+
+from __future__ import annotations
+
+import struct
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from .codes import golomb_length, rle_bits, rle_flat_pairs, unzigzag, zigzag
+from .enumeration import index_bits, index_to_vector, vector_to_index
+
+DEFAULT_CHUNK = 1024
+
+#: max G * group * K bigint ops admitted for the enumeration codec — its
+#: encode is O(N*K) Python bigints per group, so it is only *eligible* on
+#: small leaves even though it is the measured-bits winner almost everywhere
+DEFAULT_ENUM_BUDGET = 500_000
+
+#: deterministic tie-break order for codec selection (paper §VI practicality)
+PULSE_CODECS = ("golomb", "rle", "enum", "nibble", "int8")
+
+# ---------------------------------------------------------------------------
+# bit-packing primitives
+# ---------------------------------------------------------------------------
+
+
+def pack_bits(codes: np.ndarray, lengths: np.ndarray) -> Tuple[np.ndarray, int]:
+    """Concatenate variable-length big-endian codewords into a byte array.
+
+    ``codes[i]`` carries the low ``lengths[i]`` bits of symbol i (MSB first on
+    the wire; leading-zero bits of the codeword are part of the length).
+    Vectorized over symbols: one numpy pass per bit *position* (bounded by the
+    longest codeword, ~65 for int64 symbols), not per symbol.
+    Returns (uint8 array from ``np.packbits``, total_bits).
+    """
+    codes = np.asarray(codes, dtype=np.uint64)
+    lengths = np.asarray(lengths, dtype=np.int64)
+    total = int(lengths.sum())
+    if total == 0:
+        return np.zeros(0, np.uint8), 0
+    starts = np.cumsum(lengths) - lengths
+    bits = np.zeros(total, np.uint8)
+    for j in range(int(lengths.max())):
+        m = lengths > j
+        shift = (lengths[m] - 1 - j).astype(np.uint64)
+        bits[starts[m] + j] = ((codes[m] >> shift) & np.uint64(1)).astype(np.uint8)
+    return np.packbits(bits), total
+
+
+def unpack_to_bits(blob: bytes | np.ndarray) -> np.ndarray:
+    """Byte blob -> 0/1 uint8 array (length a multiple of 8)."""
+    return np.unpackbits(np.frombuffer(bytes(blob), np.uint8))
+
+
+def _bit_length(x: np.ndarray) -> np.ndarray:
+    """Per-element bit length of positive int64 values (vectorized)."""
+    # float64 log2 is exact-enough below 2^52: the gap to the next power of
+    # two is >= 1 ulp at these magnitudes, so floor() cannot round across it.
+    return (np.floor(np.log2(x.astype(np.float64))).astype(np.int64)) + 1
+
+
+# ---------------------------------------------------------------------------
+# chunked signed exp-Golomb
+# ---------------------------------------------------------------------------
+
+
+def golomb_lengths_codes(values: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """(codes, lengths) of the signed exp-Golomb codewords for ``values``."""
+    x1 = zigzag(np.asarray(values, np.int64).ravel()) + 1
+    nb = _bit_length(x1)
+    return x1.astype(np.uint64), 2 * nb - 1
+
+
+def golomb_encode_chunked(
+    values: np.ndarray, chunk: int = DEFAULT_CHUNK
+) -> Tuple[np.ndarray, np.ndarray, int]:
+    """Encode to one contiguous bitstream + per-chunk bit offsets.
+
+    Returns (packed uint8 array, chunk_offsets uint64 (ceil(count/chunk),),
+    total_bits).  Offsets point at the first bit of symbols 0, chunk,
+    2*chunk, ... — the decoder processes all chunks in parallel.
+    """
+    codes, lengths = golomb_lengths_codes(values)
+    if codes.size == 0:
+        return np.zeros(0, np.uint8), np.zeros(0, np.uint64), 0
+    ends = np.cumsum(lengths)
+    n_chunks = -(-codes.size // chunk)
+    offsets = np.concatenate([[0], ends[chunk - 1 :: chunk]])[:n_chunks]
+    blob, total = pack_bits(codes, lengths)
+    return blob, offsets.astype(np.uint64), total
+
+
+def golomb_decode_chunked(
+    blob: bytes | np.ndarray,
+    chunk_offsets: np.ndarray,
+    count: int,
+    chunk: int = DEFAULT_CHUNK,
+) -> np.ndarray:
+    """Inverse of :func:`golomb_encode_chunked` (vectorized across chunks).
+
+    Every chunk advances one symbol per round; a round is ~a dozen numpy ops
+    on (n_chunks,)-sized arrays, so wall time scales with ``chunk``, not with
+    ``count``.  Working set: the unpacked bit array (1 B/bit) plus one
+    next-one index table (4 B/bit for streams under 2^31 bits) — built in
+    place so decode memory stays a small multiple of the compressed blob,
+    not of the dense leaf.
+    """
+    if count == 0:
+        return np.zeros(0, np.int64)
+    bits = unpack_to_bits(blob)
+    # next-one table: smallest index >= i holding a 1 bit (suffix-min in place)
+    idx_dtype = np.int64 if bits.size > np.iinfo(np.int32).max else np.int32
+    nxt = np.where(bits == 1, np.arange(bits.size, dtype=idx_dtype), bits.size)
+    rev = nxt[::-1]
+    np.minimum.accumulate(rev, out=rev)
+    offsets = np.asarray(chunk_offsets, np.int64)
+    n_chunks = offsets.size
+    counts = np.full(n_chunks, chunk, np.int64)
+    counts[-1] = count - chunk * (n_chunks - 1)
+    pos = offsets.copy()
+    out = np.empty(count, np.int64)
+    out_base = np.arange(n_chunks) * chunk
+    for s in range(int(counts.max())):
+        active = counts > s
+        p = pos[active]
+        f = nxt[p]  # leading 1 of the codeword; z = f - p prefix zeros
+        z = f - p
+        val = np.zeros(p.size, np.int64)
+        for j in range(int(z.max()) + 1):
+            take = j <= z
+            bitj = bits[np.minimum(f + j, bits.size - 1)]
+            val = np.where(take, (val << 1) | bitj, val)
+        out[out_base[active] + s] = val - 1
+        pos[active] = f + z + 1
+    return unzigzag(out)
+
+
+# ---------------------------------------------------------------------------
+# zero-run RLE (pairs stream, Golomb coded)
+# ---------------------------------------------------------------------------
+
+
+def rle_encode_chunked(
+    values: np.ndarray, chunk: int = DEFAULT_CHUNK
+) -> Tuple[np.ndarray, np.ndarray, int, int]:
+    """(blob, chunk_offsets, total_bits, n_pairs) — same pair stream as
+    ``codes.rle_encode`` (and therefore the same exact size), chunk-decodable.
+    """
+    flat = rle_flat_pairs(values)
+    blob, offsets, nbits = golomb_encode_chunked(flat, chunk)
+    return blob, offsets, nbits, flat.size // 2
+
+
+def rle_decode_chunked(
+    blob: bytes | np.ndarray,
+    chunk_offsets: np.ndarray,
+    n_pairs: int,
+    total: int,
+    chunk: int = DEFAULT_CHUNK,
+) -> np.ndarray:
+    flat = golomb_decode_chunked(blob, chunk_offsets, 2 * n_pairs, chunk)
+    runs, vals = flat[0::2], flat[1::2]
+    out = np.zeros(total, np.int64)
+    if n_pairs:
+        pos = np.cumsum(runs) + np.arange(n_pairs)  # index of each pair's value
+        has_val = vals != 0
+        out[pos[has_val]] = vals[has_val]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# fixed-length Fischer enumeration stream
+# ---------------------------------------------------------------------------
+
+
+def enum_bits_per_group(n: int, k_max: int) -> int:
+    """Fixed bits per group: the L1 header plus the P(N, K) rank."""
+    return max(int(k_max).bit_length(), 1) + index_bits(n, k_max)
+
+
+def enum_encode_groups(groups: np.ndarray, k_max: int) -> Tuple[bytes, int]:
+    """Fixed-length enumeration stream of a (G, N) group matrix.
+
+    Each group may sit on any pyramid P(N, k_g) with k_g <= k_max (zero
+    groups and K>127-clamped groups included): the per-group record is
+    ``k_g`` then the rank of the vector within P(N, k_g).  Returns
+    (blob, bits_per_group); total bits = G * bits_per_group.  O(N*K) bigint
+    work per group — gate by leaf size (see ``.pvqz`` codec selection).
+    """
+    groups = np.asarray(groups, np.int64)
+    g, n = groups.shape
+    kbits = max(int(k_max).bit_length(), 1)
+    ibits = index_bits(n, k_max)
+    per = kbits + ibits
+    acc = 0
+    for row in groups:
+        k_g = int(np.abs(row).sum())
+        if k_g > k_max:
+            raise ValueError(f"group L1 {k_g} exceeds k_max {k_max}")
+        acc = (acc << per) | (k_g << ibits) | vector_to_index(row.tolist())
+    nbytes = (per * g + 7) // 8
+    acc <<= nbytes * 8 - per * g  # left-align: stream starts at bit 0
+    return acc.to_bytes(nbytes, "big") if nbytes else b"", per
+
+
+def enum_decode_groups(blob: bytes, g: int, n: int, k_max: int) -> np.ndarray:
+    kbits = max(int(k_max).bit_length(), 1)
+    ibits = index_bits(n, k_max)
+    per = kbits + ibits
+    acc = int.from_bytes(blob, "big")
+    total_bits = len(blob) * 8
+    out = np.zeros((g, n), np.int64)
+    for i in range(g):
+        shift = total_bits - per * (i + 1)
+        rec = (acc >> shift) & ((1 << per) - 1)
+        k_g = rec >> ibits
+        idx = rec & ((1 << ibits) - 1)
+        out[i] = index_to_vector(idx, n, k_g)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# unified pulse-stream entry points (used by .pvqz and the checkpointer)
+# ---------------------------------------------------------------------------
+
+#: chunked-stream blob header: [u32 n_chunks][u64 * n_chunks bit offsets]
+_HDR_COUNT = struct.Struct("<I")
+
+
+def _wrap_chunked(stream: np.ndarray, offsets: np.ndarray) -> bytes:
+    return (
+        _HDR_COUNT.pack(offsets.size)
+        + offsets.astype("<u8").tobytes()
+        + stream.tobytes()
+    )
+
+
+def _unwrap_chunked(blob: bytes) -> Tuple[np.ndarray, bytes]:
+    (n_chunks,) = _HDR_COUNT.unpack_from(blob, 0)
+    off_end = 4 + 8 * n_chunks
+    offsets = np.frombuffer(blob[4:off_end], "<u8")
+    return offsets, blob[off_end:]
+
+
+def encode_pulses(
+    values: np.ndarray,
+    codec: str,
+    *,
+    k_max: Optional[int] = None,
+    chunk: int = DEFAULT_CHUNK,
+) -> Tuple[bytes, Dict]:
+    """Encode a pulse stream (any shape; ``enum`` needs (G, N) groups).
+
+    Returns (blob, info); ``info`` holds everything :func:`decode_pulses`
+    needs besides the blob itself: codec, count, payload bits, and
+    codec-specific fields.  Codecs: ``golomb`` / ``rle`` (chunked, embedded
+    offset table), ``enum`` (fixed length, needs ``k_max`` and a 2-D group
+    matrix), ``nibble`` / ``int8`` (raw fallbacks).
+    """
+    groups = np.asarray(values, np.int64)
+    flat = groups.ravel()
+    info: Dict = {"codec": codec, "count": int(flat.size)}
+    if codec == "golomb":
+        stream, offsets, nbits = golomb_encode_chunked(flat, chunk)
+        info.update(nbits=int(nbits), chunk=chunk)
+        return _wrap_chunked(stream, offsets), info
+    if codec == "rle":
+        stream, offsets, nbits, n_pairs = rle_encode_chunked(flat, chunk)
+        info.update(nbits=int(nbits), chunk=chunk, n_pairs=int(n_pairs))
+        return _wrap_chunked(stream, offsets), info
+    if codec == "enum":
+        if k_max is None:
+            raise ValueError("enum codec needs k_max")
+        if groups.ndim != 2:
+            raise ValueError("enum codec needs a (G, N) group matrix")
+        blob, per = enum_encode_groups(groups, k_max)
+        info.update(
+            nbits=int(per * groups.shape[0]),
+            k_max=int(k_max),
+            n_groups=int(groups.shape[0]),
+            group=int(groups.shape[1]),
+        )
+        return blob, info
+    if codec == "nibble":
+        from .packing import pack_nibbles  # one 4-bit layout, shared with the checkpointer
+
+        if np.abs(flat).max(initial=0) > 7:
+            raise ValueError("nibble codec requires |pulse| <= 7")
+        packed, _ = pack_nibbles(flat)
+        info["nbits"] = 4 * int(flat.size)
+        return packed.tobytes(), info
+    if codec == "int8":
+        info["nbits"] = 8 * int(flat.size)
+        return flat.astype(np.int8).tobytes(), info
+    raise ValueError(f"unknown pulse codec {codec!r}")
+
+
+def decode_pulses(blob: bytes, info: Dict, group: Optional[int] = None) -> np.ndarray:
+    """Inverse of :func:`encode_pulses`.
+
+    Returns the flat int64 symbol stream, reshaped to (G, group) when
+    ``group`` is given (``enum`` blobs are always grouped).
+    """
+    codec, count = info["codec"], info["count"]
+    if codec == "golomb":
+        offsets, stream = _unwrap_chunked(blob)
+        flat = golomb_decode_chunked(stream, offsets, count, info["chunk"])
+    elif codec == "rle":
+        offsets, stream = _unwrap_chunked(blob)
+        flat = rle_decode_chunked(
+            stream, offsets, info["n_pairs"], count, info["chunk"]
+        )
+    elif codec == "enum":
+        return enum_decode_groups(
+            blob, info["n_groups"], info["group"], info["k_max"]
+        )
+    elif codec == "nibble":
+        from .packing import unpack_nibbles
+
+        flat = unpack_nibbles(np.frombuffer(blob, np.uint8), (count,))
+    elif codec == "int8":
+        flat = np.frombuffer(blob, np.int8).astype(np.int64)[:count]
+    else:
+        raise ValueError(f"unknown pulse codec {codec!r}")
+    return flat.reshape(-1, group) if group is not None else flat
+
+
+def measured_bits(
+    stream: np.ndarray,
+    *,
+    group_matrix: Optional[np.ndarray] = None,
+    k_max: Optional[int] = None,
+) -> Dict[str, float]:
+    """Exact payload bits under each codec (the .pvqz selection rule input).
+
+    ``stream`` is the symbol stream the variable-length codecs would encode
+    (golomb/rle/nibble/int8); ``group_matrix``/``k_max`` additionally price
+    the fixed-length enumeration stream over the (G, N) group view.  Uses the
+    ``core.codes`` size models — the ``golomb_length`` sum and the RLE pair
+    model are *exact* (identical to the produced streams); the enumeration
+    entry is the fixed-length formula.
+    """
+    flat = np.asarray(stream, np.int64).ravel()
+    out = {
+        "golomb": float(golomb_length(flat).sum()) if flat.size else 0.0,
+        "rle": float(rle_bits(flat)),
+        "int8": 8.0 * flat.size,
+    }
+    if np.abs(flat).max(initial=0) <= 7:
+        out["nibble"] = 4.0 * flat.size
+    if group_matrix is not None and k_max is not None:
+        n = int(group_matrix.shape[-1])
+        if n <= 4096:
+            out["enum"] = float(
+                enum_bits_per_group(n, k_max) * group_matrix.shape[0]
+            )
+    return out
+
+
+def choose_codec(
+    stream: np.ndarray,
+    groups: np.ndarray,
+    k: int,
+    *,
+    enum_budget: int = DEFAULT_ENUM_BUDGET,
+) -> Tuple[str, Dict[str, float]]:
+    """Pick the cheapest codec by measured payload bits — THE ``.pvqz``
+    per-leaf selection rule (also applied by ``packed_stats`` so its report
+    matches what the artifact actually produces).
+
+    Returns (codec, {codec: bits}).  Enumeration is priced always (it goes
+    in the report) but only *eligible* when the bigint encode work
+    ``G * group * K`` fits the budget.
+    """
+    sizes = measured_bits(stream, group_matrix=groups, k_max=k)
+    eligible = dict(sizes)
+    enum_cost = groups.shape[0] * groups.shape[1] * max(k, 1)
+    if "enum" in eligible and enum_cost > enum_budget:
+        del eligible["enum"]
+    codec = min(eligible, key=lambda c: (eligible[c], PULSE_CODECS.index(c)))
+    return codec, sizes

@@ -79,26 +79,44 @@ def golomb_decode(blob: bytes, nbits: int, count: int) -> np.ndarray:
 # ---------------------------------------------------------------------------
 
 
+def rle_flat_pairs(values: np.ndarray) -> np.ndarray:
+    """Interleaved (zero-run, nonzero-value) pair stream of ``values``.
+
+    Vectorized: one pair per nonzero (zeros preceding it, then the value),
+    plus — when the vector ends in zeros — a terminator pair with value 0
+    (invalid as a nonzero).  Returns the flat int64 symbol stream
+    ``[run0, v0, run1, v1, ...]`` of length ``2 * n_pairs``.
+    """
+    v = np.asarray(values, dtype=np.int64).ravel()
+    nz = np.flatnonzero(v)
+    runs = np.diff(np.concatenate([np.asarray([-1]), nz])) - 1
+    vals = v[nz]
+    trailing = v.size - (int(nz[-1]) + 1 if nz.size else 0)
+    if trailing:
+        runs = np.concatenate([runs, np.asarray([trailing])])
+        vals = np.concatenate([vals, np.asarray([0])])
+    flat = np.empty(2 * runs.size, dtype=np.int64)
+    flat[0::2] = runs
+    flat[1::2] = vals
+    return flat
+
+
+def rle_bits(values: np.ndarray) -> int:
+    """Exact bit count of :func:`rle_encode` without building the stream —
+    the size model the artifact codec chooser and ``packed_stats`` use."""
+    flat = rle_flat_pairs(values)
+    return int(golomb_length(flat).sum()) if flat.size else 0
+
+
 def rle_encode(values: np.ndarray) -> Tuple[bytes, int, int]:
     """(zero-run, nonzero-value) pair stream; both exp-Golomb coded.
 
     Returns (blob, nbits, n_pairs). A final run with no trailing value is
     encoded as a pair with value 0 (invalid as a nonzero, acts as terminator).
     """
-    v = np.asarray(values).ravel()
-    pairs = []
-    run = 0
-    for x in v.tolist():
-        if x == 0:
-            run += 1
-        else:
-            pairs.append((run, x))
-            run = 0
-    if run:
-        pairs.append((run, 0))
-    flat = np.asarray([z for p in pairs for z in p], dtype=np.int64)
+    flat = rle_flat_pairs(values)
     blob, nbits = golomb_encode(flat)
-    return blob, nbits, len(pairs)
+    return blob, nbits, flat.size // 2
 
 
 def rle_decode(blob: bytes, nbits: int, n_pairs: int, total: int) -> np.ndarray:

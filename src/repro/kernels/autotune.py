@@ -1,21 +1,28 @@
-"""Tile-size autotuner for the PVQ dequant-matmul kernel.
+"""Autotuner for the PVQ Pallas kernels: matmul tiles + encoder knobs.
 
 ``pvq_matmul`` takes (bm, bn, bk) tile sizes; the best choice depends on the
 GEMM shape (an m=8 decode step wants a skinny bm, a 236B-config FFN block
 wants full MXU 128x128 tiles), the dtype, and the backend.  This module
 searches a small MXU/VPU-aligned candidate grid, times each candidate with
 ``block_until_ready``, and persists the winner in a JSON cache so the search
-runs once per (shape, dtype, backend) — ever.
+runs once per (shape, dtype, backend) — ever.  ``pvq_encode``'s
+(bg, delta_max) knobs go through the same cache (ROADMAP "autotune the
+encoder too"): ``get_encode_params`` mirrors ``get_tiles`` dispatch.
 
 Cache
 -----
 * location: ``$REPRO_PVQ_TUNE_CACHE`` if set, else
   ``~/.cache/repro/pvq_tune_cache.json``
-* key: ``"m x k x n : g<group> : <dtype> : <backend> : kv<N> : v2"`` (no
-  spaces) — ``kv<N>`` is ``pvq_matmul.KERNEL_VERSION``, so a material kernel
-  body change (e.g. the v2 int8-native contraction) invalidates every tile
-  timing measured against the old body instead of silently serving it.
-* value: ``{"bm":…, "bn":…, "bk":…, "us":…, "candidates":…}``
+* matmul key: ``"m x k x n : g<group> : <dtype> : <backend> : kv<N> : v2"``
+  (no spaces) — ``kv<N>`` is ``pvq_matmul.KERNEL_VERSION``, so a material
+  kernel body change (e.g. the v2 int8-native contraction) invalidates every
+  tile timing measured against the old body instead of silently serving it.
+* matmul value: ``{"bm":…, "bn":…, "bk":…, "us":…, "candidates":…}``
+* encoder key: ``"enc g x n : k<K> : <dtype> : <backend> : ekv<N> : v2"``
+  with ``ekv<N>`` = ``pvq_encode.ENCODE_KERNEL_VERSION``; value
+  ``{"bg":…, "delta_max":…, "us":…, "candidates":…}``.  ``delta_max``
+  candidates never drop below the heuristic default — tuning may only make
+  the encoder *more* exact, never less.
 
 Dispatch contract (used by ``kernels.ops.pvq_matmul``):
 
@@ -41,6 +48,7 @@ from typing import Dict, Iterable, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from .pvq_encode import ENCODE_KERNEL_VERSION, default_sort_impl, pvq_encode_batch
 from .pvq_matmul import KERNEL_VERSION, normalize_tiles, pvq_matmul
 
 # v2: keys carry the kernel-body version tag (ROADMAP "tuned-tile
@@ -226,6 +234,138 @@ def autotune(
     }
     _persist(key, entry)
     return entry
+
+
+# ---------------------------------------------------------------------------
+# encoder autotune: pvq_encode's (bg, delta_max) knobs (ROADMAP satellite)
+# ---------------------------------------------------------------------------
+
+#: heuristic defaults (the kernel's historical hardcoded values)
+ENCODE_DEFAULTS: Tuple[int, int] = (8, 32)
+#: bg sweeps the VMEM sublane-tile height; delta_max never drops below the
+#: default so a tuned encoder is at least as accurate as an untuned one
+#: (delta_max bounds the exact-greedy correction, i.e. output quality).
+ENCODE_BG_CANDIDATES = (4, 8, 16, 32)
+ENCODE_DELTA_CANDIDATES = (32, 64)
+MAX_ENCODE_CANDIDATES_INTERPRET = 4
+MAX_ENCODE_CANDIDATES_COMPILED = 8
+
+
+def encode_cache_key(g: int, n: int, k_pulses: int, dtype, backend: str) -> str:
+    """Same store/schema as the matmul tiles; ``ekv<N>`` tags the encoder
+    kernel body so a version bump invalidates stale (bg, delta_max) timings."""
+    return (
+        f"enc{g}x{n}:k{k_pulses}:{jnp.dtype(dtype).name}:{backend}"
+        f":ekv{ENCODE_KERNEL_VERSION}:{_SCHEMA}"
+    )
+
+
+def encode_candidates(
+    g: int, n: int, max_candidates: int
+) -> Tuple[Tuple[int, int], ...]:
+    """(bg, delta_max) grid, deduped after clamping bg to the group count.
+    The heuristic default is always candidate #0 (so a truncated search can
+    never be worse than no search); VMEM gating applies to the *clamped* bg
+    actually dispatched."""
+    cands: list[Tuple[int, int]] = [(min(ENCODE_DEFAULTS[0], g), ENCODE_DEFAULTS[1])]
+    for delta in ENCODE_DELTA_CANDIDATES:
+        for bg in ENCODE_BG_CANDIDATES:
+            t = (min(bg, g), delta)
+            if t[0] * n * 4 * 6 > _VMEM_BUDGET_BYTES:  # ~6 (bg, n) f32 live arrays
+                continue
+            if t not in cands:
+                cands.append(t)
+    return tuple(cands[:max_candidates])
+
+
+def _time_encode_candidate(
+    w, k_pulses: int, cand: Tuple[int, int], reps: int, interpret: bool
+) -> float:
+    # time the same bulk-allocation lowering production dispatch will use
+    # (REPRO_PVQ_ENCODE_SORT=bisect tunes — and works — on Mosaic versions
+    # whose argsort path doesn't lower at all)
+    bg, delta_max = cand
+    sort_impl = default_sort_impl()
+    p, _ = pvq_encode_batch(
+        w, k_pulses=k_pulses, bg=bg, delta_max=delta_max, interpret=interpret,
+        sort_impl=sort_impl,
+    )
+    p.block_until_ready()  # warmup: trace + compile outside the timed region
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        pvq_encode_batch(
+            w, k_pulses=k_pulses, bg=bg, delta_max=delta_max,
+            interpret=interpret, sort_impl=sort_impl,
+        )[0].block_until_ready()
+    return (time.perf_counter() - t0) / reps
+
+
+def autotune_encode(
+    g: int,
+    n: int,
+    k_pulses: int,
+    *,
+    dtype=jnp.float32,
+    reps: int = 3,
+    interpret: Optional[bool] = None,
+    max_candidates: Optional[int] = None,
+) -> dict:
+    """Search (bg, delta_max) for a (g, n, K) encode shape; persist + return
+    ``{"bg","delta_max","us","candidates"}``.  A cache hit skips the search."""
+    backend = jax.default_backend()
+    if interpret is None:
+        interpret = backend != "tpu"
+    key = encode_cache_key(g, n, k_pulses, dtype, backend)
+    hit = _load().get(key)
+    if hit is not None:
+        return hit
+    if max_candidates is None:
+        max_candidates = (
+            MAX_ENCODE_CANDIDATES_INTERPRET
+            if interpret
+            else MAX_ENCODE_CANDIDATES_COMPILED
+        )
+    cands = encode_candidates(g, n, max_candidates)
+    w = jax.random.laplace(jax.random.PRNGKey(0), (g, n), jnp.float32).astype(dtype)
+    best: Optional[Tuple[int, int]] = None
+    best_t = float("inf")
+    for c in cands:
+        dt = _time_encode_candidate(w, k_pulses, c, reps, interpret)
+        if dt < best_t:
+            best, best_t = c, dt
+    assert best is not None
+    entry = {
+        "bg": best[0],
+        "delta_max": best[1],
+        "us": round(1e6 * best_t, 2),
+        "candidates": len(cands),
+    }
+    _persist(key, entry)
+    return entry
+
+
+def get_encode_params(
+    g: int,
+    n: int,
+    k_pulses: int,
+    *,
+    dtype=jnp.float32,
+    search: Optional[bool] = None,
+    interpret: Optional[bool] = None,
+) -> Tuple[int, int]:
+    """(bg, delta_max) dispatch for ``ops.pvq_encode``: cache hit > search >
+    heuristic default.  ``search=None`` defers to ``REPRO_PVQ_AUTOTUNE``,
+    exactly like the matmul tile dispatch."""
+    backend = jax.default_backend()
+    hit = _load().get(encode_cache_key(g, n, k_pulses, dtype, backend))
+    if hit is not None:
+        return (hit["bg"], hit["delta_max"])
+    if search is None:
+        search = os.environ.get("REPRO_PVQ_AUTOTUNE", "") not in ("", "0", "false")
+    if search:
+        e = autotune_encode(g, n, k_pulses, dtype=dtype, interpret=interpret)
+        return (e["bg"], e["delta_max"])
+    return (min(ENCODE_DEFAULTS[0], g), ENCODE_DEFAULTS[1])
 
 
 def get_tiles(

@@ -124,23 +124,47 @@ def packed_matmul(
 # ---------------------------------------------------------------------------
 
 
+def _encode_sort_impl(sort_impl: str | None) -> str:
+    """``'argsort'`` (default) or ``'bisect'`` — the Mosaic fallback when a
+    toolchain rejects in-kernel ``jnp.argsort``; overridable per-process via
+    ``REPRO_PVQ_ENCODE_SORT=bisect``."""
+    from .pvq_encode import default_sort_impl
+
+    return sort_impl if sort_impl is not None else default_sort_impl()
+
+
 def pvq_encode(
     w,
     *,
     k_pulses: int,
-    bg: int = 8,
-    delta_max: int = 32,
+    bg: int | None = None,
+    delta_max: int | None = None,
     interpret: bool | None = None,
+    sort_impl: str | None = None,
 ):
     """Batched PVQ projection onto P(N, K) (sort-based, bounded correction).
 
     Returns (pulses i32 (g, n), rho_ls f32 (g,)).  ``delta_max >= k_pulses``
-    reproduces the exact greedy search.
+    reproduces the exact greedy search.  ``bg``/``delta_max`` default to the
+    persistent autotune cache (tuned entries win; ``REPRO_PVQ_AUTOTUNE=1``
+    enables search-on-miss; else the heuristic defaults) — explicit values
+    always win, exactly like the matmul tile dispatch.
     """
     if interpret is None:
         interpret = not _on_tpu()
+    if bg is None or delta_max is None:
+        tuned_bg, tuned_delta = autotune_lib.get_encode_params(
+            w.shape[0], w.shape[1], k_pulses, dtype=w.dtype, interpret=interpret
+        )
+        bg = bg if bg is not None else tuned_bg
+        delta_max = delta_max if delta_max is not None else tuned_delta
     return _encode_kernel(
-        w, k_pulses=k_pulses, bg=bg, delta_max=delta_max, interpret=interpret
+        w,
+        k_pulses=k_pulses,
+        bg=bg,
+        delta_max=delta_max,
+        interpret=interpret,
+        sort_impl=_encode_sort_impl(sort_impl),
     )
 
 
@@ -162,8 +186,8 @@ def encode_weight_matrix(
     *,
     group: int = 128,
     k_pulses: int,
-    bg: int = 8,
-    delta_max: int = 32,
+    bg: int | None = None,
+    delta_max: int | None = None,
     interpret: bool | None = None,
 ):
     """Encode a dense weight matrix into matmul-kernel format.
@@ -197,7 +221,7 @@ def pvq_encode_grouped_fast(
     flat: jax.Array,
     group: int,
     k: int,
-    delta_max: int = 32,
+    delta_max: int | None = None,
     scale_mode: str = "ls",
 ):
     """Grouped encode of a flat vector on the fast sorted path.
@@ -207,6 +231,8 @@ def pvq_encode_grouped_fast(
     on CPU).  Returns (pulses i32 (G, group), rho f32 (G,)); trailing
     zero-padding never receives pulses.  The kernel natively emits the ``ls``
     scale; other scale modes are recomputed from the pulses.
+    ``delta_max=None`` resolves through the encoder autotune cache (both
+    backends use the resolved value, so results agree across them).
     """
     from repro.core.pvq import _scales, pvq_quantize_direction_fast
 
@@ -215,6 +241,10 @@ def pvq_encode_grouped_fast(
     if pad:
         flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
     wg = flat.reshape(-1, group)
+    if delta_max is None:
+        _, delta_max = autotune_lib.get_encode_params(
+            wg.shape[0], group, k, dtype=wg.dtype, interpret=not _on_tpu()
+        )
     if _on_tpu():
         pulses, rho = pvq_encode(wg, k_pulses=k, delta_max=delta_max)
         if scale_mode != "ls":

@@ -27,6 +27,7 @@ the gradient compressor's hot path (via ``kernels.ops``).
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
@@ -36,8 +37,63 @@ from jax.experimental.pallas import tpu as pltpu
 # jax renamed TPUCompilerParams -> CompilerParams across 0.4.x/0.5.x
 _CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
 
+#: bump on material kernel-body changes — the encoder autotune cache keys
+#: carry ``ekv{ENCODE_KERNEL_VERSION}`` so stale (bg, delta_max) timings miss.
+ENCODE_KERNEL_VERSION = 1
 
-def _kernel(w_ref, p_ref, rho_ref, *, k_pulses: int, delta_max: int):
+
+def _bulk_mask_argsort(frac, bulk):
+    """0/1 mask of the ``bulk`` largest fracs per row (ties -> lower lane),
+    via one stable sort — the default bulk-allocation path."""
+    order = jnp.argsort(-frac, axis=-1, stable=True)
+    rank = jnp.argsort(order, axis=-1, stable=True)  # rank 0 = biggest frac
+    return (rank < bulk[:, None]).astype(jnp.float32)
+
+
+def _bulk_mask_bisect(frac, bulk):
+    """Same mask, no sort: threshold-count binary search over the IEEE bit
+    patterns of ``frac`` (>= 0, so int32 bit patterns order like the floats).
+
+    Elementwise compares + lane reductions + a cumsum only — the Mosaic
+    fallback for toolchain versions that reject ``jnp.argsort`` inside a
+    kernel body.  Tie-break (equal fracs -> lower lane first) matches the
+    stable argsort bit-for-bit.
+    """
+    fb = jax.lax.bitcast_convert_type(frac.astype(jnp.float32), jnp.int32)
+    r = bulk[:, None]
+    lo = jnp.full((frac.shape[0], 1), -1, jnp.int32)
+    hi = jnp.full((frac.shape[0], 1), jnp.int32(0x7F7FFFFF))
+
+    def body(_, state):
+        # invariant: count(fb > lo) > r fails, count(fb > hi) <= r holds
+        lo, hi = state
+        mid = lo + (hi - lo) // 2
+        cnt = jnp.sum((fb > mid).astype(jnp.int32), axis=-1, keepdims=True)
+        ok = cnt <= r
+        return jnp.where(ok, lo, mid), jnp.where(ok, mid, hi)
+
+    _, hi = jax.lax.fori_loop(0, 32, body, (lo, hi))
+    gt = fb > hi
+    extra = r - jnp.sum(gt.astype(jnp.int32), axis=-1, keepdims=True)
+    eq = fb == hi
+    eq_rank = jnp.cumsum(eq.astype(jnp.int32), axis=-1)
+    return (gt | (eq & (eq_rank <= extra))).astype(jnp.float32)
+
+
+_BULK_MASKS = {"argsort": _bulk_mask_argsort, "bisect": _bulk_mask_bisect}
+
+
+def default_sort_impl() -> str:
+    """Process-wide bulk-allocation lowering: ``REPRO_PVQ_ENCODE_SORT``
+    (``bisect`` = the no-argsort Mosaic fallback) or ``argsort``.  Every
+    defaulted dispatch — ``ops.pvq_encode`` and the autotune timing runs —
+    resolves through this, so tuned timings measure the lowering that
+    production will actually run."""
+    return os.environ.get("REPRO_PVQ_ENCODE_SORT", "").strip() or "argsort"
+
+
+def _kernel(w_ref, p_ref, rho_ref, *, k_pulses: int, delta_max: int,
+            sort_impl: str = "argsort"):
     w = w_ref[...].astype(jnp.float32)  # (bg, n)
     bg, n = w.shape
     absw = jnp.abs(w)
@@ -46,13 +102,12 @@ def _kernel(w_ref, p_ref, rho_ref, *, k_pulses: int, delta_max: int):
     target = absw * (k_pulses / safe)  # real-valued pyramid allocation
     y = jnp.where(l1 > 0, jnp.floor(target), 0.0)
 
-    # ---- largest-remainder bulk allocation (one sort instead of a K-loop)
+    # ---- largest-remainder bulk allocation (one sort — or, for Mosaic
+    # versions without in-kernel argsort, a bit-space binary search)
     remaining = (k_pulses - jnp.sum(y, axis=-1)).astype(jnp.int32)  # (bg,)
     bulk = jnp.maximum(remaining - delta_max, 0)
     frac = target - y
-    order = jnp.argsort(-frac, axis=-1, stable=True)
-    rank = jnp.argsort(order, axis=-1, stable=True)  # rank 0 = biggest frac
-    bump = (rank < bulk[:, None]).astype(jnp.float32)
+    bump = _BULK_MASKS[sort_impl](frac, bulk)
     y = y + jnp.where(l1 > 0, bump, 0.0)
 
     # ---- bounded greedy correction: exact argmax placement of the last few
@@ -89,7 +144,8 @@ def _kernel(w_ref, p_ref, rho_ref, *, k_pulses: int, delta_max: int):
 
 
 @functools.partial(
-    jax.jit, static_argnames=("k_pulses", "bg", "delta_max", "interpret")
+    jax.jit,
+    static_argnames=("k_pulses", "bg", "delta_max", "interpret", "sort_impl"),
 )
 def pvq_encode_batch(
     w: jax.Array,  # (g, n) f32/bf16 groups to encode
@@ -98,14 +154,20 @@ def pvq_encode_batch(
     bg: int = 8,
     delta_max: int = 32,
     interpret: bool = False,
+    sort_impl: str = "argsort",
 ):
     """Returns (pulses i32 (g, n), rho_ls f32 (g,)).
 
     ``delta_max`` bounds the exact greedy correction after the sort-based
     allocation; ``delta_max >= k_pulses`` degenerates to the exact greedy
     search.  Group counts that don't tile by ``bg`` are zero-padded (zero rows
-    encode to zero pulses / zero rho) and sliced back.
+    encode to zero pulses / zero rho) and sliced back.  ``sort_impl``
+    selects the bulk-allocation lowering: ``'argsort'`` (default) or
+    ``'bisect'`` (elementwise + reductions only; bit-identical output) for
+    Mosaic versions that reject in-kernel ``jnp.argsort``.
     """
+    if sort_impl not in _BULK_MASKS:
+        raise ValueError(f"sort_impl must be one of {tuple(_BULK_MASKS)}, got {sort_impl!r}")
     g, n = w.shape
     bg = min(bg, g)
     pad = (-g) % bg
@@ -113,7 +175,9 @@ def pvq_encode_batch(
         w = jnp.concatenate([w, jnp.zeros((pad, n), w.dtype)], axis=0)
     gp = g + pad
     pulses, rho = pl.pallas_call(
-        functools.partial(_kernel, k_pulses=k_pulses, delta_max=delta_max),
+        functools.partial(
+            _kernel, k_pulses=k_pulses, delta_max=delta_max, sort_impl=sort_impl
+        ),
         grid=(gp // bg,),
         in_specs=[pl.BlockSpec((bg, n), lambda i: (i, 0))],
         out_specs=[

@@ -11,6 +11,13 @@ loop streams those codes straight into the int8-native Pallas matmul —
 no per-layer re-encode, no full-matrix f32 dequantization anywhere on the
 hot path.  ``--pvq-sim`` keeps the old dequantize-back-to-f32 simulation
 (same numerics as the paper tables, none of the memory win) for A/B runs.
+
+``--artifact model.pvqz`` skips the encode entirely: the entropy-coded
+container (written by ``repro.launch.export``) is decoded leaf-by-leaf
+straight into ``PackedPVQ`` — bit-exact pulses/scales, no re-encode, peak
+decode memory bounded by one leaf — and served through the same int8-native
+path, so logits are identical to the in-memory ``--pvq`` artifact it was
+exported from.
 """
 
 from __future__ import annotations
@@ -65,6 +72,14 @@ def main() -> int:
         help="legacy dequantized simulation: encode then expand back to f32 "
         "(paper-table numerics, no memory win)",
     )
+    ap.add_argument(
+        "--artifact",
+        default=None,
+        metavar="MODEL.PVQZ",
+        help="serve a .pvqz compressed artifact (repro.launch.export): "
+        "entropy-coded pulses stream-decode leaf-by-leaf into PackedPVQ "
+        "with no re-encode, then serve int8-native",
+    )
     ap.add_argument("--n-over-k", type=float, default=1.0)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument(
@@ -108,7 +123,24 @@ def main() -> int:
             tuned[f"{m}x{k_pad}x{n}"] = {kk: e[kk] for kk in ("bm", "bn", "bk", "us")}
         report["tuned_tiles"] = tuned
         report["tune_cache"] = str(autotune.cache_path())
-    if args.pvq or args.pvq_sim:
+    if args.artifact:
+        import os
+
+        from repro.checkpoint.artifact import load_pvqz, read_toc
+
+        t0 = time.time()
+        params = load_pvqz(args.artifact, target=params)
+        # entropy=False: the at-rest bits/weight is already in the export
+        # report / TOC; don't re-price every pulse stream on serve startup
+        st = packed_stats(params, entropy=False)
+        toc = read_toc(args.artifact)
+        report["pvq_mode"] = "artifact"
+        report["artifact"] = args.artifact
+        report["artifact_bytes"] = os.path.getsize(args.artifact)
+        report["artifact_meta"] = toc.get("meta", {})
+        report["pvq_tensors"] = st["packed_tensors"]
+        report["artifact_decode_s"] = round(time.time() - t0, 2)
+    elif args.pvq or args.pvq_sim:
         policy = QuantPolicy(
             rules=(("embedding", cfg.pvq.n_over_k_embed, cfg.pvq.group),
                    ("kernel|experts", args.n_over_k, cfg.pvq.group)),
@@ -123,7 +155,7 @@ def main() -> int:
                            if "ratio" in k or "bits_per" in k})
         else:
             params = quantize_params(params, policy)
-            st = packed_stats(params)
+            st = packed_stats(params, entropy=False)
             report["pvq_mode"] = "packed"
             report["pvq_tensors"] = st["packed_tensors"]
             report["packed_bytes"] = st["packed_bytes"]

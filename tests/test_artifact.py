@@ -1,0 +1,415 @@
+"""The .pvqz compressed-artifact subsystem: vectorized bitstream codecs
+(property round-trips vs the core.codes size models), the single-file
+container (TOC/CRC/codec selection), the pvq-golomb checkpoint codec, and
+the end-to-end export -> load -> serve bit-exactness guarantee."""
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hyp import given, settings, st
+
+from repro.checkpoint import Checkpointer
+from repro.checkpoint.artifact import (
+    choose_codec,
+    iter_pvqz,
+    load_pvqz,
+    read_toc,
+    write_pvqz,
+)
+from repro.core import bitstream, codes
+from repro.core.packed import (
+    is_packed,
+    pack_flat,
+    pack_matmul,
+    packed_leaves,
+    packed_stats,
+    pulse_groups,
+    pulse_stream,
+    quantize_params,
+)
+from repro.core.quantize import QuantPolicy
+
+
+def _sparse_values(rng, n, density=0.25, lo=-130, hi=130):
+    """Pulse-like test vector: mostly zeros, values spanning int8 overflow."""
+    v = rng.integers(lo, hi + 1, size=n)
+    return (v * (rng.random(n) < density)).astype(np.int64)
+
+
+# ---------------------------------------------------------------------------
+# bitstream: chunked codec round-trips + size-model exactness
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(0, 3000), chunk=st.integers(1, 600), seed=st.integers(0, 2**31 - 1))
+def test_prop_golomb_chunked_roundtrip(n, chunk, seed):
+    v = _sparse_values(np.random.default_rng(seed), n)
+    blob, offsets, nbits = bitstream.golomb_encode_chunked(v, chunk)
+    # the stream size IS the core.codes size model, bit for bit
+    assert nbits == int(codes.golomb_length(v).sum()) if n else nbits == 0
+    got = bitstream.golomb_decode_chunked(blob, offsets, n, chunk)
+    np.testing.assert_array_equal(got, v)
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(0, 3000), chunk=st.integers(1, 600), seed=st.integers(0, 2**31 - 1))
+def test_prop_rle_chunked_roundtrip(n, chunk, seed):
+    v = _sparse_values(np.random.default_rng(seed), n, density=0.1)
+    blob, offsets, nbits, n_pairs = bitstream.rle_encode_chunked(v, chunk)
+    _, ref_bits, ref_pairs = codes.rle_encode(v)
+    assert (nbits, n_pairs) == (ref_bits, ref_pairs)
+    got = bitstream.rle_decode_chunked(blob, offsets, n_pairs, n, chunk)
+    np.testing.assert_array_equal(got, v)
+
+
+def test_golomb_stream_bytes_match_reference_encoder():
+    """The vectorized packer emits the exact byte stream of the per-symbol
+    reference encoder in core.codes."""
+    rng = np.random.default_rng(0)
+    v = _sparse_values(rng, 500)
+    blob, _, nbits = bitstream.golomb_encode_chunked(v, chunk=64)
+    ref_blob, ref_bits = codes.golomb_encode(v)
+    assert nbits == ref_bits
+    assert blob.tobytes() == ref_blob
+
+
+def test_rle_bits_size_model_exact():
+    rng = np.random.default_rng(1)
+    v = _sparse_values(rng, 700, density=0.15)
+    _, nbits, _ = codes.rle_encode(v)
+    assert codes.rle_bits(v) == nbits
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    g=st.integers(1, 8),
+    n=st.integers(2, 24),
+    k=st.integers(1, 12),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_prop_enum_groups_roundtrip(g, n, k, seed):
+    """Random pyramids, including k_g < K (cancellation) and all-zero groups."""
+    rng = np.random.default_rng(seed)
+    rows = np.zeros((g, n), np.int64)
+    for i in range(g):
+        for _ in range(int(rng.integers(0, k + 1))):
+            rows[i, rng.integers(0, n)] += int(rng.choice([-1, 1]))
+    blob, per = bitstream.enum_encode_groups(rows, k)
+    assert per == bitstream.enum_bits_per_group(n, k)
+    got = bitstream.enum_decode_groups(blob, g, n, k)
+    np.testing.assert_array_equal(got, rows)
+
+
+def test_enum_rejects_overbudget_group():
+    with pytest.raises(ValueError, match="exceeds k_max"):
+        bitstream.enum_encode_groups(np.asarray([[3, -3]]), 4)
+
+
+@pytest.mark.parametrize("codec", ["golomb", "rle", "nibble", "int8"])
+def test_encode_pulses_roundtrip(codec):
+    rng = np.random.default_rng(2)
+    v = _sparse_values(rng, 41 * 16, density=0.3, lo=-7, hi=7).reshape(41, 16)
+    blob, info = bitstream.encode_pulses(v, codec, k_max=32, chunk=100)
+    np.testing.assert_array_equal(bitstream.decode_pulses(blob, info, 16), v)
+    np.testing.assert_array_equal(bitstream.decode_pulses(blob, info), v.ravel())
+
+
+def test_encode_pulses_nibble_rejects_wide_values():
+    with pytest.raises(ValueError, match="nibble"):
+        bitstream.encode_pulses(np.asarray([9]), "nibble")
+
+
+def test_measured_bits_prices_every_codec():
+    rng = np.random.default_rng(3)
+    groups = _sparse_values(rng, 12 * 16, density=0.2, lo=-5, hi=5).reshape(12, 16)
+    sizes = bitstream.measured_bits(
+        groups.ravel(), group_matrix=groups, k_max=16
+    )
+    assert {"golomb", "rle", "int8", "nibble", "enum"} <= set(sizes)
+    for codec in ("golomb", "rle", "nibble", "int8"):
+        blob, info = bitstream.encode_pulses(groups, codec, k_max=16)
+        assert info["nbits"] == sizes[codec], codec  # measured == produced
+
+
+# ---------------------------------------------------------------------------
+# pulse geometry: stream/group views drop structural padding
+# ---------------------------------------------------------------------------
+
+
+def test_pulse_stream_drops_matmul_padding():
+    w = jax.random.laplace(jax.random.PRNGKey(0), (100, 24)) * 0.1
+    pk = pack_matmul(w, group=64, n_over_k=2.0)  # k_pad=128: 28 pad rows
+    stream = pulse_stream(pk)
+    assert stream.size == 100 * 24  # logical numel only
+    groups = pulse_groups(pk)
+    assert groups.shape == (24 * 2, 64)
+    # padded group rows carry the pad zeros the stream dropped
+    assert np.abs(groups).sum() == np.abs(stream).sum()
+
+
+def test_pulse_stream_flat_tail_padding():
+    w = jax.random.normal(jax.random.PRNGKey(1), (10, 7)) * 0.1  # 70 % 16 != 0
+    pk = pack_flat(w, group=16, n_over_k=1.0)
+    assert pulse_stream(pk).size == 70
+    assert pulse_groups(pk).shape == (5, 16)
+
+
+# ---------------------------------------------------------------------------
+# .pvqz container
+# ---------------------------------------------------------------------------
+
+
+def _mixed_tree():
+    pk = pack_matmul(
+        jax.random.laplace(jax.random.PRNGKey(2), (100, 72)) * 0.1,
+        group=64, n_over_k=5.0,
+    )
+    pe = pack_flat(
+        jax.random.normal(jax.random.PRNGKey(3), (64, 48)) * 0.02,
+        group=256, n_over_k=0.5, row_align=48,
+    )
+    pk3 = pack_matmul(
+        jax.random.laplace(jax.random.PRNGKey(4), (3, 64, 64)) * 0.1,
+        group=64, n_over_k=2.0,
+    )  # scan-stacked
+    pc = pack_flat(jnp.full((256,), 0.01).at[3].set(10.0), group=256, n_over_k=1.0)
+    assert int(jnp.max(jnp.abs(pc.pulses))) == 127  # K>127 clamp engaged
+    return {
+        "a": {"kernel": pk},
+        "emb": {"embedding": pe},
+        "stack": {"kernel": pk3},
+        "clamp": {"kernel": pc},
+        "ln": jnp.ones(64),
+        "bf": (jnp.ones((4, 4), jnp.bfloat16) * 1.5),
+        "step": jnp.int32(7),
+    }
+
+
+def _assert_packed_equal(a, b):
+    assert is_packed(b)
+    assert b.pulses.dtype == jnp.int8
+    np.testing.assert_array_equal(np.asarray(a.pulses), np.asarray(b.pulses))
+    np.testing.assert_array_equal(np.asarray(a.scales), np.asarray(b.scales))
+    assert (a.group, a.k, a.shape, a.dtype, a.layout, a.scale_mode) == (
+        b.group, b.k, b.shape, b.dtype, b.layout, b.scale_mode
+    )
+
+
+def test_pvqz_roundtrip_bit_exact(tmp_path):
+    """Every leaf kind — matmul/flat/stacked/K>127-clamped packed, raw f32,
+    bf16, scalar — restores bit-exact with no re-encode."""
+    tree = _mixed_tree()
+    path = tmp_path / "m.pvqz"
+    report = write_pvqz(path, tree, meta={"arch": "unit-test"})
+    assert report["bits_per_weight"] < 8.0
+    got = load_pvqz(path, target=tree)
+    want_packed = packed_leaves(tree)
+    got_packed = packed_leaves(got)
+    assert set(got_packed) == set(want_packed)
+    for key, a in want_packed.items():
+        _assert_packed_equal(a, got_packed[key])
+    np.testing.assert_array_equal(np.asarray(got["ln"]), np.ones(64))
+    assert got["bf"].dtype == tree["bf"].dtype
+    np.testing.assert_array_equal(
+        np.asarray(got["bf"], np.float32), np.asarray(tree["bf"], np.float32)
+    )
+    assert int(got["step"]) == 7
+    assert read_toc(path)["meta"]["arch"] == "unit-test"
+
+
+@pytest.mark.parametrize("codec", ["golomb", "rle", "nibble", "int8"])
+def test_pvqz_forced_codec_roundtrip(tmp_path, codec):
+    pk = pack_matmul(
+        jax.random.laplace(jax.random.PRNGKey(5), (64, 32)) * 0.1,
+        group=64, n_over_k=5.0,
+    )
+    tree = {"w": {"kernel": pk}}
+    report = write_pvqz(tmp_path / f"{codec}.pvqz", tree, codec=codec)
+    assert report["leaves"]["w/kernel"]["codec"] == codec
+    got = load_pvqz(tmp_path / f"{codec}.pvqz", target=tree)
+    _assert_packed_equal(pk, got["w"]["kernel"])
+
+
+def test_pvqz_enum_codec_roundtrip(tmp_path):
+    """Small groups put the fixed-length enumeration stream within budget."""
+    pk = pack_flat(
+        jax.random.laplace(jax.random.PRNGKey(6), (40, 8)) * 0.1,
+        group=8, n_over_k=2.0,
+    )
+    tree = {"w": {"kernel": pk}}
+    report = write_pvqz(tmp_path / "e.pvqz", tree, codec="enum")
+    assert report["leaves"]["w/kernel"]["codec"] == "enum"
+    _assert_packed_equal(
+        pk, load_pvqz(tmp_path / "e.pvqz", target=tree)["w"]["kernel"]
+    )
+
+
+def test_pvqz_auto_picks_measured_minimum():
+    rng = np.random.default_rng(7)
+    pk = pack_matmul(
+        jax.random.laplace(jax.random.PRNGKey(8), (128, 32)) * 0.1,
+        group=64, n_over_k=5.0,
+    )
+    stream, groups = pulse_stream(pk), pulse_groups(pk)
+    codec, sizes = choose_codec(stream, groups, pk.k, enum_budget=0)
+    assert "enum" in sizes  # always priced for the report
+    eligible = {c: b for c, b in sizes.items() if c != "enum"}  # budget 0
+    assert sizes[codec] == min(eligible.values())
+    codec2, _ = choose_codec(stream, groups, pk.k, enum_budget=10**12)
+    assert sizes[codec2] == min(sizes.values())
+
+
+def test_pvqz_crc_detects_corruption(tmp_path):
+    tree = {"w": {"kernel": pack_matmul(
+        jax.random.laplace(jax.random.PRNGKey(9), (64, 32)) * 0.1,
+        group=64, n_over_k=4.0,
+    )}}
+    path = tmp_path / "c.pvqz"
+    write_pvqz(path, tree)
+    raw = bytearray(path.read_bytes())
+    raw[16] ^= 0xFF  # flip a pulse-stream byte
+    path.write_bytes(bytes(raw))
+    with pytest.raises(ValueError, match="CRC"):
+        load_pvqz(path, target=tree)
+
+
+def test_pvqz_failed_write_preserves_existing_artifact(tmp_path):
+    """write_pvqz goes through tmp + atomic rename: a write that dies midway
+    (here: a forced codec that rejects the leaf) must leave the previous
+    good artifact untouched and loadable."""
+    pk = pack_flat(jnp.full((256,), 0.01).at[3].set(10.0), group=256, n_over_k=1.0)
+    assert int(jnp.max(jnp.abs(pk.pulses))) > 7  # nibble codec will raise
+    tree = {"w": {"kernel": pk}}
+    path = tmp_path / "m.pvqz"
+    write_pvqz(path, tree)
+    good_bytes = path.read_bytes()
+    with pytest.raises(ValueError, match="nibble"):
+        write_pvqz(path, tree, codec="nibble")
+    assert path.read_bytes() == good_bytes
+    assert list(tmp_path.glob(".*tmp*")) == []  # failed write leaves no tmp
+    _assert_packed_equal(pk, load_pvqz(path, target=tree)["w"]["kernel"])
+
+
+def test_pvqz_rejects_non_artifact(tmp_path):
+    path = tmp_path / "junk.pvqz"
+    path.write_bytes(b"definitely not a pvqz file")
+    with pytest.raises(ValueError, match="magic"):
+        read_toc(path)
+
+
+def test_iter_pvqz_streams_every_leaf(tmp_path):
+    tree = _mixed_tree()
+    path = tmp_path / "s.pvqz"
+    write_pvqz(path, tree)
+    seen = dict(iter_pvqz(path))
+    assert len(seen) == 7
+    assert is_packed(seen["a/kernel"])
+    # nested load without a target
+    nested = load_pvqz(path)
+    assert is_packed(nested["a"]["kernel"])
+    assert nested["stack"]["kernel"].pulses.shape == (3, 64, 64)
+
+
+# ---------------------------------------------------------------------------
+# checkpointer pvq-golomb codec
+# ---------------------------------------------------------------------------
+
+
+def test_checkpoint_pvq_golomb_bit_exact(tmp_path):
+    pk = pack_matmul(
+        jax.random.laplace(jax.random.PRNGKey(10), (100, 72)) * 0.1,
+        group=64, n_over_k=4.0,
+    )
+    pe = pack_flat(
+        jax.random.normal(jax.random.PRNGKey(11), (64, 32)) * 0.02,
+        group=32, n_over_k=0.5, row_align=32,
+    )
+    state = {"params": {"w": {"kernel": pk}, "emb": {"embedding": pe}},
+             "step": jnp.int32(3)}
+    ck = Checkpointer(tmp_path, packed_codec="golomb")
+    ck.save(1, state)
+    restored, _ = ck.restore(state)
+    _assert_packed_equal(pk, restored["params"]["w"]["kernel"])
+    _assert_packed_equal(pe, restored["params"]["emb"]["embedding"])
+    man = json.loads((tmp_path / "step_000000001" / "manifest.json").read_text())
+    assert man["leaves"]["params/w/kernel"]["codec"] == "pvq-golomb"
+    # entropy coding beats the nibble pack at rest (K/N = 1/4 here)
+    golomb_bytes = (tmp_path / "step_000000001" / "params__w__kernel.pulses.bin").stat().st_size
+    assert golomb_bytes < np.asarray(pk.pulses).size / 2  # nibble = size/2
+
+
+def test_checkpointer_rejects_unknown_packed_codec(tmp_path):
+    with pytest.raises(ValueError, match="packed_codec"):
+        Checkpointer(tmp_path, packed_codec="zstd")
+
+
+# ---------------------------------------------------------------------------
+# end to end: export -> load -> serve, bit-exact vs the in-memory artifact
+# ---------------------------------------------------------------------------
+
+
+def test_export_load_serve_logits_bit_exact(tmp_path):
+    """The acceptance gate: a .pvqz written from a packed model and loaded
+    back serves IDENTICAL logits to the in-memory PackedPVQ pytree — the
+    pulses/scales survive the entropy coding bit-for-bit."""
+    from repro.configs import get_config
+    from repro.nn.models import build_model
+
+    cfg = get_config("smollm-360m").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0), max_seq=16)
+    policy = QuantPolicy(
+        rules=(("embedding", 0.5, 256), ("kernel", 1.0, 256)), scale_mode="ls"
+    )
+    qparams = quantize_params(params, policy)
+    path = tmp_path / "model.pvqz"
+    report = write_pvqz(path, qparams, meta={"arch": cfg.name})
+    assert report["packed_numel"] > 0
+
+    # load into a FRESH init (different seed: every leaf must come from disk)
+    target = model.init(jax.random.PRNGKey(123), max_seq=16)
+    restored = load_pvqz(path, target=target)
+    for key, want in packed_leaves(qparams).items():
+        _assert_packed_equal(want, packed_leaves(restored)[key])
+
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 6), 0, cfg.vocab_size)
+    logits_mem, _ = model.prefill(qparams, {"tokens": toks}, cache_len=8)
+    logits_art, _ = model.prefill(restored, {"tokens": toks}, cache_len=8)
+    np.testing.assert_array_equal(np.asarray(logits_mem), np.asarray(logits_art))
+
+
+def test_paper_net_fc_exports_under_2_bits(tmp_path):
+    """§VI acceptance: a paper-net FC layer at N/K = 5 lands at
+    <= 2.0 bits/weight in the artifact (paper Table 5: ~1.4 + scales)."""
+    from repro.configs.paper_nets import PAPER_NETS
+    from repro.nn.sequential import SequentialNet
+
+    net = SequentialNet(PAPER_NETS["A"])
+    params = net.init(jax.random.PRNGKey(0))
+    kparams = net.pvq_kernel_encode(params, group=256)
+    merged = dict(params)
+    merged.update(kparams)
+    report = write_pvqz(tmp_path / "a.pvqz", merged)
+    assert report["bits_per_weight"] <= 2.0, report["bits_per_weight"]
+    # and it restores bit-exact
+    got = load_pvqz(tmp_path / "a.pvqz", target=merged)
+    for key, want in packed_leaves(merged).items():
+        _assert_packed_equal(want, packed_leaves(got)[key])
+
+
+def test_packed_stats_entropy_matches_artifact(tmp_path):
+    """The packed_stats size models ARE the .pvqz payload (golomb leaf)."""
+    tree = {"a": {"kernel": jax.random.laplace(jax.random.PRNGKey(12), (128, 64)) * 0.1}}
+    q = quantize_params(tree, QuantPolicy(rules=(("", 5.0, 64),), scale_mode="ls"))
+    st_ = packed_stats(q)
+    assert {"golomb_bits_per_weight", "rle_bits_per_weight",
+            "enum_bits_per_weight", "entropy_bits_per_weight"} <= set(st_)
+    report = write_pvqz(tmp_path / "x.pvqz", q, codec="golomb")
+    got_bits = sum(v["pulse_bits"] for v in report["leaves"].values())
+    assert got_bits == int(round(st_["golomb_bits_per_weight"] * 128 * 64))
+    # entropy coding strictly beats the int8+f32 HBM footprint at rest
+    assert st_["entropy_compression_ratio"] > st_["weight_compression_ratio"]

@@ -95,3 +95,60 @@ def test_tuned_dispatch_matches_ref(tune_cache, m, k, n, group, dtype):
         rtol=2e-2 if dtype == jnp.bfloat16 else 1e-5,
         atol=1e-1 if dtype == jnp.bfloat16 else 1e-4,
     )
+
+
+# ---------------------------------------------------------------------------
+# encoder autotune: pvq_encode's (bg, delta_max) knobs (ROADMAP satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_encode_cache_key_carries_encoder_kernel_version():
+    from repro.kernels.pvq_encode import ENCODE_KERNEL_VERSION
+
+    key = autotune.encode_cache_key(16, 128, 32, jnp.float32, "cpu")
+    assert f":ekv{ENCODE_KERNEL_VERSION}:" in key
+    assert key.endswith(":v2")  # same schema/store as the matmul tiles
+    # encoder and matmul keys can never collide
+    assert key != autotune.cache_key(16, 128, 32, 128, jnp.float32, "cpu")
+
+
+def test_encode_candidates_never_lower_delta_max():
+    """Tuning may only make the encoder *more* exact: every candidate keeps
+    delta_max at or above the heuristic default."""
+    cands = autotune.encode_candidates(64, 256, max_candidates=16)
+    assert cands[0] == autotune.ENCODE_DEFAULTS
+    assert all(delta >= autotune.ENCODE_DEFAULTS[1] for _, delta in cands)
+    assert all(bg <= 64 for bg, _ in cands)
+    assert len(set(cands)) == len(cands)
+    # bg clamps to tiny group counts
+    assert all(bg <= 2 for bg, _ in autotune.encode_candidates(2, 64, 8))
+
+
+def test_autotune_encode_persists_and_hits(tune_cache, monkeypatch):
+    entry = autotune.autotune_encode(8, 64, 16, reps=1, interpret=True)
+    assert {"bg", "delta_max", "us", "candidates"} <= set(entry)
+    on_disk = json.loads(tune_cache.read_text())
+    key = autotune.encode_cache_key(8, 64, 16, jnp.float32, jax.default_backend())
+    assert on_disk[key] == entry
+    monkeypatch.setattr(
+        autotune,
+        "_time_encode_candidate",
+        lambda *a, **k: pytest.fail("re-searched despite cache hit"),
+    )
+    assert autotune.autotune_encode(8, 64, 16, reps=1, interpret=True) == entry
+    # dispatch resolves to the tuned knobs without timing
+    assert autotune.get_encode_params(8, 64, 16) == (entry["bg"], entry["delta_max"])
+
+
+def test_get_encode_params_heuristic_without_search(tune_cache):
+    assert autotune.get_encode_params(512, 256, 64, search=False) == autotune.ENCODE_DEFAULTS
+    assert not tune_cache.exists()  # no search -> no I/O
+
+
+def test_ops_encode_uses_tuned_knobs(tune_cache):
+    """ops.pvq_encode with defaulted knobs resolves through the cache and
+    stays correct (L1 = K exactly)."""
+    autotune.autotune_encode(8, 128, 32, reps=1, interpret=True)
+    w = jax.random.laplace(jax.random.PRNGKey(2), (8, 128))
+    pulses, _ = ops.pvq_encode(w, k_pulses=32, interpret=True)
+    np.testing.assert_array_equal(np.abs(np.asarray(pulses)).sum(-1), 32)

@@ -172,6 +172,47 @@ def test_pvq_encode_l1_constraint_large_k():
     np.testing.assert_array_equal(np.abs(np.asarray(pulses)).sum(-1), 192)
 
 
+@pytest.mark.parametrize("k_pulses,delta_max", [(48, 8), (192, 16), (64, 64)])
+def test_pvq_encode_bisect_fallback_bit_exact(k_pulses, delta_max):
+    """Satellite (ROADMAP "Mosaic sort fallback"): forcing the no-argsort
+    bulk allocation (threshold-count binary search; elementwise + reductions
+    only) reproduces the argsort path bit-for-bit — including fractional-part
+    ties, which quantized weights force below."""
+    from repro.kernels.pvq_encode import pvq_encode_batch
+
+    for seed in range(3):
+        w = jnp.round(jax.random.laplace(jax.random.PRNGKey(seed), (16, 128)) * 4) / 4
+        pa, ra = pvq_encode_batch(
+            w, k_pulses=k_pulses, delta_max=delta_max, interpret=True,
+            sort_impl="argsort",
+        )
+        pb, rb = pvq_encode_batch(
+            w, k_pulses=k_pulses, delta_max=delta_max, interpret=True,
+            sort_impl="bisect",
+        )
+        np.testing.assert_array_equal(np.asarray(pa), np.asarray(pb))
+        np.testing.assert_array_equal(np.asarray(ra), np.asarray(rb))
+
+
+def test_pvq_encode_sort_impl_env_dispatch(monkeypatch):
+    """REPRO_PVQ_ENCODE_SORT=bisect flips the ops-layer default."""
+    w = jax.random.laplace(jax.random.PRNGKey(7), (8, 128))
+    want_p, want_rho = ops.pvq_encode(w, k_pulses=32, interpret=True)
+    monkeypatch.setenv("REPRO_PVQ_ENCODE_SORT", "bisect")
+    got_p, got_rho = ops.pvq_encode(w, k_pulses=32, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got_p), np.asarray(want_p))
+    np.testing.assert_array_equal(np.asarray(got_rho), np.asarray(want_rho))
+
+
+def test_pvq_encode_rejects_unknown_sort_impl():
+    from repro.kernels.pvq_encode import pvq_encode_batch
+
+    with pytest.raises(ValueError, match="sort_impl"):
+        pvq_encode_batch(
+            jnp.ones((4, 64)), k_pulses=8, interpret=True, sort_impl="bogo"
+        )
+
+
 def test_pvq_encode_zero_rows():
     w = jnp.zeros((8, 128))
     pulses, rho = ops.pvq_encode(w, k_pulses=16, interpret=True)
