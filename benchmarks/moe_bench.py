@@ -1,0 +1,102 @@
+"""Packed-vs-dense MoE expert bank: throughput + weight-bytes (PR 4).
+
+Serves the deepseek-v2-lite MoE config (reduced on CPU hosts) with dense
+f32 expert tensors vs the expert-stacked ``PackedPVQ`` bank, and times the
+bare ``moe_forward`` layer both ways.  Rows go to ``BENCH_moe.json`` via
+benchmarks.run for cross-PR perf trajectories.
+
+On this CPU container the batched Pallas kernel runs interpret=True, so
+packed throughput is a correctness proxy, not a perf claim; the expert
+weight-bytes ratio (the 472GB DeepSeek-236B headline) is
+backend-independent.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+
+def bench_moe_experts(arch: str = "deepseek-v2-lite-16b", *, batch: int = 2,
+                      prompt_len: int = 8, gen: int = 8) -> List[Dict]:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config
+    from repro.core.packed import expert_leaves, quantize_params
+    from repro.core.quantize import QuantPolicy
+    from repro.launch.serve import generate
+    from repro.nn import moe as moe_lib
+    from repro.nn.models import build_model
+
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0), max_seq=prompt_len + gen)
+    policy = QuantPolicy(
+        rules=(("embedding", cfg.pvq.n_over_k_embed, cfg.pvq.group),
+               ("kernel|experts", 2.0, cfg.pvq.group)),
+        scale_mode="ls",
+    )
+    t0 = time.perf_counter()
+    qparams = quantize_params(params, policy)
+    encode_s = time.perf_counter() - t0
+    experts = expert_leaves(qparams)
+    assert experts, "no expert leaves were packed"
+    expert_packed_bytes = sum(leaf.nbytes_packed for leaf in experts.values())
+    expert_dense_bytes = sum(leaf.nbytes_dense for leaf in experts.values())
+
+    toks = jax.random.randint(
+        jax.random.PRNGKey(1), (batch, prompt_len), 0, cfg.vocab_size
+    )
+
+    def timed_serve(p):
+        generate(model, p, toks, gen=gen, cache_len=prompt_len + gen)  # warmup
+        t0 = time.perf_counter()
+        out = generate(model, p, toks, gen=gen, cache_len=prompt_len + gen)
+        jax.block_until_ready(out)
+        return batch * gen / (time.perf_counter() - t0)
+
+    tps_dense = timed_serve(params)
+    tps_packed = timed_serve(qparams)
+
+    # bare MoE layer (prefill-shaped tokens), dense vs packed expert bank
+    mo = cfg.moe
+
+    def layer_of(tree):
+        """One (unstacked) MoE ffn param dict out of the segment pytree."""
+        for seg in tree["segments"].values():
+            for block in seg.values():
+                if "ffn" in block and "wi_up_experts" in block["ffn"]:
+                    return jax.tree.map(lambda t: t[0], block["ffn"])
+        raise KeyError("no MoE ffn in this config")
+
+    x = jax.random.normal(jax.random.PRNGKey(2), (batch, prompt_len, cfg.d_model))
+
+    def timed_layer(p_layer):
+        fwd = jax.jit(lambda px, xx: moe_lib.moe_forward(px, xx, mo)[0])
+        jax.block_until_ready(fwd(p_layer, x))  # warmup
+        t0 = time.perf_counter()
+        for _ in range(5):
+            out = fwd(p_layer, x)
+        jax.block_until_ready(out)
+        return (time.perf_counter() - t0) / 5 * 1e6
+
+    us_dense = timed_layer(layer_of(params))
+    us_packed = timed_layer(layer_of(qparams))
+
+    return [{
+        "bench": f"moe:{cfg.name}:b{batch}g{gen}",
+        "us_per_call": round(us_packed, 1),
+        "moe_layer_us_dense": round(us_dense, 1),
+        "moe_layer_us_packed": round(us_packed, 1),
+        "tokens_per_s_dense": round(tps_dense, 2),
+        "tokens_per_s_packed": round(tps_packed, 2),
+        "packed_over_dense": round(tps_packed / max(tps_dense, 1e-9), 3),
+        "encode_s": round(encode_s, 2),
+        "expert_tensors": len(experts),
+        "expert_weight_bytes_dense": expert_dense_bytes,
+        "expert_weight_bytes_packed": expert_packed_bytes,
+        "expert_compression_ratio": round(
+            expert_dense_bytes / max(expert_packed_bytes, 1), 3
+        ),
+    }]

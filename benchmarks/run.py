@@ -23,7 +23,7 @@ def main() -> None:
     ap.add_argument("--only", default="", help="run only benches whose name starts with this")
     args = ap.parse_args()
 
-    from benchmarks import artifact_bench, kernel_bench, paper_tables, serve_bench
+    from benchmarks import artifact_bench, kernel_bench, moe_bench, paper_tables, serve_bench
 
     all_rows = []
 
@@ -43,6 +43,7 @@ def main() -> None:
     run("kernel_pvq_matmul", kernel_bench.bench_pvq_matmul)
     run("kernel_pvq_encode", kernel_bench.bench_pvq_encode)
     run("serve_packed", serve_bench.bench_serve_throughput)
+    run("moe_packed_experts", moe_bench.bench_moe_experts)
     run("artifact_codecs", artifact_bench.bench_artifact_codecs)
 
     # CSV contract: name,us_per_call,derived
@@ -66,6 +67,20 @@ def main() -> None:
         with open("BENCH_kernels.json", "w") as f:
             json.dump(payload, f, indent=1, default=str)
         print("wrote BENCH_kernels.json", file=sys.stderr)
+
+    # packed-vs-dense MoE expert-bank trajectory (throughput + weight bytes)
+    moe_rows = [r for r in all_rows if r["bench_group"].startswith("moe_")]
+    if moe_rows:
+        import jax
+
+        payload = {
+            "schema": "bench-moe-v1",
+            "backend": jax.default_backend(),
+            "rows": moe_rows,
+        }
+        with open("BENCH_moe.json", "w") as f:
+            json.dump(payload, f, indent=1, default=str)
+        print("wrote BENCH_moe.json", file=sys.stderr)
 
     # packed-vs-f32 serving trajectory (stable schema for cross-PR diffs)
     serve_rows = [r for r in all_rows if r["bench_group"].startswith("serve_")]

@@ -203,6 +203,10 @@ def _write_pvqz_file(
                     scale_mode=leaf.scale_mode,
                     pulse_shape=list(pulses.shape),
                     scales_shape=list(scales.shape),
+                    # leading stack axes (scan repeats, MoE expert axis):
+                    # per-stack-entry group geometry is (shape[-2] rows ->
+                    # pulse_shape[-2] group-padded rows) x shape[-1] columns
+                    stack=list(pulses.shape[: pulses.ndim - 2]),
                 )
                 f.write(blob)
                 rec["scales_offset"] = f.tell()

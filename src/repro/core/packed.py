@@ -43,6 +43,11 @@ from .quantize import QuantPolicy, _path_str, k_for
 
 Array = jax.Array
 
+#: the MoE expert banks `_pack_leaf` packs into the expert-stacked matmul
+#: layout — THE predicate every expert-bank report (serve, export,
+#: moe_bench) filters with, so they can never drift from what is packed.
+EXPERT_LEAF_REGEX = r"(wi_up|wi_gate|wo)_experts$"
+
 #: leaves the packed policy must never touch even when a rule matches:
 #: conv kernels and learned positions are consumed raw (einsum / dynamic
 #: slice), and the MLA absorbed-decode b-projections are reshaped per head
@@ -216,27 +221,34 @@ def pack_matmul(
     interpret: Optional[bool] = None,
 ) -> PackedPVQ:
     """Encode a dense weight matrix (contraction dim first) into the
-    kernel-native matmul layout.  A 3-D input is treated as a scan stack
-    ``(repeats, d_in, d_out)`` and encoded per repeat.  Pass either the
+    kernel-native matmul layout.  An N-D input (N >= 3) is treated as a
+    stack over its leading axes — ``(repeats, d_in, d_out)`` scan stacks,
+    ``(E, d_in, d_out)`` expert banks, and ``(repeats, E, d_in, d_out)``
+    scan-stacked expert banks are all encoded per trailing matrix with the
+    stack axes riding along on ``pulses``/``scales``.  Pass either the
     paper's ``n_over_k`` ratio (K derived from the *effective* group) or an
     explicit per-group ``k`` (used verbatim, even if the group is fitted
     down to divide ``d_in``)."""
     from repro.kernels import ops  # deferred: core must stay importable alone
 
-    if w.ndim == 3:
+    if w.ndim > 2:
+        lead = w.shape[:-2]
+        flat = w.reshape((-1,) + w.shape[-2:])
         packed = [
-            pack_matmul(w[i], group=group, n_over_k=n_over_k, k=k,
+            pack_matmul(flat[i], group=group, n_over_k=n_over_k, k=k,
                         scale_mode=scale_mode, interpret=interpret)
-            for i in range(w.shape[0])
+            for i in range(flat.shape[0])
         ]
+        pulses = jnp.stack([p.pulses for p in packed])
+        scales = jnp.stack([p.scales for p in packed])
         return PackedPVQ(
-            pulses=jnp.stack([p.pulses for p in packed]),
-            scales=jnp.stack([p.scales for p in packed]),
+            pulses=pulses.reshape(lead + pulses.shape[1:]),
+            scales=scales.reshape(lead + scales.shape[1:]),
             group=packed[0].group, k=packed[0].k, shape=packed[0].shape,
             dtype=str(w.dtype), layout="matmul", scale_mode=scale_mode,
         )
     if w.ndim != 2:
-        raise ValueError(f"matmul layout needs a 2-D/3-D tensor, got {w.shape}")
+        raise ValueError(f"matmul layout needs a tensor of rank >= 2, got {w.shape}")
     d_in, _ = w.shape
     g, _ = matmul_plan(group, d_in)
     k = _resolve_k(g, n_over_k, k)
@@ -319,6 +331,15 @@ def _pack_leaf(
             leaf, group=g, n_over_k=n_over_k, scale_mode=scale_mode,
             interpret=interpret,
         )
+    # stacked MoE expert banks: (E, d_in, d_out) or scan-stacked
+    # (repeats, E, d_in, d_out).  Encoded per expert matrix into the
+    # expert-stacked matmul layout; moe_forward contracts the dispatch
+    # buffers against them through ops.packed_matmul_stacked.
+    if re.search(EXPERT_LEAF_REGEX, pstr) and leaf.ndim in (3, 4):
+        return pack_matmul(
+            leaf, group=g, n_over_k=n_over_k, scale_mode=scale_mode,
+            interpret=interpret,
+        )
     return None
 
 
@@ -374,6 +395,14 @@ def packed_leaves(params: Any) -> Dict[str, PackedPVQ]:
 
     jax.tree_util.tree_map_with_path(visit, params, is_leaf=is_packed)
     return out
+
+
+def expert_leaves(params: Any) -> Dict[str, PackedPVQ]:
+    """{path: PackedPVQ} for the packed MoE expert banks only."""
+    return {
+        k: v for k, v in packed_leaves(params).items()
+        if re.search(EXPERT_LEAF_REGEX, k)
+    }
 
 
 def packed_stats(params: Any, *, entropy: bool = True) -> Dict[str, float]:

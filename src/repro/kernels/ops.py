@@ -30,6 +30,7 @@ from . import autotune as autotune_lib
 from . import ref as ref_lib
 from .pvq_encode import pvq_encode_batch as _encode_kernel
 from .pvq_matmul import pvq_matmul as _matmul_kernel
+from .pvq_matmul import pvq_matmul_batched as _matmul_kernel_batched
 
 
 def _on_tpu() -> bool:
@@ -105,6 +106,12 @@ def packed_matmul(
             "(slice the leading stack axis, e.g. inside lax.scan)"
         )
     k_pad = packed.pulses.shape[0]
+    d_in = int(packed.shape[-2])
+    if x.shape[-1] not in (d_in, k_pad):
+        raise ValueError(
+            f"x feature dim {x.shape[-1]} matches neither the packed leaf's "
+            f"logical d_in {d_in} nor its padded k_pad {k_pad}"
+        )
     if x.shape[-1] != k_pad:
         x = jnp.pad(x, ((0, 0), (0, k_pad - x.shape[-1])))
     return pvq_matmul(
@@ -116,6 +123,68 @@ def packed_matmul(
         activation=activation,
         interpret=interpret,
         tune=tune,
+    )
+
+
+def packed_matmul_stacked(
+    x,
+    packed,
+    *,
+    activation: str = "none",
+    interpret: bool | None = None,
+    tune: bool | None = None,
+):
+    """Batched ``act(x[e] @ dequant(packed[e]))`` over an expert-stacked
+    matmul-layout ``PackedPVQ`` — the MoE expert-bank contraction.
+
+    ``x``: (E, m, d_in) per-expert dispatch buffers (``moe_forward`` folds
+    its (g, E, C, d) buffer to this shape); ``packed.pulses``: (E, k_pad, n).
+    Tile sizes are resolved ONCE from the shared per-expert (m, k_pad, n)
+    problem through the persistent autotune cache, then every expert step
+    of the scan reuses them — the int8 pulse planes stream into the kernel
+    as stored, no dense expert tensor is ever materialized.
+    """
+    if packed.layout != "matmul":
+        raise ValueError(
+            f"packed_matmul_stacked needs layout='matmul', got {packed.layout!r}"
+        )
+    if packed.pulses.ndim != 3:
+        raise ValueError(
+            f"packed_matmul_stacked takes one stacked expert bank; got pulses "
+            f"{packed.pulses.shape} (expected (E, k_pad, n) — slice any extra "
+            "leading scan axes first, e.g. inside lax.scan)"
+        )
+    e, k_pad, n = packed.pulses.shape
+    if x.ndim != 3 or x.shape[0] != e:
+        raise ValueError(
+            f"x must be (E={e}, m, d_in) matching the expert axis, got {x.shape}"
+        )
+    if interpret is None:
+        interpret = not _on_tpu()
+    d_in = int(packed.shape[-2])
+    if x.shape[-1] not in (d_in, k_pad):
+        # only the structural group-padding columns may be zero-filled here;
+        # any other width is a wrong buffer, not a padding request
+        raise ValueError(
+            f"x feature dim {x.shape[-1]} matches neither the packed bank's "
+            f"logical d_in {d_in} nor its padded k_pad {k_pad}"
+        )
+    if x.shape[-1] != k_pad:
+        x = jnp.pad(x, ((0, 0), (0, 0), (0, k_pad - x.shape[-1])))
+    bm, bn, bk = autotune_lib.get_tiles(
+        x.shape[1], k_pad, n, group=packed.group, dtype=x.dtype,
+        search=tune, interpret=interpret,
+    )
+    return _matmul_kernel_batched(
+        x,
+        packed.pulses,
+        packed.scales,
+        group=packed.group,
+        bm=bm,
+        bn=bn,
+        bk=bk,
+        activation=activation,
+        interpret=interpret,
     )
 
 

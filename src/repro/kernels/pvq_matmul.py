@@ -223,3 +223,48 @@ def pvq_matmul(
     if (mp, np_) != (m, n):
         out = out[:m, :n]
     return out
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("group", "bm", "bn", "bk", "activation", "interpret"),
+)
+def pvq_matmul_batched(
+    x: jax.Array,  # (B, m, k)
+    w_pulses: jax.Array,  # (B, k, n) int8
+    scales: jax.Array,  # (B, k // group, n) f32
+    *,
+    group: int = 128,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+    activation: str = "none",
+    interpret: bool = False,
+) -> jax.Array:
+    """Batched fused matmul over a shared leading stack axis (MoE experts).
+
+    ``lax.scan`` over the batch axis invokes the 2-D kernel once per slice
+    with ONE shared tile configuration — the kernel body is traced/compiled
+    a single time regardless of the expert count, and every expert's
+    ``(m, k) x (k, n)`` problem reuses the same (bm, bn, bk) tiles (callers
+    key the autotune lookup on the per-expert shape).  Per-expert bias has
+    no consumer (MoE expert FFNs are bias-free); activation still fuses
+    into each slice's epilogue.
+    """
+    assert x.ndim == 3 and w_pulses.ndim == 3 and scales.ndim == 3, (
+        x.shape, w_pulses.shape, scales.shape,
+    )
+    assert x.shape[0] == w_pulses.shape[0] == scales.shape[0], (
+        x.shape, w_pulses.shape, scales.shape,
+    )
+
+    def body(_, operands):
+        xb, wb, sb = operands
+        y = pvq_matmul(
+            xb, wb, sb, None, group=group, bm=bm, bn=bn, bk=bk,
+            activation=activation, interpret=interpret,
+        )
+        return None, y
+
+    _, out = jax.lax.scan(body, None, (x, w_pulses, scales))
+    return out

@@ -93,6 +93,9 @@ def main() -> int:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--max-bits-per-weight", type=float, default=None,
                     help="fail (exit 1) if the packed artifact exceeds this")
+    ap.add_argument("--max-expert-bits-per-weight", type=float, default=None,
+                    help="fail (exit 1) if the MoE expert leaves alone "
+                    "(*_experts pulse streams + scales) exceed this")
     args = ap.parse_args()
     if not args.arch and not args.paper_net:
         args.arch = "smollm-360m"
@@ -109,6 +112,21 @@ def main() -> int:
                         meta=meta)
     report["encode_s"] = round(encode_s, 2)
     report["write_s"] = round(time.time() - t0, 2)
+
+    # aggregate view of the MoE expert bank (the weight-bytes headline):
+    # bits/weight over the expert leaves only, weighted by their numel
+    import re
+
+    from repro.core.packed import EXPERT_LEAF_REGEX
+
+    expert = {k: v for k, v in report["leaves"].items()
+              if re.search(EXPERT_LEAF_REGEX, k) and v.get("codec") != "raw"}
+    if expert:
+        numel = sum(v["numel"] for v in expert.values())
+        bits = sum(v["bits_per_weight"] * v["numel"] for v in expert.values())
+        report["expert_leaves"] = len(expert)
+        report["expert_numel"] = numel
+        report["expert_bits_per_weight"] = round(bits / max(numel, 1), 4)
     print(json.dumps(report, indent=1))
 
     if (
@@ -120,6 +138,18 @@ def main() -> int:
             f"--max-bits-per-weight {args.max_bits_per_weight} gate"
         )
         return 1
+    if args.max_expert_bits_per_weight is not None:
+        ebpw = report.get("expert_bits_per_weight")
+        if ebpw is None:
+            print("FAIL: --max-expert-bits-per-weight set but no packed "
+                  "*_experts leaves were exported")
+            return 1
+        if ebpw > args.max_expert_bits_per_weight:
+            print(
+                f"FAIL: {ebpw} expert bits/weight exceeds the "
+                f"--max-expert-bits-per-weight {args.max_expert_bits_per_weight} gate"
+            )
+            return 1
     return 0
 
 

@@ -30,9 +30,24 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get_config
-from repro.core.packed import packed_stats, quantize_params
+from repro.core.packed import expert_leaves, packed_stats, quantize_params
 from repro.core.quantize import QuantPolicy, quantize_tree, total_bits
 from repro.nn.models import build_model
+
+
+def _expert_report(params) -> dict:
+    """Weight-bytes report for the packed MoE expert bank (if any)."""
+    ex = expert_leaves(params)
+    if not ex:
+        return {}
+    packed_bytes = sum(leaf.nbytes_packed for leaf in ex.values())
+    dense_bytes = sum(leaf.nbytes_dense for leaf in ex.values())
+    return {
+        "packed_expert_tensors": len(ex),
+        "packed_expert_bytes": packed_bytes,
+        "dense_expert_bytes": dense_bytes,
+        "expert_compression_ratio": round(dense_bytes / max(packed_bytes, 1), 3),
+    }
 
 
 def generate(model, params, tokens, *, gen: int, cache_len: int, extra_batch=None):
@@ -110,14 +125,23 @@ def main() -> int:
         # keyed exactly as the packed artifact will dispatch them (same
         # effective group + group-padded contraction dim via matmul_plan) —
         # otherwise the pre-tuned entries can never be cache hits
-        for m, k, n in sorted(
-            {
-                (args.batch, d_model, d_model),
-                (args.batch, d_model, d_ff),
-                (args.batch, d_ff, d_model),
-                (args.batch * args.prompt_len, d_model, d_ff),
-            }
-        ):
+        shapes = {
+            (args.batch, d_model, d_model),
+            (args.batch, d_model, d_ff),
+            (args.batch, d_ff, d_model),
+            (args.batch * args.prompt_len, d_model, d_ff),
+        }
+        if cfg.moe is not None:
+            # per-expert dispatch-buffer GEMMs (m = groups * capacity): the
+            # batched expert matmul keys its shared tiles on exactly these
+            from repro.nn.moe import dispatch_gemm_rows
+
+            mo = cfg.moe
+            for t in (args.batch, args.batch * args.prompt_len):
+                m_exp = dispatch_gemm_rows(mo, t)
+                shapes.add((m_exp, d_model, mo.d_expert))
+                shapes.add((m_exp, mo.d_expert, d_model))
+        for m, k, n in sorted(shapes):
             g, k_pad = matmul_plan(group, k)
             e = autotune.autotune(m, k_pad, n, group=g)
             tuned[f"{m}x{k_pad}x{n}"] = {kk: e[kk] for kk in ("bm", "bn", "bk", "us")}
@@ -140,6 +164,7 @@ def main() -> int:
         report["artifact_meta"] = toc.get("meta", {})
         report["pvq_tensors"] = st["packed_tensors"]
         report["artifact_decode_s"] = round(time.time() - t0, 2)
+        report.update(_expert_report(params))
     elif args.pvq or args.pvq_sim:
         policy = QuantPolicy(
             rules=(("embedding", cfg.pvq.n_over_k_embed, cfg.pvq.group),
@@ -160,6 +185,7 @@ def main() -> int:
             report["pvq_tensors"] = st["packed_tensors"]
             report["packed_bytes"] = st["packed_bytes"]
             report["weight_compression_ratio"] = round(st["weight_compression_ratio"], 3)
+            report.update(_expert_report(params))
         report["pvq_encode_s"] = round(time.time() - t0, 1)
 
     key = jax.random.PRNGKey(args.seed + 1)

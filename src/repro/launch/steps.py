@@ -81,12 +81,20 @@ def make_train_step(
     mesh: Mesh,
     shape: ShapeConfig,
     policy: ShardingPolicy = ShardingPolicy(),
+    seed: int = 0,
 ) -> StepBundle:
     cfg = model.cfg
 
     def train_step(params, opt_state, batch):
         with sharding_policy(policy):
-            (loss, metrics), grads = jax.value_and_grad(model.loss, has_aux=True)(params, batch)
+            # per-step rng for stochastic train features (MoE router jitter):
+            # seeded by the run, advanced by the optimizer step counter, so
+            # the jitted step stays a pure (params, opt_state, batch)
+            # function and distinct runs draw distinct noise sequences
+            rng = jax.random.fold_in(jax.random.PRNGKey(seed), opt_state.step)
+            (loss, metrics), grads = jax.value_and_grad(model.loss, has_aux=True)(
+                params, batch, rng
+            )
             params, opt_state, gnorm = optimizer.update(grads, opt_state, params)
             metrics = dict(metrics, loss=loss, grad_norm=gnorm)
             return params, opt_state, metrics

@@ -54,8 +54,11 @@ def make_state_and_step(model, optimizer, *, pvq_qat=False, pvq_k=None, pvq_grou
     @jax.jit
     def step_fn(state, batch):
         params, opt_state = state
+        # per-step rng for stochastic train features (MoE router jitter),
+        # seeded by the run and advanced by the optimizer step counter
+        rng = jax.random.fold_in(jax.random.PRNGKey(seed), opt_state.step)
         def loss_fn(p):
-            return model.loss(maybe_project(p), batch)
+            return model.loss(maybe_project(p), batch, rng)
         (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
         params, opt_state, gnorm = optimizer.update(grads, opt_state, params)
         return (params, opt_state), dict(metrics, loss=loss, grad_norm=gnorm)

@@ -86,9 +86,13 @@ class Model:
     # --------------------------------------------------------------- forward
 
     def forward(
-        self, params: Params, batch: Dict[str, jax.Array], *, mode: str = "train"
+        self, params: Params, batch: Dict[str, jax.Array], *, mode: str = "train",
+        rng: Optional[jax.Array] = None,
     ) -> Tuple[jax.Array, jax.Array, Optional[Any]]:
-        """Full-sequence forward. Returns (logits, aux_loss, caches|None)."""
+        """Full-sequence forward. Returns (logits, aux_loss, caches|None).
+
+        ``rng`` enables train-time stochastic features (MoE router jitter);
+        omit it for deterministic eval/prefill."""
         cfg = self.cfg
         tokens = batch["tokens"]
         x = self._embed_tokens(params, tokens)
@@ -109,6 +113,7 @@ class Model:
                 cfg, seg, params["segments"][f"seg{i}"], x,
                 mode=mode, enc_out=enc_out, prefix_len=prefix_len,
                 remat=(mode == "train"),
+                rng=(None if rng is None else jax.random.fold_in(rng, i)),
             )
             aux = aux + aux_i
             if c is not None:
@@ -128,9 +133,12 @@ class Model:
 
     # ------------------------------------------------------------------ loss
 
-    def loss(self, params: Params, batch: Dict[str, jax.Array]) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    def loss(
+        self, params: Params, batch: Dict[str, jax.Array],
+        rng: Optional[jax.Array] = None,
+    ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
         cfg = self.cfg
-        logits, aux, _ = self.forward(params, batch, mode="train")
+        logits, aux, _ = self.forward(params, batch, mode="train", rng=rng)
         targets = batch["targets"]
         logz = jax.nn.logsumexp(logits, axis=-1)
         tgt_logit = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]

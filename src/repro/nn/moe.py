@@ -30,6 +30,9 @@ class MoEConfig(NamedTuple):
     capacity_factor: float = 1.25
     group_size: int = 4096  # routing group (tokens)
     activation: str = "swiglu"
+    # multiplicative router-logit noise, active only when moe_forward gets
+    # train=True AND an rng key: logits *= U(1-jitter, 1+jitter) (Switch
+    # Transformer recipe — decorrelates expert choice early in training)
     router_jitter: float = 0.0
 
 
@@ -53,6 +56,27 @@ def init_moe(key, d_model: int, cfg: MoEConfig, dtype=jnp.float32) -> Params:
     return p
 
 
+def routing_group_size(cfg: MoEConfig, t: int) -> int:
+    """Tokens per routing group for a t-token batch (groups of
+    ``cfg.group_size``, shrunk to the batch when smaller)."""
+    return min(cfg.group_size, t)
+
+
+def routing_capacity(cfg: MoEConfig, s: int) -> int:
+    """Capacity slots per (group, expert) for group size ``s`` — THE formula
+    ``_routing`` dispatches with; anything pre-computing dispatch-GEMM
+    shapes (e.g. ``launch/serve.py --tune``) must go through it."""
+    return max(int(math.ceil(s * cfg.top_k * cfg.capacity_factor / cfg.n_experts)), 1)
+
+
+def dispatch_gemm_rows(cfg: MoEConfig, t: int) -> int:
+    """Rows (m = groups * capacity) of the per-expert dispatch-buffer GEMM
+    that ``moe_forward`` hands to ``ops.packed_matmul_stacked`` for a
+    t-token batch — the shape the shared expert tiles are keyed on."""
+    gs = routing_group_size(cfg, t)
+    return (-(-t // gs)) * routing_capacity(cfg, gs)
+
+
 def _topk_argmax(probs: jax.Array, k: int):
     """top-k via k argmax+mask rounds.
 
@@ -73,7 +97,8 @@ def _topk_argmax(probs: jax.Array, k: int):
 
 
 def _routing(
-    logits: jax.Array, cfg: MoEConfig, *, light: bool = False
+    logits: jax.Array, cfg: MoEConfig, *, light: bool = False,
+    token_mask: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, Optional[jax.Array], Optional[jax.Array], jax.Array]:
     """logits: (g, s, E).
 
@@ -85,18 +110,30 @@ def _routing(
     holds exactly one token, so combine == dispatch * slot_gate broadcast.
     Saves a full f32 dispatch-sized tensor per MoE layer (8GB/layer on the
     236B train cell) and reuses the bf16 dispatch for the return trip.
+
+    ``token_mask`` (g, s) bool marks the real tokens: padding appended by
+    ``moe_forward`` to reach a group multiple is excluded from dispatch,
+    never claims a capacity slot, and does not enter the Switch aux-loss
+    statistics (padding otherwise inflates f_e/P_e toward uniform and
+    silently eats capacity from real tokens).
     """
     g, s, e = logits.shape
-    c = max(int(math.ceil(s * cfg.top_k * cfg.capacity_factor / e)), 1)
+    c = routing_capacity(cfg, s)
     probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
     gate_vals, gate_idx = _topk_argmax(probs, cfg.top_k)  # (g, s, k)
     # renormalize selected gates (DeepSeek-V2 style)
     gate_vals = gate_vals / jnp.maximum(jnp.sum(gate_vals, -1, keepdims=True), 1e-9)
 
-    # Load-balancing aux loss (Switch): E * sum_e f_e * P_e
-    me = jnp.mean(probs, axis=(0, 1))  # (E,)
+    # Load-balancing aux loss (Switch): E * sum_e f_e * P_e — over REAL tokens
     onehot_top1 = jax.nn.one_hot(gate_idx[..., 0], e)
-    ce = jnp.mean(onehot_top1, axis=(0, 1))
+    if token_mask is None:
+        me = jnp.mean(probs, axis=(0, 1))  # (E,)
+        ce = jnp.mean(onehot_top1, axis=(0, 1))
+    else:
+        mask_f = token_mask.astype(jnp.float32)  # (g, s)
+        denom = jnp.maximum(jnp.sum(mask_f), 1.0)
+        me = jnp.sum(probs * mask_f[..., None], axis=(0, 1)) / denom
+        ce = jnp.sum(onehot_top1 * mask_f[..., None], axis=(0, 1)) / denom
     aux = e * jnp.sum(me * ce)
 
     dispatch = jnp.zeros((g, s, e, c), jnp.bfloat16)
@@ -107,6 +144,10 @@ def _routing(
     for j in range(cfg.top_k):
         idx = gate_idx[..., j]  # (g, s)
         oh = jax.nn.one_hot(idx, e, dtype=jnp.int32)  # (g, s, E)
+        if token_mask is not None:
+            # padded tokens select no expert: zero contribution AND zero
+            # cumsum increment, so they never occupy a capacity slot
+            oh = oh * token_mask[..., None].astype(jnp.int32)
         pos = jnp.cumsum(oh, axis=1) - 1 + fill[:, None, :]  # (g, s, E)
         pos_tok = jnp.sum(pos * oh, axis=-1)  # (g, s) position for this token
         keep = pos_tok < c
@@ -123,45 +164,96 @@ def _routing(
     return dispatch, combine, slot_gate, aux
 
 
+#: MoE activation -> fused matmul-epilogue name (repro.kernels ACTIVATIONS)
+_KERNEL_ACT = {"swiglu": "silu", "silu": "silu", "geglu": "gelu",
+               "gelu": "gelu", "relu": "relu", "relu2": "relu2"}
+
+
+def _expert_matmul(buf: jax.Array, w, *, activation: str = "none") -> jax.Array:
+    """Contract the (g, E, C, d) dispatch buffer against a stacked expert
+    weight bank (E, d, f) — dense einsum, or the batched int8-native kernel
+    when the bank is a ``PackedPVQ`` (expert-stacked matmul layout).
+
+    The packed path folds the buffer to per-expert matrices (E, g*C, d) and
+    streams each expert's pulse plane straight into the Pallas kernel with
+    one shared autotuned tile config (keyed on the per-expert (g*C, d_pad, f)
+    shape); ``activation`` (kernel epilogue name) fuses into the store either
+    way.  No dense expert tensor is ever materialized on the packed path.
+    """
+    from repro.core.packed import is_packed
+
+    if not is_packed(w):
+        y = jnp.einsum("gecd,edf->gecf", buf, w.astype(buf.dtype))
+        return _act(activation, y) if activation != "none" else y
+    from repro.kernels import ops
+
+    g, e, c, d = buf.shape
+    xb = jnp.transpose(buf, (1, 0, 2, 3)).reshape(e, g * c, d).astype(jnp.float32)
+    y = ops.packed_matmul_stacked(xb, w, activation=activation)
+    f = y.shape[-1]
+    return jnp.transpose(y.reshape(e, g, c, f), (1, 0, 2, 3)).astype(buf.dtype)
+
+
 def moe_forward(
     p: Params,
     x: jax.Array,  # (b, s, d)
     cfg: MoEConfig,
     *,
     expert_constraint=None,
+    train: bool = False,
+    rng: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, jax.Array]:
-    """Returns (out (b,s,d), aux_loss)."""
+    """Returns (out (b,s,d), aux_loss).
+
+    Expert weights may be dense ``(E, d, f)`` tensors or ``PackedPVQ`` banks
+    (expert-stacked matmul layout, see ``repro.core.packed``) — the three
+    expert contractions dispatch transparently, like ``dense``/``embed``.
+    ``train=True`` with an ``rng`` key enables router-jitter noise (when
+    ``cfg.router_jitter > 0``).
+    """
     b, s, d = x.shape
     tokens = x.reshape(-1, d)
     t = tokens.shape[0]
-    gs = min(cfg.group_size, t)
+    gs = routing_group_size(cfg, t)
     # pad to a multiple of the group size (dropped tokens pass via residual)
     pad = (-t) % gs
     if pad:
         tokens = jnp.concatenate([tokens, jnp.zeros((pad, d), tokens.dtype)])
     g = tokens.shape[0] // gs
     xg = tokens.reshape(g, gs, d)
+    # mask the structural padding out of routing: padded tokens must not
+    # receive logits' capacity slots nor skew the aux statistics
+    token_mask = None
+    if pad:
+        token_mask = (jnp.arange(g * gs) < t).reshape(g, gs)
 
     from repro.parallel import current_policy
 
     light = current_policy().moe_light_combine
     logits = jnp.einsum("gsd,de->gse", xg.astype(jnp.float32), p["router"]["kernel"])
-    dispatch, combine, slot_gate, aux = _routing(logits, cfg, light=light)
+    if train and cfg.router_jitter > 0.0 and rng is not None:
+        logits = logits * jax.random.uniform(
+            rng, logits.shape, jnp.float32,
+            1.0 - cfg.router_jitter, 1.0 + cfg.router_jitter,
+        )
+    dispatch, combine, slot_gate, aux = _routing(
+        logits, cfg, light=light, token_mask=token_mask
+    )
 
     # dispatch: tokens -> expert buffers (all-to-all under SPMD)
     buf = jnp.einsum("gsd,gsec->gecd", xg, dispatch.astype(xg.dtype))
     if expert_constraint is not None:
         buf = expert_constraint(buf)
 
-    # expert FFN on (g, E, C, d)
+    # expert FFN on (g, E, C, d): three stacked matmuls (packed or dense)
     glu = "wi_gate_experts" in p
-    up = jnp.einsum("gecd,edf->gecf", buf, p["wi_up_experts"].astype(buf.dtype))
+    act = _KERNEL_ACT[cfg.activation]
     if glu:
-        gate = jnp.einsum("gecd,edf->gecf", buf, p["wi_gate_experts"].astype(buf.dtype))
-        h = _act(cfg.activation, gate) * up
+        up = _expert_matmul(buf, p["wi_up_experts"])
+        h = _expert_matmul(buf, p["wi_gate_experts"], activation=act) * up
     else:
-        h = _act(cfg.activation, up)
-    out_buf = jnp.einsum("gecf,efd->gecd", h, p["wo_experts"].astype(h.dtype))
+        h = _expert_matmul(buf, p["wi_up_experts"], activation=act)
+    out_buf = _expert_matmul(h, p["wo_experts"])
 
     # combine: expert buffers -> tokens (second all-to-all)
     if light:

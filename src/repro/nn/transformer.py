@@ -163,8 +163,12 @@ def block_forward(
     enc_out: Optional[jax.Array] = None,
     prefix_len: int = 0,
     q_chunk: int = 512,
+    rng: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, jax.Array, Optional[Dict[str, Any]]]:
-    """Returns (x, aux_loss, cache_entry_or_None)."""
+    """Returns (x, aux_loss, cache_entry_or_None).
+
+    ``rng`` (train only) feeds stochastic layer features — currently the
+    MoE router jitter; None keeps every layer deterministic."""
     aux = jnp.zeros((), jnp.float32)
     cache: Dict[str, Any] = {}
     h = _norm(cfg, p["ln_mix"], x)
@@ -225,7 +229,10 @@ def block_forward(
         if spec.ffn in ("dense", "dense0"):
             y = L.ffn(p["ffn"], h, cfg.ffn_activation, hidden_constraint=_ffn_hidden_constraint)
         elif spec.ffn == "moe":
-            y, aux_moe = moe_lib.moe_forward(p["ffn"], h, cfg.moe, expert_constraint=_expert_constraint)
+            y, aux_moe = moe_lib.moe_forward(
+                p["ffn"], h, cfg.moe, expert_constraint=_expert_constraint,
+                train=(mode == "train"), rng=rng,
+            )
             aux = aux + aux_moe
         elif spec.ffn == "cmix":
             y = rwkv_lib.rwkv_channel_mix(p["ffn"], h)
@@ -356,16 +363,22 @@ def run_segment(
     prefix_len: int = 0,
     q_chunk: int = 512,
     remat: bool = True,
+    rng: Optional[jax.Array] = None,
 ):
     repeats, pattern = seg
+    # per-layer keys ride the scan as xs (None is an empty pytree: the scan
+    # signature is identical with or without stochastic layer features)
+    keys = jax.random.split(rng, repeats) if rng is not None else None
 
-    def body(carry, p_r):
+    def body(carry, xs):
         x, aux = carry
+        p_r, key_r = xs
         caches = {}
         for i, spec in enumerate(pattern):
             x, aux_i, c = block_forward(
                 cfg, spec, p_r[f"b{i}"], x, mode=mode,
                 enc_out=enc_out, prefix_len=prefix_len, q_chunk=q_chunk,
+                rng=(None if key_r is None else jax.random.fold_in(key_r, i)),
             )
             aux = aux + aux_i
             if c is not None:
@@ -398,7 +411,7 @@ def run_segment(
         cache_list = []
         for r in range(repeats):
             p_r = jax.tree.map(lambda t: t[r], seg_params)
-            carry, c = body(carry, p_r)
+            carry, c = body(carry, (p_r, None if keys is None else keys[r]))
             cache_list.append(c)
         (x, aux) = carry
         caches = (
@@ -407,7 +420,7 @@ def run_segment(
             else None
         )
         return x, aux, caches
-    (x, aux), caches = jax.lax.scan(body, carry0, seg_params)
+    (x, aux), caches = jax.lax.scan(body, carry0, (seg_params, keys))
     return x, aux, caches
 
 

@@ -162,6 +162,15 @@ _PARAM_RULES: Tuple[Tuple[str, Tuple[Any, ...]], ...] = (
     # scales' group axis tiles the same contraction dim
     (r"(wo|out|out_proj)/kernel/pulses$", ("tp", "fsdp")),
     (r"(wo|out|out_proj)/kernel/scales$", ("tp", "fsdp")),
+    # packed MoE expert banks (expert-stacked matmul layout): E on model
+    # (EP); wi pulses (E, d_pad, f) shard the contraction dim on data
+    # (FSDP), wo pulses (E, f_pad, d) shard the output dim on data.  The
+    # scales' group axes (d_pad/group, f_pad/group) are short and stay
+    # unsharded unless divisible (wo scales tile the model dim n=d).
+    (r"wi_(up|gate)_experts/pulses$", ("tp", "fsdp", None)),
+    (r"wi_(up|gate)_experts/scales$", ("tp", None, None)),
+    (r"wo_experts/pulses$", ("tp", None, "fsdp")),
+    (r"wo_experts/scales$", ("tp", None, "fsdp")),
     # column-parallel / generic matmul layout: FSDP in, TP out (scales'
     # group axis is short — k_pad/group — so only the n axis shards)
     (r"kernel/pulses$", ("fsdp", "tp")),
@@ -207,6 +216,14 @@ def _fsdp_axes(mesh: Mesh, policy: ShardingPolicy):
 # ~1.8GB/chip without per-step weight all-gathers; the down-proj contraction
 # psums a tokens-sized tensor instead — tiny at decode batch sizes).
 _SERVE_EXPERT_RULES: Tuple[Tuple[str, Tuple[Any, ...]], ...] = (
+    # packed children first (their paths end in /pulses|/scales, so the
+    # dense rules below can never shadow them): EP over model; the expert
+    # FFN hidden dim (f on wi's output axis, f_pad on wo's group-padded
+    # contraction axis) shards over data, exactly like the dense bank
+    (r"wi_(up|gate)_experts/pulses$", ("tp", None, "data")),
+    (r"wi_(up|gate)_experts/scales$", ("tp", None, "data")),
+    (r"wo_experts/pulses$", ("tp", "data", None)),
+    (r"wo_experts/scales$", ("tp", "data", None)),
     (r"wi_(up|gate)_experts$", ("tp", None, "data")),
     (r"wo_experts$", ("tp", "data", None)),
 )

@@ -221,6 +221,34 @@ def test_pvqz_roundtrip_bit_exact(tmp_path):
     assert read_toc(path)["meta"]["arch"] == "unit-test"
 
 
+def test_pvqz_expert_bank_roundtrip_bit_exact(tmp_path):
+    """MoE expert banks: (E, d, f) and scan-stacked (R, E, d, f) packed
+    leaves restore bit-exact per expert, with the stack geometry in the TOC."""
+    from repro.core.quantize import QuantPolicy
+    from repro.nn.moe import MoEConfig, init_moe
+
+    cfg = MoEConfig(n_experts=4, top_k=2, d_expert=32, capacity_factor=2.0,
+                    group_size=32)
+    p = init_moe(jax.random.PRNGKey(40), 16, cfg)
+    p = jax.tree.map(lambda a: jnp.stack([a, a * 1.1]), p)  # scan stack
+    tree = quantize_params(
+        p, QuantPolicy(rules=(("kernel|experts", 2.0, 64),), scale_mode="ls")
+    )
+    want = packed_leaves(tree)
+    assert {"wi_up_experts", "wi_gate_experts", "wo_experts"} <= set(want)
+    path = tmp_path / "experts.pvqz"
+    report = write_pvqz(path, tree)
+    got = load_pvqz(path, target=tree)
+    for key, a in want.items():
+        _assert_packed_equal(a, packed_leaves(got)[key])
+    # the TOC records the leading stack axes (scan repeats x expert axis)
+    recs = {r["path"]: r for r in read_toc(path)["leaves"] if r["kind"] == "packed"}
+    assert recs["wi_up_experts"]["stack"] == [2, 4]
+    assert recs["wo_experts"]["stack"] == [2, 4]
+    # per-leaf report covers the expert bank
+    assert report["leaves"]["wi_up_experts"]["bits_per_weight"] < 8.0
+
+
 @pytest.mark.parametrize("codec", ["golomb", "rle", "nibble", "int8"])
 def test_pvqz_forced_codec_roundtrip(tmp_path, codec):
     pk = pack_matmul(

@@ -143,6 +143,105 @@ def test_moe_router_gates_sum_to_one():
     np.testing.assert_allclose(np.asarray(jnp.sum(renorm, -1)), 1.0, rtol=1e-6)
 
 
+def test_routing_token_mask_frees_capacity_and_aux():
+    """Satellite regression: padded (masked) tokens must not be dispatched,
+    must not occupy capacity slots, and must not enter the aux statistics.
+
+    Construction: 4 real tokens prefer expert 1 then expert 0; 4 zero-logit
+    pads argmax to expert 0 in round 0.  Unmasked, the pads fill expert 0's
+    capacity (c=4) so every real token's second choice is dropped; masked,
+    all real second choices land.
+    """
+    cfg = _moe_cfg(n_experts=2, top_k=2, capacity_factor=0.5, group_size=8)
+    real = jnp.tile(jnp.array([[1.0, 3.0]]), (4, 1))  # prefer e1, then e0
+    pads = jnp.zeros((4, 2))
+    logits = jnp.concatenate([real, pads])[None]  # (1, 8, 2); c = 4
+    mask = (jnp.arange(8) < 4)[None]
+
+    d_unmasked, _, _, aux_unmasked = MOE._routing(logits, cfg)
+    d_masked, _, _, aux_masked = MOE._routing(logits, cfg, token_mask=mask)
+
+    # unmasked: pads claim expert 0's 4 slots in round 0 -> real tokens'
+    # second choice (expert 0) is fully starved
+    assert float(jnp.sum(d_unmasked[0, :4, 0])) == 0.0
+    assert float(jnp.sum(d_unmasked[0, 4:])) > 0.0  # pads were dispatched
+    # masked: pads dispatch nowhere, real tokens keep both choices
+    assert float(jnp.sum(d_masked[0, 4:])) == 0.0
+    assert float(jnp.sum(d_masked[0, :4, 0])) == 4.0
+    assert float(jnp.sum(d_masked[0, :4])) == 8.0  # 4 tokens x top-2, no drops
+
+    # aux over real tokens only: me/ce from the first 4 rows
+    probs = jax.nn.softmax(logits[0, :4].astype(jnp.float32), -1)
+    me = jnp.mean(probs, 0)
+    ce = jnp.array([0.0, 1.0])  # all real top-1 picks are expert 1
+    want_aux = 2.0 * float(jnp.sum(me * ce))
+    assert float(aux_masked) == pytest.approx(want_aux, rel=1e-6)
+    assert float(aux_unmasked) != pytest.approx(want_aux, rel=1e-3)
+
+
+def test_moe_forward_masks_group_padding():
+    """moe_forward pads t to a group multiple; the pad tokens must not alter
+    the aux statistics (old behavior: 31 zero tokens all voted expert 0)."""
+    cfg = _moe_cfg(group_size=32)
+    p = MOE.init_moe(jax.random.PRNGKey(6), 16, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(7), (1, 33, 16))  # pad = 31
+    out, aux = MOE.moe_forward(p, x, cfg)
+    assert out.shape == (1, 33, 16)
+    # aux must equal the mask-aware routing of the same padded logits
+    tokens = jnp.concatenate([x.reshape(-1, 16), jnp.zeros((31, 16))]).reshape(2, 32, 16)
+    logits = jnp.einsum("gsd,de->gse", tokens.astype(jnp.float32), p["router"]["kernel"])
+    mask = (jnp.arange(64) < 33).reshape(2, 32)
+    _, _, _, want_aux = MOE._routing(logits, cfg, token_mask=mask)
+    assert float(aux) == pytest.approx(float(want_aux), rel=1e-6)
+
+
+def test_moe_router_jitter():
+    """Satellite: cfg.router_jitter is multiplicative train-time logit noise —
+    active only with train=True AND an rng key, deterministic per key."""
+    cfg = _moe_cfg(router_jitter=0.5, capacity_factor=1.0)
+    p = MOE.init_moe(jax.random.PRNGKey(8), 16, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(9), (2, 32, 16)) * 3.0
+    base, base_aux = MOE.moe_forward(p, x, cfg)
+    # eval (train=False) and train-without-rng are noise-free
+    for kw in ({}, {"train": True}, {"rng": jax.random.PRNGKey(0)}):
+        out, aux = MOE.moe_forward(p, x, cfg, **kw)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(base))
+    # train + rng perturbs routing; same key is deterministic
+    j1, _ = MOE.moe_forward(p, x, cfg, train=True, rng=jax.random.PRNGKey(1))
+    j1b, _ = MOE.moe_forward(p, x, cfg, train=True, rng=jax.random.PRNGKey(1))
+    j2, _ = MOE.moe_forward(p, x, cfg, train=True, rng=jax.random.PRNGKey(2))
+    np.testing.assert_array_equal(np.asarray(j1), np.asarray(j1b))
+    assert np.any(np.asarray(j1) != np.asarray(base))
+    assert np.any(np.asarray(j1) != np.asarray(j2))
+    # jitter=0 is a no-op even under train
+    out0, _ = MOE.moe_forward(p, x, cfg._replace(router_jitter=0.0),
+                              train=True, rng=jax.random.PRNGKey(3))
+    np.testing.assert_array_equal(np.asarray(out0), np.asarray(base))
+
+
+def test_moe_router_jitter_reachable_from_model_loss():
+    """The rng must thread Model.loss -> run_segment (scan xs) ->
+    block_forward -> moe_forward, so router_jitter is live in the real
+    train step, not just at the layer level."""
+    import dataclasses
+
+    from repro.configs import get_config
+    from repro.nn.models import build_model
+
+    cfg = get_config("deepseek-v2-lite-16b").reduced()
+    cfg = dataclasses.replace(cfg, moe=cfg.moe._replace(router_jitter=0.5))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0), max_seq=8)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, cfg.vocab_size)
+    batch = {"tokens": toks, "targets": toks}
+    l0 = float(model.loss(params, batch)[0])  # no rng: deterministic
+    assert l0 == float(model.loss(params, batch)[0])
+    l1 = float(model.loss(params, batch, rng=jax.random.PRNGKey(2))[0])
+    l1b = float(model.loss(params, batch, rng=jax.random.PRNGKey(2))[0])
+    assert l1 == l1b  # deterministic per key
+    assert l1 != l0  # jitter perturbed the routing/gates
+
+
 # ---------------------------------------------------------------------------
 # MLA
 # ---------------------------------------------------------------------------

@@ -405,3 +405,208 @@ def test_prop_nibble_roundtrip_2d(rows, cols, seed):
     packed, shape = pack_nibbles(p)
     assert shape == (rows, cols)
     np.testing.assert_array_equal(unpack_nibbles(packed, shape), p)
+
+
+# ---------------------------------------------------------------------------
+# expert-stacked packed MoE bank (PR 4)
+# ---------------------------------------------------------------------------
+
+
+def _moe_cfg(**kw):
+    from repro.nn.moe import MoEConfig
+
+    d = dict(n_experts=4, top_k=2, n_shared=0, d_expert=32, capacity_factor=2.0,
+             group_size=32, activation="swiglu")
+    d.update(kw)
+    return MoEConfig(**d)
+
+
+EXPERT_POLICY = QuantPolicy(rules=(("kernel|experts", 2.0, 64),), scale_mode="ls")
+
+
+def test_pack_matmul_expert_stack_shapes():
+    """(E, d, f) and scan-stacked (R, E, d, f) banks: stack axes ride along
+    on pulses/scales, the static metadata stays the unstacked matrix."""
+    w3 = jax.random.laplace(jax.random.PRNGKey(20), (4, 100, 32)) * 0.1
+    pk3 = pack_matmul(w3, group=64, n_over_k=2.0)
+    assert pk3.pulses.shape == (4, 128, 32) and pk3.scales.shape == (4, 2, 32)
+    assert pk3.shape == (100, 32)
+    w4 = jnp.stack([w3, w3 * 1.5])
+    pk4 = pack_matmul(w4, group=64, n_over_k=2.0)
+    assert pk4.pulses.shape == (2, 4, 128, 32) and pk4.scales.shape == (2, 4, 2, 32)
+    # every stack entry is encoded independently: slice 0 == the 3-D pack
+    np.testing.assert_array_equal(np.asarray(pk4.pulses[0]), np.asarray(pk3.pulses))
+    deq = pk4.dequantize()
+    assert deq.shape == (2, 4, 100, 32)
+    np.testing.assert_allclose(
+        np.asarray(deq[0]), np.asarray(pk3.dequantize()), rtol=1e-6, atol=1e-7
+    )
+
+
+def test_packed_matmul_stacked_matches_dequant():
+    w = jax.random.laplace(jax.random.PRNGKey(21), (4, 96, 48)) * 0.1
+    pk = pack_matmul(w, group=32, n_over_k=2.0)
+    x = jax.random.normal(jax.random.PRNGKey(22), (4, 8, 96))
+    got = ops.packed_matmul_stacked(x, pk, interpret=True)
+    want = jnp.einsum("emk,ekn->emn", x, pk.dequantize())
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+    # fused epilogue activation
+    got_act = ops.packed_matmul_stacked(x, pk, activation="silu", interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(got_act), np.asarray(jax.nn.silu(want)), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_packed_matmul_stacked_validates_inputs():
+    w = jax.random.laplace(jax.random.PRNGKey(23), (4, 64, 32)) * 0.1
+    pk = pack_matmul(w, group=64, n_over_k=2.0)
+    with pytest.raises(ValueError, match="matching the expert axis"):
+        ops.packed_matmul_stacked(jnp.zeros((3, 8, 64)), pk, interpret=True)
+    w2, pk2 = _packed_2d(d_in=64, d_out=32)
+    with pytest.raises(ValueError, match="stacked expert bank"):
+        ops.packed_matmul_stacked(jnp.zeros((4, 8, 64)), pk2, interpret=True)
+    e = jax.random.normal(jax.random.PRNGKey(24), (16, 32))
+    pe = pack_flat(e, group=32, n_over_k=1.0, row_align=32)
+    with pytest.raises(ValueError, match="layout"):
+        ops.packed_matmul_stacked(jnp.zeros((4, 8, 32)), pe, interpret=True)
+
+
+def test_quantize_params_packs_expert_banks():
+    from repro.nn.moe import init_moe
+
+    p = init_moe(jax.random.PRNGKey(25), 16, _moe_cfg())
+    q = quantize_params(p, EXPERT_POLICY)
+    pl = packed_leaves(q)
+    assert {"wi_up_experts", "wi_gate_experts", "wo_experts"} <= set(pl)
+    assert all(leaf.layout == "matmul" for leaf in pl.values())
+    # the router is raw-consumed by _routing and must never be packed
+    assert not is_packed(q["router"]["kernel"])
+
+
+def test_moe_forward_packed_matches_dequant():
+    """Satellite: packed-vs-dense expert forward equivalence on a small MoE
+    (same routing, same capacity — the expert matmuls are the only delta)."""
+    from repro.nn.moe import init_moe, moe_forward
+
+    cfg = _moe_cfg()
+    p = init_moe(jax.random.PRNGKey(26), 16, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(27), (2, 32, 16))
+    q = quantize_params(p, EXPERT_POLICY)
+    out_pk, aux_pk = moe_forward(q, x, cfg)
+    out_dq, aux_dq = moe_forward(dequantize_params(q), x, cfg)
+    np.testing.assert_allclose(
+        np.asarray(out_pk), np.asarray(out_dq), rtol=1e-4, atol=1e-5
+    )
+    assert float(aux_pk) == pytest.approx(float(aux_dq), rel=1e-6)
+
+
+def test_moe_forward_packed_light_combine_parity():
+    """Satellite: slot-gate (light) vs f32-combine routing on PACKED experts."""
+    from repro.nn.moe import init_moe, moe_forward
+    from repro.parallel import ShardingPolicy, sharding_policy
+
+    cfg = _moe_cfg()
+    p = init_moe(jax.random.PRNGKey(28), 16, cfg)
+    q = quantize_params(p, EXPERT_POLICY)
+    x = jax.random.normal(jax.random.PRNGKey(29), (2, 32, 16))
+    out_ref, aux_ref = moe_forward(q, x, cfg)
+    with sharding_policy(ShardingPolicy(moe_light_combine=True)):
+        out_light, aux_light = moe_forward(q, x, cfg)
+    np.testing.assert_allclose(
+        np.asarray(out_light), np.asarray(out_ref), rtol=2e-2, atol=1e-4
+    )
+    assert float(aux_light) == pytest.approx(float(aux_ref), rel=1e-6)
+
+
+def test_moe_forward_packed_under_scan_stack():
+    """Scan-stacked (R, E, d, f) expert leaves slice per layer inside
+    lax.scan exactly like 2-D packed kernels do."""
+    from repro.nn.moe import init_moe, moe_forward
+
+    cfg = _moe_cfg()
+    p = init_moe(jax.random.PRNGKey(30), 16, cfg)
+    p2 = jax.tree.map(lambda a: jnp.stack([a, a * 0.5]), p)
+    q2 = quantize_params(p2, EXPERT_POLICY)
+    assert packed_leaves(q2)["wi_up_experts"].pulses.ndim == 4
+    x = jax.random.normal(jax.random.PRNGKey(31), (1, 32, 16))
+
+    def body(h, layer):
+        out, _ = moe_forward(layer, h, cfg)
+        return h + out, None
+
+    got, _ = jax.lax.scan(body, x, q2)
+    want = x
+    for r in range(2):
+        # tree.map slices pulses/scales children, exactly like lax.scan
+        layer = jax.tree.map(lambda t: t[r], q2)
+        out, _ = moe_forward(layer, want, cfg)
+        want = want + out
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_packed_expert_sharding_rules():
+    from jax.sharding import PartitionSpec as P
+
+    from repro.parallel.sharding import ShardingPolicy, param_pspec
+
+    mesh = _FakeMesh({"data": 16, "model": 16})
+    pol = ShardingPolicy()
+    # train layout: EP on model, contraction (wi) / output (wo) dim on data
+    assert param_pspec("ffn/wi_up_experts/pulses", (160, 5120, 1536), mesh, pol) == P("model", ("data",), None)
+    assert param_pspec("ffn/wi_gate_experts/scales", (160, 20, 1536), mesh, pol) == P("model", None, None)
+    assert param_pspec("ffn/wo_experts/pulses", (160, 1536, 5120), mesh, pol) == P("model", None, ("data",))
+    assert param_pspec("ffn/wo_experts/scales", (160, 6, 5120), mesh, pol) == P("model", None, ("data",))
+    # scan-stacked leaves get the leading None
+    assert param_pspec("seg1/b0/ffn/wi_up_experts/pulses", (8, 160, 5120, 1536), mesh, pol) == P(None, "model", ("data",), None)
+    # serve layout: no FSDP — expert hidden dim sharded over data instead
+    spol = ShardingPolicy(serve_params=True)
+    assert param_pspec("ffn/wi_up_experts/pulses", (160, 5120, 1536), mesh, spol) == P("model", None, "data")
+    assert param_pspec("ffn/wo_experts/pulses", (160, 1536, 5120), mesh, spol) == P("model", "data", None)
+    assert param_pspec("ffn/wo_experts/scales", (160, 6, 5120), mesh, spol) == P("model", None, None)
+
+
+def test_deepseek_moe_serves_packed_end_to_end():
+    """Acceptance: the deepseek-v2-lite MoE config serves with expert weights
+    held as PackedPVQ end-to-end — no dense expert tensor at rest — and the
+    greedy decodes match the dequantized-weight reference."""
+    from repro.configs import get_config
+    from repro.launch.serve import generate
+    from repro.nn.models import build_model
+
+    cfg = get_config("deepseek-v2-lite-16b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0), max_seq=12)
+    policy = QuantPolicy(
+        rules=(("embedding", 0.5, cfg.pvq.group),
+               ("kernel|experts", 2.0, cfg.pvq.group)),
+        scale_mode="ls",
+    )
+    qparams = quantize_params(params, policy)
+    experts = {k: v for k, v in packed_leaves(qparams).items() if "_experts" in k}
+    assert len(experts) == 3  # wi_up / wi_gate / wo, scan-stacked
+    assert all(leaf.pulses.ndim == 4 for leaf in experts.values())
+    toks = jax.random.randint(jax.random.PRNGKey(2), (2, 6), 0, cfg.vocab_size)
+    out_packed = generate(model, qparams, toks, gen=4, cache_len=12)
+    out_sim = generate(model, dequantize_params(qparams), toks, gen=4, cache_len=12)
+    agree = float(jnp.mean((out_packed == out_sim).astype(jnp.float32)))
+    assert agree >= 0.9, agree  # identical weights; rare argmax ties may flip
+
+
+def test_packed_expert_checkpoint_bit_exact(tmp_path):
+    from repro.checkpoint import Checkpointer
+    from repro.nn.moe import init_moe
+
+    p = init_moe(jax.random.PRNGKey(32), 16, _moe_cfg())
+    p4 = jax.tree.map(lambda a: jnp.stack([a, a * 1.1]), p)  # scan stack
+    q = quantize_params(p4, EXPERT_POLICY)
+    for codec in ("packed", "golomb"):
+        ck = Checkpointer(tmp_path / codec, packed_codec=codec)
+        ck.save(1, q)
+        restored, _ = ck.restore(q)
+        for key, leaf in packed_leaves(q).items():
+            got = packed_leaves(restored)[key]
+            np.testing.assert_array_equal(np.asarray(got.pulses), np.asarray(leaf.pulses))
+            np.testing.assert_array_equal(np.asarray(got.scales), np.asarray(leaf.scales))
+            assert (got.group, got.k, got.shape, got.layout) == (
+                leaf.group, leaf.k, leaf.shape, leaf.layout
+            )
