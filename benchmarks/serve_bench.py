@@ -55,12 +55,22 @@ def bench_serve_throughput(arch: str = "smollm-360m", *, batch: int = 2,
     st = packed_stats(qparams)
     tps_packed = timed(qparams)
 
+    # int8-activation leg (ISSUE 5): same packed artifact, the decode loop
+    # quantizes activations per row and runs the int8 x int8 kernel v3 —
+    # on CPU hosts an interpret-mode correctness proxy like the packed leg.
+    from repro.core.quantize import ActQuant, act_quant_scope
+
+    with act_quant_scope(ActQuant(mode="per_row")):
+        tps_act_int8 = timed(qparams)
+
     return [{
         "bench": f"serve:{cfg.name}:b{batch}g{gen}",
         "us_per_call": round(1e6 / max(tps_packed, 1e-9), 1),
         "tokens_per_s_f32": round(tps_f32, 2),
         "tokens_per_s_packed": round(tps_packed, 2),
+        "tokens_per_s_act_int8": round(tps_act_int8, 2),
         "packed_over_f32": round(tps_packed / max(tps_f32, 1e-9), 3),
+        "act_int8_over_packed": round(tps_act_int8 / max(tps_packed, 1e-9), 3),
         "encode_s": round(encode_s, 2),
         "packed_tensors": st["packed_tensors"],
         "packed_bytes": st["packed_bytes"],

@@ -13,6 +13,7 @@ the per-group-rho variant our TPU kernel consumes.
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import re
 from typing import Any, Callable, Dict, List, Optional, Tuple
@@ -23,6 +24,133 @@ import numpy as np
 
 from . import codes as codes_lib
 from .pvq import PVQCode, pvq_decode_grouped, pvq_encode, pvq_encode_grouped
+
+
+# ---------------------------------------------------------------------------
+# ActQuant: the activation-quantization contract (kernel v3, int8 x int8)
+# ---------------------------------------------------------------------------
+
+ACT_QUANT_MODES = ("per_row", "per_tensor")
+
+#: int8 symmetric range; the activation scale maps max|x| onto this bound
+ACT_QMAX = 127
+
+
+@dataclasses.dataclass(frozen=True)
+class ActQuant:
+    """Symmetric int8 activation quantization contract.
+
+    One shared config object flows from the serving entry point through the
+    nn layers into ``kernels.ops`` — every matmul that sees it quantizes its
+    activation operand to int8 and dispatches the int8 x int8 kernel v3
+    (int32 MXU accumulation, ``act_scale * rho`` on the accumulator).
+
+    mode:
+      * ``'per_row'``   — one scale per activation row (= per token/slot);
+        the finest granularity the kernel consumes without a per-element
+        multiply.  This is the serving default: decode batches mix prompt
+        magnitudes, so a shared scale would let one hot row crush the rest.
+      * ``'per_tensor'`` — one scale for the whole activation tile; cheapest,
+        coarsest (ablation / per-tensor-calibrated deployments).
+
+    The transform is exact-roundtrip-bounded: ``x = q * scale + e`` with
+    ``|e| <= scale / 2`` elementwise (see :func:`quantize_activations`),
+    which gives the closed-form matmul error model
+    :func:`act_matmul_error_bound` that the property tests assert against.
+    """
+
+    mode: str = "per_row"
+
+    def __post_init__(self) -> None:
+        if self.mode not in ACT_QUANT_MODES:
+            raise ValueError(
+                f"ActQuant mode {self.mode!r} not in {ACT_QUANT_MODES}"
+            )
+
+
+#: process default consumed by the nn layers when no explicit config is
+#: passed (``launch/serve.py --act-int8`` sets it once; everything below —
+#: dense, unembed, sequential.kernel_apply, the MoE dispatch buffer — picks
+#: it up without threading a flag through every model signature).
+_DEFAULT_ACT_QUANT: Optional[ActQuant] = None
+
+
+def set_default_act_quant(aq: Optional[ActQuant]) -> Optional[ActQuant]:
+    """Set the process-wide default ActQuant; returns the previous value."""
+    global _DEFAULT_ACT_QUANT
+    prev = _DEFAULT_ACT_QUANT
+    _DEFAULT_ACT_QUANT = aq
+    return prev
+
+
+def default_act_quant() -> Optional[ActQuant]:
+    return _DEFAULT_ACT_QUANT
+
+
+@contextlib.contextmanager
+def act_quant_scope(aq: Optional[ActQuant]):
+    """Scoped override of the process default (A/B comparisons, tests)."""
+    prev = set_default_act_quant(aq)
+    try:
+        yield aq
+    finally:
+        set_default_act_quant(prev)
+
+
+def quantize_activations(
+    x: jax.Array, aq: ActQuant = ActQuant()
+) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric int8 quantization of an activation tensor ``(..., k)``.
+
+    Returns ``(q int8 (..., k), scale f32 (..., 1))`` with
+    ``scale = max|row| / 127`` (per_row) or the tensor-wide equivalent
+    broadcast to every row.  Properties (asserted in tests):
+
+    * exact bound: ``|x - q * scale| <= scale / 2`` elementwise
+      (round-to-nearest of ``x / scale``; no clipping error — ``|x| <=
+      127 * scale`` by construction, so ``|round(x/scale)| <= 127``);
+    * all-zero rows (e.g. MoE capacity padding) get ``scale = 0`` and
+      ``q = 0`` — they dequantize to exact zeros instead of NaNs.
+    """
+    xf = x.astype(jnp.float32)
+    if aq.mode == "per_row":
+        amax = jnp.max(jnp.abs(xf), axis=-1, keepdims=True)
+    else:  # per_tensor
+        amax = jnp.broadcast_to(
+            jnp.max(jnp.abs(xf)), xf.shape[:-1] + (1,)
+        )
+    scale = amax / ACT_QMAX
+    inv = jnp.where(scale > 0, 1.0 / jnp.maximum(scale, 1e-30), 0.0)
+    q = jnp.clip(jnp.round(xf * inv), -ACT_QMAX, ACT_QMAX).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def act_matmul_error_bound(
+    act_scale: jax.Array,  # (m, 1) f32 per-row activation scales
+    w_pulses: jax.Array,  # (k, n) int8 PVQ pulses
+    w_scales: jax.Array,  # (k // group, n) f32 per-group rho
+    group: int,
+) -> jax.Array:
+    """Exact worst-case |int8-act output - f32-act output| per logit, (m, n).
+
+    The quantization error is elementwise bounded by ``act_scale / 2``, so
+    for output column n:
+
+        |sum_i e_i * W_in|  <=  (act_scale/2) * sum_g |rho_gn| * L1(pulses_gn)
+
+    where ``L1(pulses_gn) = K`` for unclamped codes and <= K after the
+    K > 127 int8 clamp — the bound is computed from the pulses actually
+    stored, so it is valid in the clamped regime too.  Zero ``act_scale``
+    rows (all-pad) contribute a zero bound: their outputs are exactly 0 on
+    both paths.
+    """
+    k, n = w_pulses.shape
+    l1 = jnp.sum(
+        jnp.abs(w_pulses.astype(jnp.float32)).reshape(k // group, group, n),
+        axis=1,
+    )  # (k//group, n)
+    per_col = jnp.sum(jnp.abs(w_scales.astype(jnp.float32)) * l1, axis=0)  # (n,)
+    return 0.5 * act_scale.astype(jnp.float32) * per_col[None, :]
 
 
 @dataclasses.dataclass(frozen=True)

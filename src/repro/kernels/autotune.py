@@ -13,10 +13,13 @@ Cache
 -----
 * location: ``$REPRO_PVQ_TUNE_CACHE`` if set, else
   ``~/.cache/repro/pvq_tune_cache.json``
-* matmul key: ``"m x k x n : g<group> : <dtype> : <backend> : kv<N> : v2"``
+* matmul key: ``"m x k x n : g<group> : <dtype> : <backend> : kv<N> : v3"``
   (no spaces) — ``kv<N>`` is ``pvq_matmul.KERNEL_VERSION``, so a material
-  kernel body change (e.g. the v2 int8-native contraction) invalidates every
-  tile timing measured against the old body instead of silently serving it.
+  kernel body change (e.g. the v3 quantized-activation contraction)
+  invalidates every tile timing measured against the old body instead of
+  silently serving it.  ``<dtype>`` is the *activation* dtype: ``int8`` keys
+  time the int8 x int8 kernel v3 body (``launch/serve.py --tune --act-int8``
+  pre-tunes them), float keys the f32-activation body.
 * matmul value: ``{"bm":…, "bn":…, "bk":…, "us":…, "candidates":…}``
 * encoder key: ``"enc g x n : k<K> : <dtype> : <backend> : ekv<N> : v2"``
   with ``ekv<N>`` = ``pvq_encode.ENCODE_KERNEL_VERSION``; value
@@ -49,11 +52,15 @@ import jax
 import jax.numpy as jnp
 
 from .pvq_encode import ENCODE_KERNEL_VERSION, default_sort_impl, pvq_encode_batch
-from .pvq_matmul import KERNEL_VERSION, normalize_tiles, pvq_matmul
+from .pvq_matmul import KERNEL_VERSION, normalize_tiles, pvq_matmul, pvq_matmul_q
 
 # v2: keys carry the kernel-body version tag (ROADMAP "tuned-tile
 # invalidation") — entries tuned against an older kernel body miss.
-_SCHEMA = "v2"
+# v3: the activation dtype in the key is now load-bearing (int8 keys time
+# the quantized-activation kernel v3 body, float keys the f32-act v2 body),
+# so the schema bump guarantees v2-era tiles can never collide with v3
+# dispatch even for entries whose kv tag a hand-edited cache got wrong.
+_SCHEMA = "v3"
 # process-local mirror of the JSON file: avoids re-reading per dispatch
 _MEM: Dict[str, dict] = {}
 _MEM_LOADED_FROM: Optional[str] = None
@@ -172,16 +179,27 @@ def candidate_tiles(
 
 
 def _time_candidate(
-    x, w, s, group: int, tiles: Tuple[int, int, int], reps: int, interpret: bool
+    x, w, s, group: int, tiles: Tuple[int, int, int], reps: int, interpret: bool,
+    act_scale=None,
 ) -> float:
     bm, bn, bk = tiles
-    y = pvq_matmul(x, w, s, group=group, bm=bm, bn=bn, bk=bk, interpret=interpret)
-    y.block_until_ready()  # warmup: trace + compile outside the timed region
+    if act_scale is not None:
+        # int8 activation dtype: time the quantized-activation kernel v3
+        # body — the body these tiles will actually dispatch to
+        def call():
+            return pvq_matmul_q(
+                x, w, s, act_scale, group=group, bm=bm, bn=bn, bk=bk,
+                interpret=interpret,
+            )
+    else:
+        def call():
+            return pvq_matmul(
+                x, w, s, group=group, bm=bm, bn=bn, bk=bk, interpret=interpret
+            )
+    call().block_until_ready()  # warmup: trace + compile outside the timed region
     t0 = time.perf_counter()
     for _ in range(reps):
-        pvq_matmul(
-            x, w, s, group=group, bm=bm, bn=bn, bk=bk, interpret=interpret
-        ).block_until_ready()
+        call().block_until_ready()
     return (time.perf_counter() - t0) / reps
 
 
@@ -214,14 +232,20 @@ def autotune(
     cands = candidate_tiles(m, k, n, group, max_candidates)
 
     kx, kw, ks = jax.random.split(jax.random.PRNGKey(0), 3)
-    x = jax.random.normal(kx, (m, k), jnp.float32).astype(dtype)
+    act_scale = None
+    if jnp.issubdtype(jnp.dtype(dtype), jnp.integer):
+        # int8 activation key: quantized operands + per-row scales (v3 body)
+        x = jax.random.randint(kx, (m, k), -127, 128, jnp.int8)
+        act_scale = jnp.full((m, 1), 0.01, jnp.float32)
+    else:
+        x = jax.random.normal(kx, (m, k), jnp.float32).astype(dtype)
     w = jax.random.randint(kw, (k, n), -3, 4, jnp.int8)
     s = (jnp.abs(jax.random.normal(ks, (k // group, n))) * 0.05).astype(jnp.float32)
 
     best: Optional[Tuple[int, int, int]] = None
     best_t = float("inf")
     for t in cands:
-        dt = _time_candidate(x, w, s, group, t, reps, interpret)
+        dt = _time_candidate(x, w, s, group, t, reps, interpret, act_scale=act_scale)
         if dt < best_t:
             best, best_t = t, dt
     assert best is not None

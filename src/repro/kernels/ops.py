@@ -31,10 +31,34 @@ from . import ref as ref_lib
 from .pvq_encode import pvq_encode_batch as _encode_kernel
 from .pvq_matmul import pvq_matmul as _matmul_kernel
 from .pvq_matmul import pvq_matmul_batched as _matmul_kernel_batched
+from .pvq_matmul import pvq_matmul_q as _matmul_kernel_q
+from .pvq_matmul import pvq_matmul_q_batched as _matmul_kernel_q_batched
 
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
+
+
+def _quantize_x(x, act_quant, act_scale):
+    """Resolve the ActQuant contract for a matmul entry point.
+
+    Returns ``(x, act_scale)`` where either both are None-quantized (f32
+    path) or ``x`` is int8 with ``(..., 1)`` f32 row scales (v3 path).
+    ``act_scale is not None`` means the caller already quantized (the MoE
+    dispatch buffer is quantized ONCE and its scales reused across the
+    up/gate expert matmuls) — ``x`` must then be int8 already.
+    """
+    if act_scale is not None:
+        if x.dtype != jnp.int8:
+            raise ValueError(
+                f"pre-quantized dispatch (act_scale given) needs int8 x, got {x.dtype}"
+            )
+        return x, jnp.asarray(act_scale, jnp.float32)
+    if act_quant is None:
+        return x, None
+    from repro.core.quantize import quantize_activations
+
+    return quantize_activations(x, act_quant)
 
 
 # ---------------------------------------------------------------------------
@@ -50,6 +74,8 @@ def pvq_matmul(
     group: int = 128,
     bias=None,
     activation: str = "none",
+    act_quant=None,
+    act_scale=None,
     interpret: bool | None = None,
     tune: bool | None = None,
     **tiles,
@@ -60,9 +86,17 @@ def pvq_matmul(
     kwargs, the persistent autotune cache, a timed search when ``tune=True``
     (or ``REPRO_PVQ_AUTOTUNE=1``), else the MXU heuristic.  Ragged shapes are
     padded internally; see kernels.pvq_matmul for the tiling contract.
+
+    ``act_quant`` (a ``repro.core.quantize.ActQuant``) switches to kernel v3:
+    x is quantized to symmetric int8 here and contracted int8 x int8 with an
+    int32 MXU accumulator — no f32 activation tensor reaches the kernel.
+    ``act_scale`` instead marks ``x`` as *already* quantized (int8) with the
+    given per-row scales; tiles are then keyed on the int8 activation dtype.
     """
     if interpret is None:
         interpret = not _on_tpu()
+    out_dtype = x.dtype if jnp.issubdtype(x.dtype, jnp.floating) else jnp.float32
+    x, act_scale = _quantize_x(x, act_quant, act_scale)
     if not tiles:
         m, k = x.shape
         n = w_pulses.shape[1]
@@ -70,6 +104,19 @@ def pvq_matmul(
             m, k, n, group=group, dtype=x.dtype, search=tune, interpret=interpret
         )
         tiles = {"bm": bm, "bn": bn, "bk": bk}
+    if act_scale is not None:
+        return _matmul_kernel_q(
+            x,
+            w_pulses,
+            scales,
+            act_scale,
+            bias,
+            group=group,
+            activation=activation,
+            out_dtype=out_dtype,
+            interpret=interpret,
+            **tiles,
+        )
     return _matmul_kernel(
         x,
         w_pulses,
@@ -88,6 +135,8 @@ def packed_matmul(
     *,
     bias=None,
     activation: str = "none",
+    act_quant=None,
+    act_scale=None,
     interpret: bool | None = None,
     tune: bool | None = None,
 ):
@@ -96,7 +145,9 @@ def packed_matmul(
     kernel and rho lands on the accumulator.
 
     ``x``: (m, d_in) with ``d_in <= packed.k_pad``; the group-padding columns
-    are zero-filled here (zero lanes meet zero pulses).
+    are zero-filled here (zero lanes meet zero pulses — int8 zeros on the
+    quantized-activation path).  ``act_quant``/``act_scale`` follow the
+    :func:`pvq_matmul` contract (kernel v3, int8 x int8).
     """
     if packed.layout != "matmul":
         raise ValueError(f"packed_matmul needs layout='matmul', got {packed.layout!r}")
@@ -121,6 +172,8 @@ def packed_matmul(
         group=packed.group,
         bias=bias,
         activation=activation,
+        act_quant=act_quant,
+        act_scale=act_scale,
         interpret=interpret,
         tune=tune,
     )
@@ -131,6 +184,8 @@ def packed_matmul_stacked(
     packed,
     *,
     activation: str = "none",
+    act_quant=None,
+    act_scale=None,
     interpret: bool | None = None,
     tune: bool | None = None,
 ):
@@ -143,6 +198,11 @@ def packed_matmul_stacked(
     problem through the persistent autotune cache, then every expert step
     of the scan reuses them — the int8 pulse planes stream into the kernel
     as stored, no dense expert tensor is ever materialized.
+
+    ``act_quant`` quantizes the dispatch buffers here (per-row int8, kernel
+    v3); ``act_scale`` (E, m, 1) marks ``x`` as already-quantized int8 —
+    ``moe_forward`` quantizes its dispatch buffer ONCE and reuses the same
+    int8 buffer + scales across the up AND gate expert matmuls.
     """
     if packed.layout != "matmul":
         raise ValueError(
@@ -169,12 +229,28 @@ def packed_matmul_stacked(
             f"x feature dim {x.shape[-1]} matches neither the packed bank's "
             f"logical d_in {d_in} nor its padded k_pad {k_pad}"
         )
+    out_dtype = x.dtype if jnp.issubdtype(x.dtype, jnp.floating) else jnp.float32
+    x, act_scale = _quantize_x(x, act_quant, act_scale)
     if x.shape[-1] != k_pad:
         x = jnp.pad(x, ((0, 0), (0, 0), (0, k_pad - x.shape[-1])))
     bm, bn, bk = autotune_lib.get_tiles(
         x.shape[1], k_pad, n, group=packed.group, dtype=x.dtype,
         search=tune, interpret=interpret,
     )
+    if act_scale is not None:
+        return _matmul_kernel_q_batched(
+            x,
+            packed.pulses,
+            packed.scales,
+            act_scale,
+            group=packed.group,
+            bm=bm,
+            bn=bn,
+            bk=bk,
+            activation=activation,
+            out_dtype=out_dtype,
+            interpret=interpret,
+        )
     return _matmul_kernel_batched(
         x,
         packed.pulses,

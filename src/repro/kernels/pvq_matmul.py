@@ -16,6 +16,23 @@ int8 directly) and applies rho to the ``(bm, bn)`` f32 *accumulator*, i.e.
 ONE multiply per group exactly as the paper counts it.  VMEM traffic per
 tile drops by the dequantized-weight materialization (4 bytes/weight).
 
+Quantized-activation body (kernel v3): :func:`pvq_matmul_q` takes the
+activations *already quantized* to symmetric int8 (per-row scales — the
+``ActQuant`` contract in ``repro.core.quantize``) and contracts int8 x tiles
+against int8 pulse tiles with ``preferred_element_type=int32`` — the MXU
+accumulates in int32, the paper's fully integer dot.  The group's rho then
+multiplies the int32 group partial once (ONE multiply per group, unchanged
+from v2) and the per-row activation scale is applied once per output element
+in the epilogue (amortized over all k-groups, not per group).  No f32
+activation tensor is ever fed to the MXU on this path.
+
+Double-buffered DMA pulse streaming: for big-FFN tiles (large ``bk * bn``)
+the v3 path hand-rolls the HBM->VMEM pulse transfer with
+``pltpu.make_async_copy`` into a 2-deep int8 scratch — the next (bk, bn)
+pulse tile lands while the MXU chews the current one.  Small tiles keep the
+automatic Pallas pipeline (grid over k), which already double-buffers block
+operands.
+
 Epilogue fusion: an optional bias add and activation run inside the final
 ``@pl.when`` store, so a quantized dense layer costs one HBM round-trip for
 the output instead of three (matmul out + bias + act).
@@ -31,6 +48,7 @@ sizes are normally chosen by ``repro.kernels.autotune`` via ``kernels.ops``.
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
@@ -42,7 +60,7 @@ _CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerPar
 
 #: bumped whenever the kernel body changes materially; feeds the autotune
 #: cache key so stale tile timings from an older body never win dispatch.
-KERNEL_VERSION = 2  # v2: int8-native contraction, rho on the accumulator
+KERNEL_VERSION = 3  # v3: int8 x int8 quantized-activation body, int32 MXU accum
 
 ACTIVATIONS = ("none", "relu", "relu2", "gelu", "silu")
 
@@ -267,4 +285,334 @@ def pvq_matmul_batched(
         return None, y
 
     _, out = jax.lax.scan(body, None, (x, w_pulses, scales))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Kernel v3: quantized activations — int8 x int8, int32 MXU accumulation
+# ---------------------------------------------------------------------------
+
+
+def _contract_int8_q(x, w, s, group: int) -> jax.Array:
+    """Fully integer tile contraction: per group-slice, one int8 x int8 dot
+    with ``preferred_element_type=int32`` (the MXU accumulates in int32),
+    then the group's rho row multiplies the int32 partial once — ONE
+    multiply per group, now with integer feeds on BOTH operands.
+
+    Returns the f32 (bm, bn) partial sum for this (bk, bn) tile.  Beyond
+    ``_MAX_UNROLL_GROUPS`` the per-group dots run as one batched
+    ``dot_general`` over the group axis instead of an unrolled chain —
+    still int8 x int8 / int32, never a dequantized operand.
+    """
+    bk, bn = w.shape
+    bm = x.shape[0]
+    n_groups = bk // group
+    if n_groups > _MAX_UNROLL_GROUPS:
+        xg = jnp.swapaxes(x.reshape(bm, n_groups, group), 0, 1)  # (G, bm, group)
+        wg = w.reshape(n_groups, group, bn)
+        part = jax.lax.dot_general(
+            xg, wg, (((2,), (1,)), ((0,), (0,))),
+            preferred_element_type=jnp.int32,
+        )  # (G, bm, bn) int32
+        return jnp.sum(part.astype(jnp.float32) * s[:, None, :], axis=0)
+    acc = jnp.zeros((bm, bn), jnp.float32)
+    for g in range(n_groups):
+        xg = x[:, g * group : (g + 1) * group]  # (bm, group) int8
+        wg = w[g * group : (g + 1) * group, :]  # (group, bn) int8
+        part = jax.lax.dot_general(
+            xg, wg, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32,
+        )
+        acc = acc + part.astype(jnp.float32) * s[g, :][None, :]
+    return acc
+
+
+def _q_epilogue(acc, a, bias, activation: str) -> jax.Array:
+    """v3 epilogue: the per-row activation scale multiplies the accumulated
+    (rho-weighted) integer sums ONCE per output element, then bias + act."""
+    y = acc * a  # (bm, bn) * (bm, 1)
+    if bias is not None:
+        y = y + bias.astype(jnp.float32)
+    return _apply_activation(y, activation)
+
+
+def _kernel_q(
+    x_ref, w_ref, s_ref, a_ref, o_ref, acc_ref, *, group: int, n_k: int,
+    activation: str,
+):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # x (bm, bk) int8 / w (bk, bn) int8 / s (bk//group, bn) f32 / a (bm, 1) f32
+    acc_ref[...] += _contract_int8_q(x_ref[...], w_ref[...], s_ref[...], group)
+
+    @pl.when(pl.program_id(2) == n_k - 1)
+    def _done():
+        o_ref[...] = _q_epilogue(
+            acc_ref[...], a_ref[...], None, activation
+        ).astype(o_ref.dtype)
+
+
+def _kernel_q_bias(
+    x_ref, w_ref, s_ref, a_ref, b_ref, o_ref, acc_ref, *, group: int, n_k: int,
+    activation: str,
+):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += _contract_int8_q(x_ref[...], w_ref[...], s_ref[...], group)
+
+    @pl.when(pl.program_id(2) == n_k - 1)
+    def _done():
+        o_ref[...] = _q_epilogue(
+            acc_ref[...], a_ref[...], b_ref[...], activation
+        ).astype(o_ref.dtype)
+
+
+#: hand-rolled DMA streaming pays off when one (bk, bn) pulse tile is big
+#: enough that its HBM->VMEM transfer rivals the MXU time (big-FFN shapes);
+#: below this the automatic k-grid pipeline is already optimal.
+_DMA_MIN_TILE_ELEMS = 64 * 1024
+#: the DMA body holds the full (bm, k_pad) int8 x row-block in VMEM — cap it
+#: (plus 2 pulse-tile slots) well under the per-core budget.
+_DMA_MAX_X_BYTES = 4 * 1024 * 1024
+
+
+def _dma_streaming_wanted(
+    mp: int, kp: int, np_: int, bm: int, bn: int, bk: int
+) -> bool:
+    if os.environ.get("REPRO_PVQ_DMA", "") in ("0", "off", "false"):
+        return False
+    n_chunks = kp // bk
+    return (
+        n_chunks >= 2  # something to overlap
+        and bk * bn >= _DMA_MIN_TILE_ELEMS  # transfer worth hiding
+        and bm * kp <= _DMA_MAX_X_BYTES  # whole x row-block fits VMEM
+    )
+
+
+def _kernel_q_dma(
+    x_ref, w_hbm_ref, s_ref, a_ref, b_ref, o_ref, wbuf, sems, *, group: int,
+    bk: int, n_chunks: int, activation: str, has_bias: bool,
+):
+    """v3 body with hand-rolled double-buffered pulse streaming.
+
+    Grid is (m/bm, n/bn) — no k grid dimension.  The int8 pulse operand
+    stays in HBM (``memory_space=ANY``); the kernel walks the contraction
+    dim in ``bk`` chunks, DMA-ing chunk ``i+1`` into one slot of a 2-deep
+    VMEM scratch while the MXU contracts chunk ``i`` from the other
+    (``pltpu.make_async_copy`` + per-slot DMA semaphores).  x / scales /
+    act-scale row blocks are small and ride the automatic pipeline.
+    """
+    bn = o_ref.shape[1]
+    col0 = pl.program_id(1) * bn
+    gpc = bk // group  # scale rows per chunk
+
+    def _dma(slot, idx):
+        return pltpu.make_async_copy(
+            w_hbm_ref.at[pl.ds(idx * bk, bk), pl.ds(col0, bn)],
+            wbuf.at[slot],
+            sems.at[slot],
+        )
+
+    _dma(0, 0).start()
+    x = x_ref[...]  # (bm, k_pad) int8
+    s = s_ref[...]  # (k_pad // group, bn) f32
+
+    def body(idx, acc):
+        slot = idx % 2
+
+        @pl.when(idx + 1 < n_chunks)
+        def _prefetch():
+            _dma((idx + 1) % 2, idx + 1).start()
+
+        _dma(slot, idx).wait()
+        xc = jax.lax.dynamic_slice(x, (0, idx * bk), (x.shape[0], bk))
+        sc = jax.lax.dynamic_slice(s, (idx * gpc, 0), (gpc, bn))
+        return acc + _contract_int8_q(xc, wbuf[slot], sc, group)
+
+    acc = jax.lax.fori_loop(
+        0, n_chunks, body, jnp.zeros(o_ref.shape, jnp.float32)
+    )
+    bias = b_ref[...] if has_bias else None
+    o_ref[...] = _q_epilogue(acc, a_ref[...], bias, activation).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "group", "bm", "bn", "bk", "activation", "out_dtype", "dma_streaming",
+        "interpret",
+    ),
+)
+def pvq_matmul_q(
+    x_q: jax.Array,  # (m, k) int8 quantized activations
+    w_pulses: jax.Array,  # (k, n) int8
+    scales: jax.Array,  # (k // group, n) f32
+    act_scale: jax.Array,  # (m, 1) or (1, 1) f32 per-row activation scales
+    bias: jax.Array | None = None,  # (n,) optional fused epilogue bias
+    *,
+    group: int = 128,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+    activation: str = "none",
+    out_dtype=jnp.float32,
+    dma_streaming: bool | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Kernel v3: fused quantized-activation matmul
+    ``act(act_scale * (x_q @int32 (pulses * rho)) + bias)``.
+
+    Both MXU operands are int8 and the per-group dot accumulates in int32
+    (``preferred_element_type=int32``); rho multiplies each int32 group
+    partial once, the per-row ``act_scale`` multiplies the final accumulator
+    once in the epilogue.  ``dma_streaming=None`` auto-selects the
+    hand-rolled double-buffered HBM->VMEM pulse path for big tiles and the
+    automatic k-grid pipeline otherwise; True/False force it.
+    """
+    m, k = x_q.shape
+    k2, n = w_pulses.shape
+    assert k == k2, (k, k2)
+    assert k % group == 0, f"contraction dim {k} must be a group ({group}) multiple"
+    assert x_q.dtype == jnp.int8, f"x_q must be pre-quantized int8, got {x_q.dtype}"
+    assert w_pulses.dtype == jnp.int8, w_pulses.dtype
+    assert scales.shape == (k // group, n), (scales.shape, (k // group, n))
+    assert act_scale.shape in ((m, 1), (1, 1)), (act_scale.shape, m)
+    assert activation in ACTIVATIONS, f"activation {activation!r} not in {ACTIVATIONS}"
+    if bias is not None:
+        assert bias.shape == (n,), (bias.shape, n)
+
+    bm, bn, bk = normalize_tiles(m, k, n, group, bm, bn, bk)
+
+    xp = _pad_to(_pad_to(x_q, 0, bm), 1, bk)
+    wp = _pad_to(_pad_to(w_pulses, 0, bk), 1, bn)
+    sp = _pad_to(_pad_to(scales, 0, bk // group), 1, bn)
+    ap = _pad_to(
+        jnp.broadcast_to(act_scale.astype(jnp.float32), (m, 1)), 0, bm
+    )
+    mp, kp = xp.shape
+    np_ = wp.shape[1]
+    n_k = kp // bk
+
+    if dma_streaming is None:
+        dma_streaming = _dma_streaming_wanted(mp, kp, np_, bm, bn, bk)
+    if dma_streaming and kp // bk >= 2:
+        kernel = functools.partial(
+            _kernel_q_dma, group=group, bk=bk, n_chunks=n_k,
+            activation=activation, has_bias=bias is not None,
+        )
+        in_specs = [
+            pl.BlockSpec((bm, kp), lambda i, j: (i, 0)),
+            pl.BlockSpec(memory_space=pltpu.ANY),  # pulses stay in HBM
+            pl.BlockSpec((kp // group, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((bm, 1), lambda i, j: (i, 0)),
+        ]
+        operands = [xp, wp, sp, ap]
+        if bias is not None:
+            in_specs.append(pl.BlockSpec((1, bn), lambda i, j: (0, j)))
+            operands.append(_pad_to(bias.astype(jnp.float32)[None, :], 1, bn))
+        else:
+            # keep the kernel arity fixed: a dead (1, bn) zero bias block
+            in_specs.append(pl.BlockSpec((1, bn), lambda i, j: (0, j)))
+            operands.append(jnp.zeros((1, np_), jnp.float32))
+        out = pl.pallas_call(
+            kernel,
+            grid=(mp // bm, np_ // bn),
+            in_specs=in_specs,
+            out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.dtype(out_dtype)),
+            scratch_shapes=[
+                pltpu.VMEM((2, bk, bn), jnp.int8),
+                pltpu.SemaphoreType.DMA((2,)),
+            ],
+            interpret=interpret,
+            compiler_params=_CompilerParams(
+                dimension_semantics=("parallel", "parallel")
+            ),
+        )(*operands)
+        if (mp, np_) != (m, n):
+            out = out[:m, :n]
+        return out
+
+    in_specs = [
+        pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+        pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        pl.BlockSpec((bk // group, bn), lambda i, j, kk: (kk, j)),
+        pl.BlockSpec((bm, 1), lambda i, j, kk: (i, 0)),
+    ]
+    operands = [xp, wp, sp, ap]
+    if bias is None:
+        kernel = functools.partial(
+            _kernel_q, group=group, n_k=n_k, activation=activation
+        )
+    else:
+        kernel = functools.partial(
+            _kernel_q_bias, group=group, n_k=n_k, activation=activation
+        )
+        in_specs.append(pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)))
+        operands.append(_pad_to(bias.astype(jnp.float32)[None, :], 1, bn))
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(mp // bm, np_ // bn, n_k),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.dtype(out_dtype)),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")
+        ),
+    )(*operands)
+    if (mp, np_) != (m, n):
+        out = out[:m, :n]
+    return out
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "group", "bm", "bn", "bk", "activation", "out_dtype", "interpret"
+    ),
+)
+def pvq_matmul_q_batched(
+    x_q: jax.Array,  # (B, m, k) int8
+    w_pulses: jax.Array,  # (B, k, n) int8
+    scales: jax.Array,  # (B, k // group, n) f32
+    act_scale: jax.Array,  # (B, m, 1) f32
+    *,
+    group: int = 128,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+    activation: str = "none",
+    out_dtype=jnp.float32,
+    interpret: bool = False,
+) -> jax.Array:
+    """Batched kernel v3 over a shared leading stack axis (MoE experts):
+    ``lax.scan`` of :func:`pvq_matmul_q` with ONE shared tile config, one
+    compiled body regardless of the expert count — the quantized dispatch
+    buffer's per-expert scales ride the scan alongside the pulse planes."""
+    assert x_q.ndim == 3 and w_pulses.ndim == 3 and scales.ndim == 3, (
+        x_q.shape, w_pulses.shape, scales.shape,
+    )
+    assert act_scale.ndim == 3 and act_scale.shape[0] == x_q.shape[0], (
+        act_scale.shape, x_q.shape,
+    )
+    assert x_q.shape[0] == w_pulses.shape[0] == scales.shape[0], (
+        x_q.shape, w_pulses.shape, scales.shape,
+    )
+
+    def body(_, operands):
+        xb, wb, sb, ab = operands
+        y = pvq_matmul_q(
+            xb, wb, sb, ab, None, group=group, bm=bm, bn=bn, bk=bk,
+            activation=activation, out_dtype=out_dtype, interpret=interpret,
+        )
+        return None, y
+
+    _, out = jax.lax.scan(body, None, (x_q, w_pulses, scales, act_scale))
     return out

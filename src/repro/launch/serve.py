@@ -18,6 +18,15 @@ straight into ``PackedPVQ`` — bit-exact pulses/scales, no re-encode, peak
 decode memory bounded by one leaf — and served through the same int8-native
 path, so logits are identical to the in-memory ``--pvq`` artifact it was
 exported from.
+
+``--act-int8`` (with ``--pvq`` or ``--artifact``) sets the process-wide
+``ActQuant`` contract: every packed matmul on the hot path quantizes its
+activations to per-row symmetric int8 and runs the int8 x int8 kernel v3
+(int32 MXU accumulation) — the all-integer contraction of the paper plus
+Liguori's follow-up, with an activation-bandwidth win on top of the weight
+one.  ``--agreement-min T`` additionally serves the same prompts with f32
+activations and fails (exit 1) if greedy top-1 token agreement drops below
+T — the CI gate.
 """
 
 from __future__ import annotations
@@ -68,6 +77,66 @@ def generate(model, params, tokens, *, gen: int, cache_len: int, extra_batch=Non
     return jnp.concatenate(out, axis=1)
 
 
+def teacher_forced_logits(
+    model, params, seq, *, prompt_len: int, extra_batch=None
+):
+    """Per-position next-token logits along a FIXED sequence, through the
+    decode path (prefill on the prompt, then ``decode_step`` fed the given
+    tokens).  Returns (b, seq_len - prompt_len, vocab) logits predicting
+    positions ``prompt_len..seq_len-1``."""
+    batch = {"tokens": seq[:, :prompt_len]}
+    if extra_batch:
+        batch.update(extra_batch)
+    logits, cache = model.prefill(params, batch, cache_len=seq.shape[1])
+    steps = [logits[:, -1, :]]
+    step = jax.jit(model.decode_step)
+    for i in range(seq.shape[1] - prompt_len - 1):
+        tok = seq[:, prompt_len + i : prompt_len + i + 1]
+        logits, cache = step(params, cache, tok, jnp.int32(prompt_len + i))
+        steps.append(logits[:, -1, :])
+    return jnp.stack(steps, axis=1)
+
+
+def top1_agreement(logits_a, logits_b) -> dict:
+    """Top-1 agreement between two logit tensors over the same contexts.
+
+    Returns ``{"top1_agreement", "top1_agreement_strict", "ties_excused"}``.
+    Strict agreement is plain argmax equality.  The headline number
+    additionally excuses *sub-noise ties*: a disagreeing position counts as
+    agreeing only when BOTH
+
+    * the reference margin ``logits_a[argmax_a] - logits_a[argmax_b]`` is at
+      most the MEASURED logit perturbation ``max_v |a - b|`` at that very
+      position — the paths differ by less than the gap they disagree over;
+    * that margin is also below 5% of the reference logits' own spread at
+      the position — the reference itself calls the two candidates a
+      near-tie, so no int8 kernel (indeed no reordered f32 kernel) could
+      reproduce the pick deterministically.
+
+    The second condition keeps the excuse from laundering a broken kernel:
+    gross perturbations produce disagreements with LARGE reference margins,
+    which are never excused.  On a trained model margins dwarf the noise
+    and the two metrics coincide; the excuse exists for random-init smoke
+    models whose near-tie margins are coin flips.
+    """
+    a = jnp.asarray(logits_a, jnp.float32)
+    b = jnp.asarray(logits_b, jnp.float32)
+    pa = jnp.argmax(a, -1)
+    pb = jnp.argmax(b, -1)
+    strict = pa == pb
+    noise = jnp.max(jnp.abs(a - b), axis=-1)  # (b, t)
+    margin = jnp.take_along_axis(a, pa[..., None], -1)[..., 0] - jnp.take_along_axis(
+        a, pb[..., None], -1
+    )[..., 0]
+    tie_cap = 0.05 * jnp.std(a, axis=-1)
+    agree = strict | ((margin <= noise) & (margin <= tie_cap))
+    return {
+        "top1_agreement": float(jnp.mean(agree.astype(jnp.float32))),
+        "top1_agreement_strict": float(jnp.mean(strict.astype(jnp.float32))),
+        "ties_excused": int(jnp.sum((agree & ~strict).astype(jnp.int32))),
+    }
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="smollm-360m")
@@ -95,6 +164,21 @@ def main() -> int:
         "entropy-coded pulses stream-decode leaf-by-leaf into PackedPVQ "
         "with no re-encode, then serve int8-native",
     )
+    ap.add_argument(
+        "--act-int8",
+        action="store_true",
+        help="quantize activations to per-row symmetric int8 and run every "
+        "packed matmul through the int8 x int8 kernel v3 (int32 MXU "
+        "accumulation); requires --pvq or --artifact",
+    )
+    ap.add_argument(
+        "--agreement-min",
+        type=float,
+        default=None,
+        metavar="T",
+        help="with --act-int8: also serve the same prompts with f32 "
+        "activations and exit 1 if greedy top-1 token agreement < T",
+    )
     ap.add_argument("--n-over-k", type=float, default=1.0)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument(
@@ -105,6 +189,12 @@ def main() -> int:
         "dispatch through kernels.ops picks the tuned tiles up transparently",
     )
     args = ap.parse_args()
+    if args.act_int8 and not (args.pvq or args.artifact):
+        ap.error("--act-int8 quantizes the packed matmul activations; "
+                 "it requires --pvq or --artifact")
+    if args.agreement_min is not None and not args.act_int8:
+        ap.error("--agreement-min compares int8 vs f32 activations; "
+                 "it requires --act-int8")
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -145,6 +235,14 @@ def main() -> int:
             g, k_pad = matmul_plan(group, k)
             e = autotune.autotune(m, k_pad, n, group=g)
             tuned[f"{m}x{k_pad}x{n}"] = {kk: e[kk] for kk in ("bm", "bn", "bk", "us")}
+            if args.act_int8:
+                # the act dtype is part of the cache key: int8 entries time
+                # the quantized-activation kernel v3 body and can never be
+                # confused with the f32-activation tiles above
+                e8 = autotune.autotune(m, k_pad, n, group=g, dtype=jnp.int8)
+                tuned[f"{m}x{k_pad}x{n}:int8"] = {
+                    kk: e8[kk] for kk in ("bm", "bn", "bk", "us")
+                }
         report["tuned_tiles"] = tuned
         report["tune_cache"] = str(autotune.cache_path())
     if args.artifact:
@@ -188,6 +286,15 @@ def main() -> int:
             report.update(_expert_report(params))
         report["pvq_encode_s"] = round(time.time() - t0, 1)
 
+    from repro.core.quantize import ActQuant, act_quant_scope, set_default_act_quant
+
+    if args.act_int8:
+        # one switch sets the process-wide contract: every packed matmul
+        # below (dense, unembed, MoE dispatch buffers) quantizes its
+        # activations and dispatches kernel v3 — no per-layer threading
+        set_default_act_quant(ActQuant(mode="per_row"))
+        report["act_quant"] = "int8:per_row"
+
     key = jax.random.PRNGKey(args.seed + 1)
     tokens = jax.random.randint(key, (args.batch, args.prompt_len), 0, cfg.vocab_size)
     extra = {}
@@ -206,6 +313,37 @@ def main() -> int:
         "tokens_per_s": round(args.batch * args.gen / dt, 1),
         "wall_s": round(dt, 2),
     })
+
+    if args.agreement_min is not None:
+        # A/B legs: identical packed weights, f32 activations (kernel v2)
+        # vs int8 activations (kernel v3), contexts AND compute path matched
+        # — both walk the same decode loop teacher-forced with the
+        # int8-generated tokens.  (A free-running comparison conflates
+        # kernel fidelity with the autoregressive cascade — one near-tie
+        # flip rewrites the whole suffix; a prefill re-score changes the
+        # tile shapes, which int8 rounding amplifies into whole quanta.)
+        lg_q = teacher_forced_logits(
+            model, params, out, prompt_len=args.prompt_len, extra_batch=extra
+        )
+        with act_quant_scope(None):
+            lg_f = teacher_forced_logits(
+                model, params, out, prompt_len=args.prompt_len,
+                extra_batch=extra,
+            )
+        ag = top1_agreement(lg_f, lg_q)
+        report["act_int8_top1_agreement"] = round(ag["top1_agreement"], 4)
+        report["act_int8_top1_agreement_strict"] = round(
+            ag["top1_agreement_strict"], 4
+        )
+        report["act_int8_ties_excused"] = ag["ties_excused"]
+        if ag["top1_agreement"] < args.agreement_min:
+            report["agreement_fail"] = (
+                f"top-1 agreement {ag['top1_agreement']:.4f} < required "
+                f"{args.agreement_min}"
+            )
+            print(json.dumps(report))
+            return 1
+
     print(json.dumps(report))
     return 0
 

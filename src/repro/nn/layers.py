@@ -102,17 +102,22 @@ def init_dense(key, d_in: int, d_out: int, *, bias: bool = False, dtype=jnp.floa
     return p
 
 
-def dense(p: Params, x: jax.Array) -> jax.Array:
+def dense(p: Params, x: jax.Array, *, act_quant=None) -> jax.Array:
     """Dense layer; accepts a float ``kernel`` or a packed PVQ one.
 
     A ``PackedPVQ`` kernel (the unified quantized artifact, see
     ``repro.core.packed``) dispatches to the int8-native Pallas kernel —
     the pulses are streamed as stored, never expanded to a dense matrix.
+    ``act_quant`` (an ``ActQuant``, defaulting to the process-wide setting
+    from ``serve --act-int8``) additionally quantizes the activations to
+    int8 on the packed path — kernel v3, int8 x int8 with int32 MXU
+    accumulation.  Float kernels ignore it (there is no integer operand to
+    pair the quantized activations with).
     """
     from repro.core.packed import is_packed
 
     if is_packed(p["kernel"]):
-        return pvq_dense(p, x)
+        return pvq_dense(p, x, act_quant=act_quant)
     y = jnp.einsum("...d,df->...f", x, p["kernel"].astype(x.dtype))
     if "bias" in p:
         y = y + p["bias"].astype(y.dtype)
@@ -139,20 +144,33 @@ def pvq_quantize_dense(p: Params, *, group: int = 128, k_pulses: int) -> Params:
     return q
 
 
-def pvq_dense(p: Params, x: jax.Array, *, activation: str = "none") -> jax.Array:
+def pvq_dense(
+    p: Params, x: jax.Array, *, activation: str = "none", act_quant=None
+) -> jax.Array:
     """Dense layer on packed params (``{"kernel": PackedPVQ [, "bias"]}``).
 
     Runs the fused int8-native Pallas kernel with the bias + activation
     epilogue; tiles come from the persistent autotune cache via kernels.ops.
     Inputs whose feature dim is smaller than the encoded (group-padded)
     contraction dim are zero-padded — zero lanes meet zero pulses.
+
+    ``act_quant=None`` resolves the process default
+    (``core.quantize.default_act_quant``); with an ``ActQuant`` in effect
+    the activations are quantized to per-row int8 and the contraction runs
+    the int8 x int8 kernel v3 — no f32 activation tensor reaches the MXU.
     """
+    from repro.core.quantize import default_act_quant
     from repro.kernels import ops
 
+    if act_quant is None:
+        act_quant = default_act_quant()
     packed = p["kernel"]
     lead, k_in = x.shape[:-1], x.shape[-1]
     xf = x.reshape(-1, k_in).astype(jnp.float32)
-    y = ops.packed_matmul(xf, packed, bias=p.get("bias"), activation=activation)
+    y = ops.packed_matmul(
+        xf, packed, bias=p.get("bias"), activation=activation,
+        act_quant=act_quant,
+    )
     return y.reshape(*lead, y.shape[-1]).astype(x.dtype)
 
 
@@ -226,7 +244,7 @@ def _packed_embed_rows(table, tokens: jax.Array) -> jax.Array:
     return rows.reshape(*tokens.shape, d)
 
 
-def _packed_unembed(table, x: jax.Array) -> jax.Array:
+def _packed_unembed(table, x: jax.Array, act_quant=None) -> jax.Array:
     """Tied-head logits against a packed embedding without dequantizing it.
 
     ``lax.scan`` over group slices: one int8 matmul ``x_g @ pulses_g^T``
@@ -234,21 +252,42 @@ def _packed_unembed(table, x: jax.Array) -> jax.Array:
     accumulator per step — the paper's adds + ONE multiply structure, never
     a (vocab, d) f32 matrix and never a (…, G, vocab) intermediate, with
     compact HLO (no per-group unroll on the decode hot path).
+
+    With an ``ActQuant`` in effect the ``x`` operand is quantized to
+    per-row int8 once and every group dot runs int8 x int8 with an int32
+    accumulator (``preferred_element_type``); rho still lands per group and
+    the per-row activation scale multiplies the final logits once.
     """
     vocab, d = table.shape
     g = table.group
     n_groups = d // g
-    # group-major operands: x (G, ..., g), pulses (G, vocab, g), rho (G, vocab)
-    xs = jnp.moveaxis(x.astype(jnp.float32).reshape(*x.shape[:-1], n_groups, g), -2, 0)
+    act_scale = None
+    if act_quant is not None:
+        from repro.core.quantize import quantize_activations
+
+        x, act_scale = quantize_activations(x, act_quant)  # int8, (..., 1)
+        xs = jnp.moveaxis(x.reshape(*x.shape[:-1], n_groups, g), -2, 0)
+    else:
+        xs = jnp.moveaxis(
+            x.astype(jnp.float32).reshape(*x.shape[:-1], n_groups, g), -2, 0
+        )
     pp = jnp.moveaxis(table.pulses.reshape(vocab, n_groups, g), 1, 0)
     sc = jnp.moveaxis(table.scales.reshape(vocab, n_groups), 1, 0).astype(jnp.float32)
 
     def body(acc, inp):
         xg, pg, sg = inp
-        return acc + jnp.einsum("...p,vp->...v", xg, pg.astype(jnp.float32)) * sg, None
+        if act_scale is not None:
+            dot = jnp.einsum(
+                "...p,vp->...v", xg, pg, preferred_element_type=jnp.int32
+            ).astype(jnp.float32)
+        else:
+            dot = jnp.einsum("...p,vp->...v", xg, pg.astype(jnp.float32))
+        return acc + dot * sg, None
 
     logits0 = jnp.zeros(x.shape[:-1] + (vocab,), jnp.float32)
     logits, _ = jax.lax.scan(body, logits0, (xs, pp, sc))
+    if act_scale is not None:
+        logits = logits * act_scale
     return logits
 
 
@@ -263,13 +302,21 @@ def embed(p: Params, tokens: jax.Array, dtype=None) -> jax.Array:
     return out.astype(dtype) if dtype is not None else out
 
 
-def unembed(p: Params, x: jax.Array) -> jax.Array:
-    """Tied output head: logits in f32 for loss stability."""
+def unembed(p: Params, x: jax.Array, *, act_quant=None) -> jax.Array:
+    """Tied output head: logits in f32 for loss stability.
+
+    On a packed table, ``act_quant`` (defaulting to the process-wide
+    contract) runs the int8 x int8 integer logits path; ``embed`` itself is
+    a gather — there is no activation operand to quantize there.
+    """
     from repro.core.packed import is_packed
+    from repro.core.quantize import default_act_quant
 
     table = p["embedding"]
     if is_packed(table):
-        return _packed_unembed(table, x)
+        if act_quant is None:
+            act_quant = default_act_quant()
+        return _packed_unembed(table, x, act_quant)
     return jnp.einsum(
         "...d,vd->...v", x.astype(jnp.float32), table.astype(jnp.float32)
     )

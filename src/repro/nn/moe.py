@@ -169,7 +169,29 @@ _KERNEL_ACT = {"swiglu": "silu", "silu": "silu", "geglu": "gelu",
                "gelu": "gelu", "relu": "relu", "relu2": "relu2"}
 
 
-def _expert_matmul(buf: jax.Array, w, *, activation: str = "none") -> jax.Array:
+def _fold_dispatch(buf: jax.Array) -> jax.Array:
+    """(g, E, C, d) dispatch buffer -> per-expert matrices (E, g*C, d) f32 —
+    the shape ``ops.packed_matmul_stacked`` contracts."""
+    g, e, c, d = buf.shape
+    return jnp.transpose(buf, (1, 0, 2, 3)).reshape(e, g * c, d).astype(jnp.float32)
+
+
+def _quantize_dispatch(buf: jax.Array, act_quant):
+    """Quantize the folded dispatch buffer ONCE (per-row symmetric int8).
+
+    The returned ``(int8 buffer (E, g*C, d), scales (E, g*C, 1))`` pair is
+    reused by both the up and gate expert matmuls — one quantization pass
+    for two contractions.  All-zero rows (empty capacity slots) get zero
+    scales and quantize to exact zeros, so they stay inert in the experts.
+    """
+    from repro.core.quantize import quantize_activations
+
+    return quantize_activations(_fold_dispatch(buf), act_quant)
+
+
+def _expert_matmul(
+    buf: jax.Array, w, *, activation: str = "none", act_quant=None, x_quant=None
+) -> jax.Array:
     """Contract the (g, E, C, d) dispatch buffer against a stacked expert
     weight bank (E, d, f) — dense einsum, or the batched int8-native kernel
     when the bank is a ``PackedPVQ`` (expert-stacked matmul layout).
@@ -179,6 +201,12 @@ def _expert_matmul(buf: jax.Array, w, *, activation: str = "none") -> jax.Array:
     one shared autotuned tile config (keyed on the per-expert (g*C, d_pad, f)
     shape); ``activation`` (kernel epilogue name) fuses into the store either
     way.  No dense expert tensor is ever materialized on the packed path.
+
+    ``x_quant`` is a pre-quantized ``(int8 (E, g*C, d), scales (E, g*C, 1))``
+    pair from :func:`_quantize_dispatch` (the quantize-once contract);
+    ``act_quant`` quantizes here instead (the ``wo`` contraction, whose
+    input ``h`` exists only after the up/gate matmuls).  Either engages the
+    int8 x int8 kernel v3.  Dense banks ignore both.
     """
     from repro.core.packed import is_packed
 
@@ -188,8 +216,15 @@ def _expert_matmul(buf: jax.Array, w, *, activation: str = "none") -> jax.Array:
     from repro.kernels import ops
 
     g, e, c, d = buf.shape
-    xb = jnp.transpose(buf, (1, 0, 2, 3)).reshape(e, g * c, d).astype(jnp.float32)
-    y = ops.packed_matmul_stacked(xb, w, activation=activation)
+    if x_quant is not None:
+        xb, act_scale = x_quant
+        y = ops.packed_matmul_stacked(
+            xb, w, activation=activation, act_scale=act_scale
+        )
+    else:
+        y = ops.packed_matmul_stacked(
+            _fold_dispatch(buf), w, activation=activation, act_quant=act_quant
+        )
     f = y.shape[-1]
     return jnp.transpose(y.reshape(e, g, c, f), (1, 0, 2, 3)).astype(buf.dtype)
 
@@ -202,6 +237,7 @@ def moe_forward(
     expert_constraint=None,
     train: bool = False,
     rng: Optional[jax.Array] = None,
+    act_quant=None,
 ) -> Tuple[jax.Array, jax.Array]:
     """Returns (out (b,s,d), aux_loss).
 
@@ -210,6 +246,12 @@ def moe_forward(
     expert contractions dispatch transparently, like ``dense``/``embed``.
     ``train=True`` with an ``rng`` key enables router-jitter noise (when
     ``cfg.router_jitter > 0``).
+
+    ``act_quant`` (default: the process-wide ``ActQuant`` contract) runs the
+    packed expert contractions int8 x int8: the (g, E, C, d) dispatch buffer
+    is quantized ONCE and its int8 buffer + per-row scales are reused by the
+    up AND gate matmuls; the hidden ``h`` is quantized once for ``wo``.  The
+    router always consumes raw f32 logits — routing is never quantized.
     """
     b, s, d = x.shape
     tokens = x.reshape(-1, d)
@@ -246,14 +288,28 @@ def moe_forward(
         buf = expert_constraint(buf)
 
     # expert FFN on (g, E, C, d): three stacked matmuls (packed or dense)
+    from repro.core.packed import is_packed
+    from repro.core.quantize import default_act_quant
+
+    if act_quant is None:
+        act_quant = default_act_quant()
     glu = "wi_gate_experts" in p
     act = _KERNEL_ACT[cfg.activation]
+    # quantize the dispatch buffer ONCE; up and gate reuse buffer + scales
+    xq = (
+        _quantize_dispatch(buf, act_quant)
+        if act_quant is not None and is_packed(p["wi_up_experts"])
+        else None
+    )
     if glu:
-        up = _expert_matmul(buf, p["wi_up_experts"])
-        h = _expert_matmul(buf, p["wi_gate_experts"], activation=act) * up
+        up = _expert_matmul(buf, p["wi_up_experts"], x_quant=xq)
+        h = _expert_matmul(buf, p["wi_gate_experts"], activation=act, x_quant=xq) * up
     else:
-        h = _expert_matmul(buf, p["wi_up_experts"], activation=act)
-    out_buf = _expert_matmul(h, p["wo_experts"])
+        h = _expert_matmul(buf, p["wi_up_experts"], activation=act, x_quant=xq)
+    out_buf = _expert_matmul(
+        h, p["wo_experts"],
+        act_quant=act_quant if is_packed(p["wo_experts"]) else None,
+    )
 
     # combine: expert buffers -> tokens (second all-to-all)
     if light:

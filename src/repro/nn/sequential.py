@@ -172,13 +172,16 @@ class SequentialNet:
         x: jax.Array,
         *,
         group: int = 128,
+        act_quant=None,
     ) -> jax.Array:
         """Forward pass with fc layers running the fused Pallas kernel.
 
         Quantized fc layers stream int8 pulses through ``ops.pvq_matmul`` with
         the bias+activation epilogue fused (bsign stays outside the kernel —
         it is not an MXU epilogue); unquantized/conv layers fall back to
-        :meth:`apply` semantics.
+        :meth:`apply` semantics.  ``act_quant`` (an ``ActQuant``, default the
+        process-wide contract) runs the quantized fc layers int8 x int8
+        through kernel v3.
         """
         for i, spec in enumerate(self.cfg.layers):
             pname = f"layer{i}"
@@ -187,7 +190,9 @@ class SequentialNet:
                     x = x.reshape(x.shape[0], -1)
                 if pname in kparams:
                     fused = spec.activation if spec.activation in ("relu", "none") else "none"
-                    y = pvq_dense(kparams[pname], x, activation=fused)
+                    y = pvq_dense(
+                        kparams[pname], x, activation=fused, act_quant=act_quant
+                    )
                     x = y if fused == spec.activation else _act(spec.activation, y)
                 else:
                     p = params[pname]

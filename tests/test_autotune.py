@@ -98,6 +98,75 @@ def test_tuned_dispatch_matches_ref(tune_cache, m, k, n, group, dtype):
 
 
 # ---------------------------------------------------------------------------
+# kernel-version invalidation (ISSUE 5 satellite: the kv{N} tag had no test)
+# ---------------------------------------------------------------------------
+
+
+def test_kernel_version_bump_changes_every_cache_key(monkeypatch):
+    """Bumping KERNEL_VERSION must change EVERY matmul cache key — no shape,
+    group, dtype, or backend combination may survive a kernel-body change."""
+    combos = [
+        (8, 128, 128, 128, jnp.float32, "cpu"),
+        (16, 256, 512, 64, jnp.bfloat16, "tpu"),
+        (8, 128, 128, 128, jnp.int8, "cpu"),
+        (128, 4096, 11008, 128, jnp.float32, "tpu"),
+    ]
+    before = {autotune.cache_key(*c) for c in combos}
+    monkeypatch.setattr(autotune, "KERNEL_VERSION", autotune.KERNEL_VERSION + 1)
+    after = {autotune.cache_key(*c) for c in combos}
+    assert len(before) == len(after) == len(combos)
+    assert before.isdisjoint(after)
+
+
+def test_v2_tagged_entries_never_served_for_v3_dispatch(tune_cache):
+    """A cache file carrying kv2/v2-era entries (older kernel body AND older
+    schema) must never satisfy current dispatch: get_tiles falls through to
+    the heuristic instead of serving the stale tiles."""
+    import json as json_lib
+
+    from repro.kernels.pvq_matmul import KERNEL_VERSION
+
+    assert KERNEL_VERSION >= 3  # the premise of the regression
+    m, k, n, group = 8, 256, 256, 128
+    poison = {"bm": 1, "bn": 1, "bk": 1, "us": 0.0, "candidates": 1}
+    key_now = autotune.cache_key(m, k, n, group, jnp.float32, jax.default_backend())
+    stale_keys = {
+        # same shape, previous kernel body tag
+        key_now.replace(f"kv{KERNEL_VERSION}", f"kv{KERNEL_VERSION - 1}"),
+        # same shape, previous schema tag (hand-edited / pre-bump cache file)
+        key_now.replace(":v3", ":v2"),
+        key_now.replace(f"kv{KERNEL_VERSION}", "kv2").replace(":v3", ":v2"),
+    }
+    assert key_now not in stale_keys
+    tune_cache.write_text(json_lib.dumps({kk: poison for kk in stale_keys}))
+    autotune.clear_memory_cache()
+    tiles = autotune.get_tiles(m, k, n, group=group, search=False, interpret=True)
+    assert tiles == autotune.heuristic_tiles(m, k, n, group)
+    assert tiles != (1, 1, 1)
+
+
+def test_int8_act_dtype_gets_its_own_cache_entry(tune_cache):
+    """The activation dtype is part of the key: int8 entries are timed
+    against the v3 quantized-activation body and never collide with the
+    f32-activation tiles for the same GEMM shape."""
+    k_f32 = autotune.cache_key(8, 128, 128, 128, jnp.float32, "cpu")
+    k_int8 = autotune.cache_key(8, 128, 128, 128, jnp.int8, "cpu")
+    assert k_f32 != k_int8 and "int8" in k_int8
+    entry = autotune.autotune(
+        8, 128, 128, group=128, dtype=jnp.int8, reps=1, interpret=True
+    )
+    assert {"bm", "bn", "bk", "us"} <= set(entry)
+    tiles = autotune.get_tiles(
+        8, 128, 128, group=128, dtype=jnp.int8, search=False, interpret=True
+    )
+    assert tiles == (entry["bm"], entry["bn"], entry["bk"])
+    # the f32 key is still a miss — the int8 search didn't pollute it
+    assert autotune._load().get(
+        autotune.cache_key(8, 128, 128, 128, jnp.float32, jax.default_backend())
+    ) is None
+
+
+# ---------------------------------------------------------------------------
 # encoder autotune: pvq_encode's (bg, delta_max) knobs (ROADMAP satellite)
 # ---------------------------------------------------------------------------
 
@@ -107,7 +176,7 @@ def test_encode_cache_key_carries_encoder_kernel_version():
 
     key = autotune.encode_cache_key(16, 128, 32, jnp.float32, "cpu")
     assert f":ekv{ENCODE_KERNEL_VERSION}:" in key
-    assert key.endswith(":v2")  # same schema/store as the matmul tiles
+    assert key.endswith(":v3")  # same schema/store as the matmul tiles
     # encoder and matmul keys can never collide
     assert key != autotune.cache_key(16, 128, 32, 128, jnp.float32, "cpu")
 

@@ -256,7 +256,7 @@ def test_autotune_cache_key_carries_kernel_version():
 
     key = autotune.cache_key(8, 128, 128, 128, jnp.float32, "cpu")
     assert f":kv{KERNEL_VERSION}:" in key
-    assert key.endswith(":v2")
+    assert key.endswith(":v3")
 
 
 # ---------------------------------------------------------------------------
