@@ -1,0 +1,82 @@
+"""Packed-vs-f32 KV-cache decode attention: the ISSUE-6 perf artifact.
+
+Builds matched caches — a dense f32 cache and a ``PackedKV`` container
+holding the same K/V rows — and times one decode step through each path
+(``decode_attention`` dense einsums vs ``decode_attention_packed`` kernel
+v4).  Rows report decode us/token for both legs plus KV bytes/token
+(packed vs f32), and go to ``BENCH_attention.json`` via benchmarks.run
+for cross-PR perf trajectories.
+
+On this CPU container the Pallas kernel runs interpret=True, so absolute
+packed timing is a correctness proxy, not a perf claim; the bytes ratio
+is backend-independent and is what the acceptance gate checks
+(packed/f32 <= 0.35).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+
+def _time_us(fn, reps: int = 5) -> float:
+    import jax
+
+    jax.block_until_ready(fn())  # warmup: trace + compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn()
+    jax.block_until_ready(out)
+    return 1e6 * (time.perf_counter() - t0) / reps
+
+
+def bench_attention_decode(*, batch: int = 2, seq: int = 96,
+                           n_heads: int = 8, n_kv: int = 2,
+                           head_dim: int = 64) -> List[Dict]:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.packed import PackedKV
+    from repro.core.quantize import KVQuant
+    from repro.nn import attention as A
+
+    kvq = KVQuant(block=32, group=32, k=127)
+    key = jax.random.PRNGKey(0)
+    kk, kv_, kq = jax.random.split(key, 3)
+    k = jax.random.normal(kk, (batch, seq, n_kv, head_dim), jnp.float32)
+    v = jax.random.normal(kv_, (batch, seq, n_kv, head_dim), jnp.float32)
+    q = jax.random.normal(kq, (batch, 1, n_heads, head_dim), jnp.float32)
+    scale = head_dim ** -0.5
+    length = jnp.full((batch,), seq, jnp.int32)
+
+    packed = PackedKV.from_dense(k, v, kvq=kvq)
+
+    dense_fn = jax.jit(
+        lambda: A.decode_attention(q, k, v, scale=scale, length=length)
+    )
+    packed_fn = lambda: A.decode_attention_packed(
+        q, packed, scale=scale, length=length
+    )
+
+    us_dense = _time_us(dense_fn)
+    us_packed = _time_us(packed_fn)
+
+    # bytes per token per kv-head pair: packed planes+scales vs f32 K+V rows
+    bpt_packed = packed.packed_bytes_per_token
+    bpt_f32 = 2 * head_dim * 4
+    out_d = dense_fn()
+    out_p = packed_fn()
+    rel = float(
+        jnp.linalg.norm(out_p.astype(jnp.float32) - out_d)
+        / jnp.maximum(jnp.linalg.norm(out_d), 1e-9)
+    )
+
+    return [{
+        "bench": f"attn:b{batch}s{seq}h{n_heads}kv{n_kv}d{head_dim}",
+        "us_per_call": round(us_packed, 1),
+        "us_per_call_f32": round(us_dense, 1),
+        "kv_bytes_per_token_packed": bpt_packed,
+        "kv_bytes_per_token_f32": bpt_f32,
+        "kv_bytes_ratio_vs_f32": round(bpt_packed / bpt_f32, 3),
+        "packed_rel_err_vs_f32": round(rel, 4),
+    }]

@@ -23,7 +23,8 @@ def main() -> None:
     ap.add_argument("--only", default="", help="run only benches whose name starts with this")
     args = ap.parse_args()
 
-    from benchmarks import artifact_bench, kernel_bench, moe_bench, paper_tables, serve_bench
+    from benchmarks import (artifact_bench, attn_bench, kernel_bench, moe_bench,
+                            paper_tables, serve_bench)
 
     all_rows = []
 
@@ -43,6 +44,7 @@ def main() -> None:
     run("kernel_pvq_matmul", kernel_bench.bench_pvq_matmul)
     run("kernel_pvq_encode", kernel_bench.bench_pvq_encode)
     run("serve_packed", serve_bench.bench_serve_throughput)
+    run("attn_packed_decode", attn_bench.bench_attention_decode)
     run("moe_packed_experts", moe_bench.bench_moe_experts)
     run("artifact_codecs", artifact_bench.bench_artifact_codecs)
 
@@ -95,6 +97,20 @@ def main() -> None:
         with open("BENCH_serve.json", "w") as f:
             json.dump(payload, f, indent=1, default=str)
         print("wrote BENCH_serve.json", file=sys.stderr)
+
+    # packed-vs-f32 KV-cache decode trajectory (bytes/token + us/token)
+    attn_rows = [r for r in all_rows if r["bench_group"].startswith("attn_")]
+    if attn_rows:
+        import jax
+
+        payload = {
+            "schema": "bench-attention-v1",
+            "backend": jax.default_backend(),
+            "rows": attn_rows,
+        }
+        with open("BENCH_attention.json", "w") as f:
+            json.dump(payload, f, indent=1, default=str)
+        print("wrote BENCH_attention.json", file=sys.stderr)
 
     # .pvqz codec trajectory: bits/weight + encode/decode MB/s per codec
     artifact_rows = [r for r in all_rows if r["bench_group"].startswith("artifact_")]

@@ -39,7 +39,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .quantize import QuantPolicy, _path_str, k_for
+from .quantize import KVQuant, QuantPolicy, _path_str, k_for
 
 Array = jax.Array
 
@@ -176,6 +176,264 @@ def materialize(leaf: Any, dtype=None) -> Array:
     if is_packed(leaf):
         return leaf.dequantize(dtype)
     return leaf if dtype is None else leaf.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# PackedKV: the PVQ-compressed attention KV cache (kernel v4 consumer)
+# ---------------------------------------------------------------------------
+
+
+def _kv_encode_planes(x: Array, group: int, k: int) -> Tuple[Array, Array]:
+    """PVQ-encode the head dim of ``x (..., hd)`` in ``hd // group`` groups.
+
+    Returns ``(pulses int8 (..., hd), scales f32 (..., hd // group))`` with
+    the least-squares rho fitted against the int8 pulses actually stored.
+    Jit-safe (static ``group``/``k``) — this runs *inside* the traced decode
+    step every time a cache block fills.
+    """
+    from .pvq import _scales, pvq_quantize_direction_fast
+
+    shp = x.shape
+    ng = shp[-1] // group
+    xg = x.astype(jnp.float32).reshape(shp[:-1] + (ng, group))
+    pulses = pvq_quantize_direction_fast(xg, k)
+    p8 = jnp.clip(pulses, -127, 127).astype(jnp.int8)
+    scales = _scales(xg, p8, "ls").astype(jnp.float32)
+    return p8.reshape(shp), scales
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class PackedKV:
+    """Block-aligned PVQ-compressed KV cache for one attention layer.
+
+    Layout (``S`` = block-padded cache length, ``ng = head_dim // group``):
+
+    * ``k_pulses``/``v_pulses`` — ``(b, S, n_kv, head_dim)`` int8 pulse
+      planes, one PVQ code of P(group, k) per (token, kv-head, sub-group);
+    * ``k_scales``/``v_scales`` — ``(b, S, n_kv, ng)`` f32 per-group rho;
+    * ``tail_k``/``tail_v`` — ``(b, block, n_kv, head_dim)`` ring in the
+      logical cache dtype holding the in-flight partial block.  Slot
+      ``pos % block`` holds position ``pos``; the moment a block completes
+      (``(pos+1) % block == 0``) it is encoded and stored at
+      ``pos + 1 - block`` in the pulse planes, and the ring is reused.
+
+    The split between packed and tail is *physical*: positions below
+    ``packed_end(filled) = (filled // block) * block`` are served from the
+    pulse planes, positions in ``[packed_end, filled)`` from the exact
+    tail.  Per-batch ragged ``length`` masks only — it never moves the
+    split, because every batch row shares the same global write position.
+
+    Registered as a pytree with named children, so the cache shards with
+    path-keyed rules (``kv/k_pulses`` ...), rides ``lax.scan`` over stacked
+    layers, and pads along the sequence axis like the dense cache.
+    """
+
+    k_pulses: Array  # int8 (b, S, n_kv, hd)
+    k_scales: Array  # f32  (b, S, n_kv, ng)
+    v_pulses: Array  # int8 (b, S, n_kv, hd)
+    v_scales: Array  # f32  (b, S, n_kv, ng)
+    tail_k: Array  # cache dtype (b, block, n_kv, hd)
+    tail_v: Array  # cache dtype (b, block, n_kv, hd)
+    block: int  # tokens per encoded block (static)
+    group: int  # effective sub-head PVQ group (static, divides hd)
+    k: int  # pulse budget per group (static, <= 127)
+    dtype: str  # logical cache dtype name (tail dtype, dequantize target)
+
+    # ------------------------------------------------------------- properties
+
+    @property
+    def head_dim(self) -> int:
+        return int(self.k_pulses.shape[-1])
+
+    @property
+    def n_groups(self) -> int:
+        return int(self.k_scales.shape[-1])
+
+    @property
+    def max_len(self) -> int:
+        """Block-padded cache length (>= the requested max_len)."""
+        return int(self.k_pulses.shape[-3])
+
+    @property
+    def packed_bytes_per_token(self) -> int:
+        """HBM bytes per token per kv-head pair (K+V pulses + scales)."""
+        return 2 * (self.head_dim + 4 * self.n_groups)
+
+    @property
+    def dense_bytes_per_token(self) -> int:
+        """Bytes per token per kv-head pair of the dense cache it replaces."""
+        return 2 * self.head_dim * jnp.dtype(self.dtype).itemsize
+
+    def packed_end(self, filled) -> Array:
+        """First position served from the tail (= completed-block extent)."""
+        return (filled // self.block) * self.block
+
+    # -------------------------------------------------------------- creation
+
+    @classmethod
+    def init(
+        cls, batch: int, max_len: int, n_kv: int, head_dim: int,
+        *, kvq: KVQuant, dtype=jnp.bfloat16,
+    ) -> "PackedKV":
+        g = _fit_group(kvq.group, head_dim)
+        blk = int(kvq.block)
+        s_pad = -(-int(max_len) // blk) * blk
+        ng = head_dim // g
+        dt = jnp.dtype(dtype)
+        return cls(
+            k_pulses=jnp.zeros((batch, s_pad, n_kv, head_dim), jnp.int8),
+            k_scales=jnp.zeros((batch, s_pad, n_kv, ng), jnp.float32),
+            v_pulses=jnp.zeros((batch, s_pad, n_kv, head_dim), jnp.int8),
+            v_scales=jnp.zeros((batch, s_pad, n_kv, ng), jnp.float32),
+            tail_k=jnp.zeros((batch, blk, n_kv, head_dim), dt),
+            tail_v=jnp.zeros((batch, blk, n_kv, head_dim), dt),
+            block=blk, group=g, k=int(kvq.k), dtype=dt.name,
+        )
+
+    @classmethod
+    def from_dense(cls, k: Array, v: Array, *, kvq: KVQuant, dtype=None) -> "PackedKV":
+        """Encode a dense prefill cache ``(b, s, n_kv, hd)`` pair.
+
+        The ``s // block`` complete blocks are encoded into the pulse
+        planes; the remainder lands in the tail at slots ``0 .. s%block-1``
+        (= ``pos % block`` for those positions, matching ``append``).
+        """
+        b, s, n_kv, hd = k.shape
+        dt = jnp.dtype(dtype if dtype is not None else k.dtype)
+        pkv = cls.init(b, s, n_kv, hd, kvq=kvq, dtype=dt)
+        blk = pkv.block
+        n_full = s // blk
+        rem = s - n_full * blk
+        new = {}
+        if n_full:
+            full_k = k[:, : n_full * blk].astype(jnp.float32)
+            full_v = v[:, : n_full * blk].astype(jnp.float32)
+            kp, ks = _kv_encode_planes(full_k, pkv.group, pkv.k)
+            vp, vs = _kv_encode_planes(full_v, pkv.group, pkv.k)
+            new.update(
+                k_pulses=pkv.k_pulses.at[:, : n_full * blk].set(kp),
+                k_scales=pkv.k_scales.at[:, : n_full * blk].set(ks),
+                v_pulses=pkv.v_pulses.at[:, : n_full * blk].set(vp),
+                v_scales=pkv.v_scales.at[:, : n_full * blk].set(vs),
+            )
+        if rem:
+            new.update(
+                tail_k=pkv.tail_k.at[:, :rem].set(k[:, n_full * blk :].astype(dt)),
+                tail_v=pkv.tail_v.at[:, :rem].set(v[:, n_full * blk :].astype(dt)),
+            )
+        return dataclasses.replace(pkv, **new) if new else pkv
+
+    # --------------------------------------------------------------- updates
+
+    def append(self, k_new: Array, v_new: Array, pos) -> "PackedKV":
+        """Write one decode step ``(b, 1, n_kv, hd)`` at position ``pos``.
+
+        The write always lands in the tail ring (cast to the *cache* dtype,
+        never the projection dtype); when it completes a block, the whole
+        block is PVQ-encoded and stored into the pulse planes.
+        """
+        blk = self.block
+        tdt = self.tail_k.dtype
+        slot = jnp.mod(pos, blk)
+        tail_k = jax.lax.dynamic_update_slice_in_dim(
+            self.tail_k, k_new.astype(tdt), slot, axis=1
+        )
+        tail_v = jax.lax.dynamic_update_slice_in_dim(
+            self.tail_v, v_new.astype(tdt), slot, axis=1
+        )
+
+        def encode(planes):
+            kp, ks, vp, vs = planes
+            start = pos + 1 - blk
+            pk, sk = _kv_encode_planes(tail_k, self.group, self.k)
+            pv, sv = _kv_encode_planes(tail_v, self.group, self.k)
+            upd = jax.lax.dynamic_update_slice_in_dim
+            return (
+                upd(kp, pk, start, axis=1),
+                upd(ks, sk, start, axis=1),
+                upd(vp, pv, start, axis=1),
+                upd(vs, sv, start, axis=1),
+            )
+
+        planes = (self.k_pulses, self.k_scales, self.v_pulses, self.v_scales)
+        kp, ks, vp, vs = jax.lax.cond(
+            jnp.mod(pos + 1, blk) == 0, encode, lambda p: p, planes
+        )
+        return dataclasses.replace(
+            self, k_pulses=kp, k_scales=ks, v_pulses=vp, v_scales=vs,
+            tail_k=tail_k, tail_v=tail_v,
+        )
+
+    # ------------------------------------------------------------ dequantize
+
+    def dense_kv(self, filled, dtype=jnp.float32) -> Tuple[Array, Array]:
+        """Exact dense view ``(k, v)`` of shape ``(b, S, n_kv, hd)``.
+
+        Positions below ``packed_end(filled)`` are dequantized from the
+        pulse planes; positions at/above it come from the tail ring via a
+        gather + where overlay (no dynamic_update_slice — its index
+        clamping would corrupt rows when the tail window runs past ``S``).
+        Rows beyond ``filled`` carry garbage and must stay length-masked.
+        """
+        blk = self.block
+        s = self.max_len
+        # filled may be scalar or per-batch (b,); broadcast against positions
+        pe = jnp.atleast_1d(self.packed_end(filled))[:, None]  # (b|1, 1)
+        posn = jnp.arange(s)[None, :]  # (1, S)
+
+        def expand(pulses, scales):
+            return pulses.astype(jnp.float32) * jnp.repeat(
+                scales, self.group, axis=-1
+            )
+
+        tidx = jnp.mod(posn - pe, blk)  # (b|1, S)
+        mask = (posn >= pe)[:, :, None, None]
+
+        def overlay(deq, tail):
+            t_full = jnp.take_along_axis(
+                tail.astype(jnp.float32), tidx[:, :, None, None], axis=1
+            )
+            return jnp.where(mask, t_full, deq)
+
+        k = overlay(expand(self.k_pulses, self.k_scales), self.tail_k)
+        v = overlay(expand(self.v_pulses, self.v_scales), self.tail_v)
+        return k.astype(dtype), v.astype(dtype)
+
+    def __repr__(self) -> str:  # keep pytree dumps readable
+        return (
+            f"PackedKV(shape={tuple(self.k_pulses.shape)}, dtype={self.dtype}, "
+            f"block={self.block}, group={self.group}, k={self.k})"
+        )
+
+
+def _packed_kv_flatten_with_keys(p: PackedKV):
+    names = ("k_pulses", "k_scales", "v_pulses", "v_scales", "tail_k", "tail_v")
+    children = tuple(
+        (jax.tree_util.DictKey(n), getattr(p, n)) for n in names
+    )
+    aux = (p.block, p.group, p.k, p.dtype)
+    return children, aux
+
+
+def _packed_kv_unflatten(aux, children):
+    block, group, k, dtype = aux
+    return PackedKV(
+        k_pulses=children[0], k_scales=children[1],
+        v_pulses=children[2], v_scales=children[3],
+        tail_k=children[4], tail_v=children[5],
+        block=block, group=group, k=k, dtype=dtype,
+    )
+
+
+jax.tree_util.register_pytree_with_keys(
+    PackedKV,
+    _packed_kv_flatten_with_keys,
+    lambda aux, xs: _packed_kv_unflatten(aux, xs),
+)
+
+
+def is_packed_kv(leaf: Any) -> bool:
+    return isinstance(leaf, PackedKV)
 
 
 # ---------------------------------------------------------------------------

@@ -30,7 +30,14 @@ from .pvq import PVQCode, pvq_decode_grouped, pvq_encode, pvq_encode_grouped
 # ActQuant: the activation-quantization contract (kernel v3, int8 x int8)
 # ---------------------------------------------------------------------------
 
-ACT_QUANT_MODES = ("per_row", "per_tensor")
+ACT_QUANT_MODES = ("per_row", "per_tile", "per_tensor")
+
+#: ``ActQuant(granularity=...)`` convenience spellings -> canonical mode
+ACT_QUANT_GRANULARITIES = {
+    "row": "per_row",
+    "tile": "per_tile",
+    "tensor": "per_tensor",
+}
 
 #: int8 symmetric range; the activation scale maps max|x| onto this bound
 ACT_QMAX = 127
@@ -50,8 +57,19 @@ class ActQuant:
         the finest granularity the kernel consumes without a per-element
         multiply.  This is the serving default: decode batches mix prompt
         magnitudes, so a shared scale would let one hot row crush the rest.
+      * ``'per_tile'``  — one scale per (row x k-group) tile, where the tile
+        width is the weight's PVQ group (``ops.pvq_matmul`` passes it in).
+        Long prefill rows whose dynamic range defeats one per-row scale
+        (e.g. a single outlier channel) keep full int8 resolution in every
+        other group.  The kernel applies ``act_scale[row, g]`` on the same
+        per-group int32 partial it already multiplies by rho — still one
+        scalar multiply per group, no per-element work.
       * ``'per_tensor'`` — one scale for the whole activation tile; cheapest,
         coarsest (ablation / per-tensor-calibrated deployments).
+
+    ``granularity`` is a convenience spelling (``'row'``/``'tile'``/
+    ``'tensor'``) that overrides ``mode`` when given:
+    ``ActQuant(granularity="tile") == ActQuant(mode="per_tile")``.
 
     The transform is exact-roundtrip-bounded: ``x = q * scale + e`` with
     ``|e| <= scale / 2`` elementwise (see :func:`quantize_activations`),
@@ -60,8 +78,18 @@ class ActQuant:
     """
 
     mode: str = "per_row"
+    granularity: Optional[str] = None
 
     def __post_init__(self) -> None:
+        if self.granularity is not None:
+            if self.granularity not in ACT_QUANT_GRANULARITIES:
+                raise ValueError(
+                    f"ActQuant granularity {self.granularity!r} not in "
+                    f"{tuple(ACT_QUANT_GRANULARITIES)}"
+                )
+            object.__setattr__(
+                self, "mode", ACT_QUANT_GRANULARITIES[self.granularity]
+            )
         if self.mode not in ACT_QUANT_MODES:
             raise ValueError(
                 f"ActQuant mode {self.mode!r} not in {ACT_QUANT_MODES}"
@@ -98,23 +126,40 @@ def act_quant_scope(aq: Optional[ActQuant]):
 
 
 def quantize_activations(
-    x: jax.Array, aq: ActQuant = ActQuant()
+    x: jax.Array, aq: ActQuant = ActQuant(), *, tile: Optional[int] = None
 ) -> Tuple[jax.Array, jax.Array]:
     """Symmetric int8 quantization of an activation tensor ``(..., k)``.
 
-    Returns ``(q int8 (..., k), scale f32 (..., 1))`` with
-    ``scale = max|row| / 127`` (per_row) or the tensor-wide equivalent
-    broadcast to every row.  Properties (asserted in tests):
+    Returns ``(q int8 (..., k), scale f32)`` where the scale shape is
+    ``(..., 1)`` for per_row/per_tensor (``scale = max|row| / 127`` or the
+    tensor-wide equivalent broadcast to every row) and ``(..., k // tile)``
+    for per_tile (one scale per contiguous ``tile``-wide slice of the last
+    axis; ``tile`` must divide ``k`` and is normally the weight's PVQ
+    group, supplied by the kernel dispatch).  Properties (asserted in
+    tests):
 
-    * exact bound: ``|x - q * scale| <= scale / 2`` elementwise
-      (round-to-nearest of ``x / scale``; no clipping error — ``|x| <=
-      127 * scale`` by construction, so ``|round(x/scale)| <= 127``);
-    * all-zero rows (e.g. MoE capacity padding) get ``scale = 0`` and
-      ``q = 0`` — they dequantize to exact zeros instead of NaNs.
+    * exact bound: ``|x - q * s| <= s / 2`` elementwise, ``s`` being the
+      scale covering that element (round-to-nearest of ``x / s``; no
+      clipping error — ``|x| <= 127 * s`` by construction, so
+      ``|round(x/s)| <= 127``);
+    * all-zero rows/tiles (e.g. MoE capacity padding) get ``scale = 0``
+      and ``q = 0`` — they dequantize to exact zeros instead of NaNs.
     """
     xf = x.astype(jnp.float32)
     if aq.mode == "per_row":
         amax = jnp.max(jnp.abs(xf), axis=-1, keepdims=True)
+    elif aq.mode == "per_tile":
+        if tile is None:
+            raise ValueError("per_tile quantization needs the tile width")
+        k = xf.shape[-1]
+        if k % tile:
+            raise ValueError(f"tile {tile} does not divide k={k}")
+        xt = xf.reshape(xf.shape[:-1] + (k // tile, tile))
+        amax_t = jnp.max(jnp.abs(xt), axis=-1)  # (..., k//tile)
+        scale = amax_t / ACT_QMAX
+        inv = jnp.where(scale > 0, 1.0 / jnp.maximum(scale, 1e-30), 0.0)
+        q = jnp.clip(jnp.round(xt * inv[..., None]), -ACT_QMAX, ACT_QMAX)
+        return q.reshape(xf.shape).astype(jnp.int8), scale.astype(jnp.float32)
     else:  # per_tensor
         amax = jnp.broadcast_to(
             jnp.max(jnp.abs(xf)), xf.shape[:-1] + (1,)
@@ -126,31 +171,115 @@ def quantize_activations(
 
 
 def act_matmul_error_bound(
-    act_scale: jax.Array,  # (m, 1) f32 per-row activation scales
+    act_scale: jax.Array,  # (m, 1) per-row | (m, k//group) per-tile f32 scales
     w_pulses: jax.Array,  # (k, n) int8 PVQ pulses
     w_scales: jax.Array,  # (k // group, n) f32 per-group rho
     group: int,
 ) -> jax.Array:
     """Exact worst-case |int8-act output - f32-act output| per logit, (m, n).
 
-    The quantization error is elementwise bounded by ``act_scale / 2``, so
-    for output column n:
+    The quantization error is elementwise bounded by its covering scale / 2,
+    so for output column n:
 
-        |sum_i e_i * W_in|  <=  (act_scale/2) * sum_g |rho_gn| * L1(pulses_gn)
+        |sum_i e_i * W_in|  <=  0.5 * sum_g a_mg * |rho_gn| * L1(pulses_gn)
 
-    where ``L1(pulses_gn) = K`` for unclamped codes and <= K after the
-    K > 127 int8 clamp — the bound is computed from the pulses actually
-    stored, so it is valid in the clamped regime too.  Zero ``act_scale``
-    rows (all-pad) contribute a zero bound: their outputs are exactly 0 on
-    both paths.
+    where ``a_mg`` is the activation scale covering group g of row m — the
+    shared per-row scale in per_row mode, or column g of the per-tile scale
+    matrix when the activation was quantized with ``tile == group``.
+    ``L1(pulses_gn) = K`` for unclamped codes and <= K after the K > 127
+    int8 clamp — the bound is computed from the pulses actually stored, so
+    it is valid in the clamped regime too.  Zero ``act_scale`` entries
+    (all-pad rows/tiles) contribute a zero bound: their outputs are exactly
+    0 on both paths.
     """
     k, n = w_pulses.shape
     l1 = jnp.sum(
         jnp.abs(w_pulses.astype(jnp.float32)).reshape(k // group, group, n),
         axis=1,
     )  # (k//group, n)
-    per_col = jnp.sum(jnp.abs(w_scales.astype(jnp.float32)) * l1, axis=0)  # (n,)
-    return 0.5 * act_scale.astype(jnp.float32) * per_col[None, :]
+    weighted = jnp.abs(w_scales.astype(jnp.float32)) * l1  # (k//group, n)
+    a = act_scale.astype(jnp.float32)
+    if a.shape[-1] == 1:  # per_row / per_tensor: one scale covers every group
+        return 0.5 * a * jnp.sum(weighted, axis=0)[None, :]
+    if a.shape[-1] != k // group:
+        raise ValueError(
+            f"per-tile act_scale has {a.shape[-1]} groups, weight has {k // group}"
+        )
+    return 0.5 * (a @ weighted)
+
+
+# ---------------------------------------------------------------------------
+# KVQuant: the PVQ-compressed KV-cache contract (kernel v4, attention decode)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class KVQuant:
+    """PVQ compression contract for the attention KV cache.
+
+    One static config flows from ``launch/serve.py --kv-pvq`` through
+    ``nn.attention.init_kv_cache`` into ``core.packed.PackedKV`` and the
+    kernel-v4 attention dispatch.  K and V rows are encoded per
+    (token, kv-head, sub-head group): ``head_dim`` is split into
+    ``head_dim // group`` PVQ groups, each stored as int8 pulses on
+    P(group, k) plus one f32 rho — ``head_dim + 4 * head_dim // group``
+    bytes per head per token instead of ``4 * head_dim`` (f32) or
+    ``2 * head_dim`` (bf16).
+
+    block: tokens per encoded cache block.  ``attention_decode`` appends
+      into a small f32 tail ring of this length and encodes a block the
+      moment it fills; decode reads packed pulses for the completed blocks
+      and exact f32 for the in-flight partial block.
+    group: sub-head PVQ group width (fitted down with the power-of-two
+      chain when it does not divide ``head_dim``).
+    k: pulse budget per group.  The default 127 saturates the int8 pulse
+      plane (pulses cost 1 byte/element regardless of K, so there is no
+      storage reason to go lower); smaller K trades fidelity for entropy-
+      coded artifact size only.
+    """
+
+    block: int = 32
+    group: int = 32
+    k: int = 127
+
+    def __post_init__(self) -> None:
+        if self.block < 1:
+            raise ValueError(f"KVQuant block must be >= 1, got {self.block}")
+        if self.group < 1:
+            raise ValueError(f"KVQuant group must be >= 1, got {self.group}")
+        if not (1 <= self.k <= 127):
+            raise ValueError(
+                f"KVQuant k must be in [1, 127] (int8 pulse plane), got {self.k}"
+            )
+
+
+#: process default consumed by ``nn.attention.init_kv_cache`` /
+#: ``attention_prefill_cache`` when no explicit config is passed
+#: (``launch/serve.py --kv-pvq`` sets it once; every layer's cache comes
+#: out packed without threading a flag through the model signatures).
+_DEFAULT_KV_QUANT: Optional[KVQuant] = None
+
+
+def set_default_kv_quant(kvq: Optional[KVQuant]) -> Optional[KVQuant]:
+    """Set the process-wide default KVQuant; returns the previous value."""
+    global _DEFAULT_KV_QUANT
+    prev = _DEFAULT_KV_QUANT
+    _DEFAULT_KV_QUANT = kvq
+    return prev
+
+
+def default_kv_quant() -> Optional[KVQuant]:
+    return _DEFAULT_KV_QUANT
+
+
+@contextlib.contextmanager
+def kv_quant_scope(kvq: Optional[KVQuant]):
+    """Scoped override of the process default (A/B comparisons, tests)."""
+    prev = set_default_kv_quant(kvq)
+    try:
+        yield kvq
+    finally:
+        set_default_kv_quant(prev)
 
 
 @dataclasses.dataclass(frozen=True)

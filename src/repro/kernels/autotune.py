@@ -21,6 +21,10 @@ Cache
   time the int8 x int8 kernel v3 body (``launch/serve.py --tune --act-int8``
   pre-tunes them), float keys the f32-activation body.
 * matmul value: ``{"bm":…, "bn":…, "bk":…, "us":…, "candidates":…}``
+* attention key (kernel v4 decode): ``"attn m x hd x s : g<group> : <dtype>
+  : <backend> : kv<N> : v3"`` with value ``{"bs":…, "us":…, "candidates":…}``
+  — the v3->v4 ``KERNEL_VERSION`` bump means every entry tuned against the
+  pre-attention kernel body misses for v4 dispatch.
 * encoder key: ``"enc g x n : k<K> : <dtype> : <backend> : ekv<N> : v2"``
   with ``ekv<N>`` = ``pvq_encode.ENCODE_KERNEL_VERSION``; value
   ``{"bg":…, "delta_max":…, "us":…, "candidates":…}``.  ``delta_max``
@@ -52,7 +56,13 @@ import jax
 import jax.numpy as jnp
 
 from .pvq_encode import ENCODE_KERNEL_VERSION, default_sort_impl, pvq_encode_batch
-from .pvq_matmul import KERNEL_VERSION, normalize_tiles, pvq_matmul, pvq_matmul_q
+from .pvq_matmul import (
+    KERNEL_VERSION,
+    normalize_tiles,
+    pvq_attn_q,
+    pvq_matmul,
+    pvq_matmul_q,
+)
 
 # v2: keys carry the kernel-body version tag (ROADMAP "tuned-tile
 # invalidation") — entries tuned against an older kernel body miss.
@@ -390,6 +400,125 @@ def get_encode_params(
         e = autotune_encode(g, n, k_pulses, dtype=dtype, interpret=interpret)
         return (e["bg"], e["delta_max"])
     return (min(ENCODE_DEFAULTS[0], g), ENCODE_DEFAULTS[1])
+
+
+# ---------------------------------------------------------------------------
+# attention decode autotune: pvq_attn_q's sequence-block size (kernel v4)
+# ---------------------------------------------------------------------------
+
+#: bs sweeps lane-aligned KV block widths; 128 is the MXU-native floor
+ATTN_BS_CANDIDATES = (128, 256, 512)
+
+
+def attn_cache_key(m: int, hd: int, s: int, group: int, dtype, backend: str) -> str:
+    """Key for the kernel-v4 attention decode contraction.  Carries
+    ``kv{KERNEL_VERSION}`` exactly like the matmul keys, so the v3->v4 bump
+    structurally invalidates every pre-v4 entry — a kv3-tagged tile can never
+    be served for v4 dispatch (the kv3 suffix simply never matches)."""
+    return (
+        f"attn{m}x{hd}x{s}:g{group}:{jnp.dtype(dtype).name}:{backend}"
+        f":kv{KERNEL_VERSION}:{_SCHEMA}"
+    )
+
+
+def heuristic_attn_bs(s: int) -> int:
+    """Lane-aligned default KV block: one 128 block, or the whole (short)
+    padded sequence when it fits a single grid step."""
+    return 128 if s >= 128 else max(s, 8)
+
+
+def attn_candidates(s: int, max_candidates: int) -> Tuple[int, ...]:
+    """bs grid clamped to the padded sequence; heuristic first (a truncated
+    search can never be worse than no search)."""
+    cands: list[int] = [heuristic_attn_bs(s)]
+    for bs in ATTN_BS_CANDIDATES:
+        if bs <= max(s, 128) and bs not in cands:
+            cands.append(bs)
+    return tuple(cands[:max_candidates])
+
+
+def autotune_attn(
+    m: int,
+    hd: int,
+    s: int,
+    *,
+    group: int = 32,
+    dtype=jnp.int8,
+    reps: int = 3,
+    interpret: Optional[bool] = None,
+    max_candidates: Optional[int] = None,
+) -> dict:
+    """Search the KV-block grid for a (m, hd, s) decode-attention shape;
+    persist + return ``{"bs","us","candidates"}``.  ``m`` is query rows per
+    kv head (q_len * group_size), ``s`` the packed cache extent."""
+    backend = jax.default_backend()
+    if interpret is None:
+        interpret = backend != "tpu"
+    key = attn_cache_key(m, hd, s, group, dtype, backend)
+    hit = _load().get(key)
+    if hit is not None:
+        return hit
+    if max_candidates is None:
+        max_candidates = (
+            MAX_CANDIDATES_INTERPRET if interpret else MAX_CANDIDATES_COMPILED
+        )
+    cands = attn_candidates(s, max_candidates)
+
+    kq, kk, kv = jax.random.split(jax.random.PRNGKey(0), 3)
+    bh = 2
+    ng = max(hd // group, 1)
+    q = jax.random.randint(kq, (bh, m, hd), -127, 128, jnp.int8)
+    a = jnp.full((bh, m, 1), 0.01, jnp.float32)
+    kp = jax.random.randint(kk, (bh, s, hd), -5, 6, jnp.int8)
+    vp = jax.random.randint(kv, (bh, s, hd), -5, 6, jnp.int8)
+    ks = jnp.full((bh, s, ng), 0.05, jnp.float32)
+    vs = jnp.full((bh, s, ng), 0.05, jnp.float32)
+    kv_len = jnp.full((bh,), s, jnp.int32)
+
+    best: Optional[int] = None
+    best_t = float("inf")
+    for bs in cands:
+        def call():
+            return pvq_attn_q(
+                q, a, kp, ks, vp, vs, kv_len,
+                group=min(group, hd), sm_scale=1.0, bs=bs, interpret=interpret,
+            )
+        call()[0].block_until_ready()  # warmup
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            call()[0].block_until_ready()
+        dt = (time.perf_counter() - t0) / reps
+        if dt < best_t:
+            best, best_t = bs, dt
+    assert best is not None
+    entry = {"bs": best, "us": round(1e6 * best_t, 2), "candidates": len(cands)}
+    _persist(key, entry)
+    return entry
+
+
+def get_attn_tiles(
+    m: int,
+    hd: int,
+    s: int,
+    *,
+    group: int = 32,
+    dtype=jnp.int8,
+    search: Optional[bool] = None,
+    interpret: Optional[bool] = None,
+) -> int:
+    """KV block-size dispatch for ``ops.pvq_attn_decode``: cache hit >
+    search (``REPRO_PVQ_AUTOTUNE=1``) > heuristic, mirroring ``get_tiles``."""
+    backend = jax.default_backend()
+    hit = _load().get(attn_cache_key(m, hd, s, group, dtype, backend))
+    if hit is not None:
+        return int(hit["bs"])
+    if search is None:
+        search = os.environ.get("REPRO_PVQ_AUTOTUNE", "") not in ("", "0", "false")
+    if search:
+        return int(
+            autotune_attn(m, hd, s, group=group, dtype=dtype, interpret=interpret)["bs"]
+        )
+    return heuristic_attn_bs(s)
 
 
 def get_tiles(

@@ -29,6 +29,7 @@ import jax.numpy as jnp
 from . import autotune as autotune_lib
 from . import ref as ref_lib
 from .pvq_encode import pvq_encode_batch as _encode_kernel
+from .pvq_matmul import pvq_attn_q as _attn_kernel_q
 from .pvq_matmul import pvq_matmul as _matmul_kernel
 from .pvq_matmul import pvq_matmul_batched as _matmul_kernel_batched
 from .pvq_matmul import pvq_matmul_q as _matmul_kernel_q
@@ -39,11 +40,15 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-def _quantize_x(x, act_quant, act_scale):
+def _quantize_x(x, act_quant, act_scale, group=None):
     """Resolve the ActQuant contract for a matmul entry point.
 
     Returns ``(x, act_scale)`` where either both are None-quantized (f32
-    path) or ``x`` is int8 with ``(..., 1)`` f32 row scales (v3 path).
+    path) or ``x`` is int8 with f32 scales (v3 path): ``(..., 1)`` per-row,
+    or ``(..., k//group)`` per-tile when ``act_quant.mode == "per_tile"`` —
+    the tile width is the *weight* PVQ group, so each activation scale lines
+    up with exactly one rho group in the kernel.  Per-tile therefore needs
+    ``x`` already aligned to a group multiple (callers pad to k_pad first).
     ``act_scale is not None`` means the caller already quantized (the MoE
     dispatch buffer is quantized ONCE and its scales reused across the
     up/gate expert matmuls) — ``x`` must then be int8 already.
@@ -58,6 +63,10 @@ def _quantize_x(x, act_quant, act_scale):
         return x, None
     from repro.core.quantize import quantize_activations
 
+    if act_quant.mode == "per_tile":
+        if group is None:
+            raise ValueError("per_tile activation quantization needs the weight group")
+        return quantize_activations(x, act_quant, tile=group)
     return quantize_activations(x, act_quant)
 
 
@@ -96,7 +105,7 @@ def pvq_matmul(
     if interpret is None:
         interpret = not _on_tpu()
     out_dtype = x.dtype if jnp.issubdtype(x.dtype, jnp.floating) else jnp.float32
-    x, act_scale = _quantize_x(x, act_quant, act_scale)
+    x, act_scale = _quantize_x(x, act_quant, act_scale, group=group)
     if not tiles:
         m, k = x.shape
         n = w_pulses.shape[1]
@@ -230,9 +239,11 @@ def packed_matmul_stacked(
             f"logical d_in {d_in} nor its padded k_pad {k_pad}"
         )
     out_dtype = x.dtype if jnp.issubdtype(x.dtype, jnp.floating) else jnp.float32
-    x, act_scale = _quantize_x(x, act_quant, act_scale)
+    # pad BEFORE quantizing so per-tile scale groups align with the weight
+    # rho groups of the padded bank (zero lanes quantize to int8 zeros)
     if x.shape[-1] != k_pad:
         x = jnp.pad(x, ((0, 0), (0, 0), (0, k_pad - x.shape[-1])))
+    x, act_scale = _quantize_x(x, act_quant, act_scale, group=packed.group)
     bm, bn, bk = autotune_lib.get_tiles(
         x.shape[1], k_pad, n, group=packed.group, dtype=x.dtype,
         search=tune, interpret=interpret,
@@ -262,6 +273,91 @@ def packed_matmul_stacked(
         activation=activation,
         interpret=interpret,
     )
+
+
+# ---------------------------------------------------------------------------
+# attention decode over a packed KV cache (kernel v4)
+# ---------------------------------------------------------------------------
+
+
+def pvq_attn_decode(
+    q,
+    kv,
+    kv_len,
+    *,
+    sm_scale: float,
+    interpret: bool | None = None,
+    tune: bool | None = None,
+    bs: int | None = None,
+):
+    """Flash decode contraction of queries against a ``PackedKV``'s packed
+    planes (kernel v4, ``pvq_attn_q``).
+
+    ``q``: (b, q_len, n_heads, hd) float queries; ``kv``: a
+    ``repro.core.packed.PackedKV``; ``kv_len``: (b,) int32 count of *packed*
+    positions valid per batch row (the caller clamps to
+    ``min(packed_end(filled), length)`` — the f32 tail block is the caller's
+    exact side leg, merged via logsumexp).
+
+    Queries are quantized to per-row symmetric int8 here; the kernel
+    contracts int8 q x int8 K pulses and int8 probs x int8 V pulses on the
+    MXU with int32 accumulation, applying each rho once per group.  The
+    grouped-query layout is preserved end to end: the packed planes stay at
+    ``n_kv`` heads and the ``n_heads // n_kv`` query group rides the kernel's
+    row axis — the cache is never expanded to ``n_heads``.
+
+    Returns UNNORMALIZED ``(acc, m, l)`` shaped ``(b, q_len, n_kv, gpr, hd)``
+    / ``(..., 1)`` / ``(..., 1)`` for the caller's online-softmax merge:
+    ``out = (acc + exp(m_t - M) * acc_tail) / (l * exp(m - M) + ...)`` — see
+    ``nn.attention``.  Rows with ``kv_len == 0`` come back with ``l == 0``
+    (tail-only merge stays exact).
+    """
+    from repro.core.quantize import ActQuant, quantize_activations
+
+    if interpret is None:
+        interpret = not _on_tpu()
+    b, q_len, n_heads, hd = q.shape
+    n_kv = kv.k_pulses.shape[2]
+    if n_heads % n_kv:
+        raise ValueError(f"n_heads {n_heads} not a multiple of n_kv {n_kv}")
+    gpr = n_heads // n_kv
+    m = q_len * gpr
+    s = kv.k_pulses.shape[1]
+
+    # (b, q_len, n_kv, gpr, hd) -> (b*n_kv, q_len*gpr, hd): each kernel row
+    # block holds all query rows sharing one kv head
+    qg = q.reshape(b, q_len, n_kv, gpr, hd).transpose(0, 2, 1, 3, 4)
+    qg = qg.reshape(b * n_kv, m, hd)
+    q_i8, a_scale = quantize_activations(qg, ActQuant(mode="per_row"))
+
+    def to_bh(plane):  # (b, S, n_kv, X) -> (b*n_kv, S, X)
+        return plane.transpose(0, 2, 1, 3).reshape(b * n_kv, s, plane.shape[-1])
+
+    kv_len_bh = jnp.repeat(jnp.asarray(kv_len, jnp.int32), n_kv)
+    if bs is None:
+        bs = autotune_lib.get_attn_tiles(
+            m, hd, s, group=kv.group, dtype=jnp.int8,
+            search=tune, interpret=interpret,
+        )
+    acc, m_run, l_run = _attn_kernel_q(
+        q_i8,
+        a_scale,
+        to_bh(kv.k_pulses),
+        to_bh(kv.k_scales),
+        to_bh(kv.v_pulses),
+        to_bh(kv.v_scales),
+        kv_len_bh,
+        group=kv.group,
+        sm_scale=sm_scale,
+        bs=bs,
+        interpret=interpret,
+    )
+
+    def from_bh(x):  # (b*n_kv, m, X) -> (b, q_len, n_kv, gpr, X)
+        x = x.reshape(b, n_kv, q_len, gpr, x.shape[-1])
+        return x.transpose(0, 2, 1, 3, 4)
+
+    return from_bh(acc), from_bh(m_run), from_bh(l_run)
 
 
 # ---------------------------------------------------------------------------

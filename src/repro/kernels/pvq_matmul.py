@@ -60,7 +60,7 @@ _CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerPar
 
 #: bumped whenever the kernel body changes materially; feeds the autotune
 #: cache key so stale tile timings from an older body never win dispatch.
-KERNEL_VERSION = 3  # v3: int8 x int8 quantized-activation body, int32 MXU accum
+KERNEL_VERSION = 4  # v4: pvq_attn_q flash decode + per-tile act scales (v3: int8 x int8 matmul body)
 
 ACTIVATIONS = ("none", "relu", "relu2", "gelu", "silu")
 
@@ -293,11 +293,17 @@ def pvq_matmul_batched(
 # ---------------------------------------------------------------------------
 
 
-def _contract_int8_q(x, w, s, group: int) -> jax.Array:
+def _contract_int8_q(x, w, s, group: int, a_tile=None) -> jax.Array:
     """Fully integer tile contraction: per group-slice, one int8 x int8 dot
     with ``preferred_element_type=int32`` (the MXU accumulates in int32),
     then the group's rho row multiplies the int32 partial once — ONE
     multiply per group, now with integer feeds on BOTH operands.
+
+    ``a_tile`` (bm, bk // group), if given, carries per-tile activation
+    scales (``ActQuant(granularity="tile")``): group g's partial is scaled
+    by ``rho_g * a_tile[:, g]`` — still one rho multiply plus one act-scale
+    multiply per group partial, and the epilogue then skips its per-row
+    multiply.
 
     Returns the f32 (bm, bn) partial sum for this (bk, bn) tile.  Beyond
     ``_MAX_UNROLL_GROUPS`` the per-group dots run as one batched
@@ -314,7 +320,10 @@ def _contract_int8_q(x, w, s, group: int) -> jax.Array:
             xg, wg, (((2,), (1,)), ((0,), (0,))),
             preferred_element_type=jnp.int32,
         )  # (G, bm, bn) int32
-        return jnp.sum(part.astype(jnp.float32) * s[:, None, :], axis=0)
+        part = part.astype(jnp.float32) * s[:, None, :]
+        if a_tile is not None:
+            part = part * jnp.swapaxes(a_tile, 0, 1)[:, :, None]  # (G, bm, 1)
+        return jnp.sum(part, axis=0)
     acc = jnp.zeros((bm, bn), jnp.float32)
     for g in range(n_groups):
         xg = x[:, g * group : (g + 1) * group]  # (bm, group) int8
@@ -323,14 +332,18 @@ def _contract_int8_q(x, w, s, group: int) -> jax.Array:
             xg, wg, (((1,), (0,)), ((), ())),
             preferred_element_type=jnp.int32,
         )
-        acc = acc + part.astype(jnp.float32) * s[g, :][None, :]
+        part = part.astype(jnp.float32) * s[g, :][None, :]
+        if a_tile is not None:
+            part = part * a_tile[:, g : g + 1]
+        acc = acc + part
     return acc
 
 
 def _q_epilogue(acc, a, bias, activation: str) -> jax.Array:
     """v3 epilogue: the per-row activation scale multiplies the accumulated
-    (rho-weighted) integer sums ONCE per output element, then bias + act."""
-    y = acc * a  # (bm, bn) * (bm, 1)
+    (rho-weighted) integer sums ONCE per output element, then bias + act.
+    ``a=None`` when the scale was already applied per tile in the body."""
+    y = acc if a is None else acc * a  # (bm, bn) * (bm, 1)
     if bias is not None:
         y = y + bias.astype(jnp.float32)
     return _apply_activation(y, activation)
@@ -338,36 +351,43 @@ def _q_epilogue(acc, a, bias, activation: str) -> jax.Array:
 
 def _kernel_q(
     x_ref, w_ref, s_ref, a_ref, o_ref, acc_ref, *, group: int, n_k: int,
-    activation: str,
+    activation: str, per_tile: bool = False,
 ):
     @pl.when(pl.program_id(2) == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    # x (bm, bk) int8 / w (bk, bn) int8 / s (bk//group, bn) f32 / a (bm, 1) f32
-    acc_ref[...] += _contract_int8_q(x_ref[...], w_ref[...], s_ref[...], group)
+    # x (bm, bk) int8 / w (bk, bn) int8 / s (bk//group, bn) f32
+    # a (bm, 1) f32 per-row | (bm, bk//group) f32 per-tile
+    acc_ref[...] += _contract_int8_q(
+        x_ref[...], w_ref[...], s_ref[...], group,
+        a_tile=a_ref[...] if per_tile else None,
+    )
 
     @pl.when(pl.program_id(2) == n_k - 1)
     def _done():
         o_ref[...] = _q_epilogue(
-            acc_ref[...], a_ref[...], None, activation
+            acc_ref[...], None if per_tile else a_ref[...], None, activation
         ).astype(o_ref.dtype)
 
 
 def _kernel_q_bias(
     x_ref, w_ref, s_ref, a_ref, b_ref, o_ref, acc_ref, *, group: int, n_k: int,
-    activation: str,
+    activation: str, per_tile: bool = False,
 ):
     @pl.when(pl.program_id(2) == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    acc_ref[...] += _contract_int8_q(x_ref[...], w_ref[...], s_ref[...], group)
+    acc_ref[...] += _contract_int8_q(
+        x_ref[...], w_ref[...], s_ref[...], group,
+        a_tile=a_ref[...] if per_tile else None,
+    )
 
     @pl.when(pl.program_id(2) == n_k - 1)
     def _done():
         o_ref[...] = _q_epilogue(
-            acc_ref[...], a_ref[...], b_ref[...], activation
+            acc_ref[...], None if per_tile else a_ref[...], b_ref[...], activation
         ).astype(o_ref.dtype)
 
 
@@ -451,7 +471,7 @@ def pvq_matmul_q(
     x_q: jax.Array,  # (m, k) int8 quantized activations
     w_pulses: jax.Array,  # (k, n) int8
     scales: jax.Array,  # (k // group, n) f32
-    act_scale: jax.Array,  # (m, 1) or (1, 1) f32 per-row activation scales
+    act_scale: jax.Array,  # (m, 1) / (1, 1) per-row | (m, k//group) per-tile f32
     bias: jax.Array | None = None,  # (n,) optional fused epilogue bias
     *,
     group: int = 128,
@@ -468,10 +488,14 @@ def pvq_matmul_q(
 
     Both MXU operands are int8 and the per-group dot accumulates in int32
     (``preferred_element_type=int32``); rho multiplies each int32 group
-    partial once, the per-row ``act_scale`` multiplies the final accumulator
-    once in the epilogue.  ``dma_streaming=None`` auto-selects the
-    hand-rolled double-buffered HBM->VMEM pulse path for big tiles and the
-    automatic k-grid pipeline otherwise; True/False force it.
+    partial once.  A ``(m, 1)`` per-row ``act_scale`` multiplies the final
+    accumulator once in the epilogue; a ``(m, k // group)`` per-tile scale
+    (``ActQuant(granularity="tile")`` with the tile = the weight group)
+    instead multiplies each group's int32 partial alongside rho — one extra
+    scalar multiply per group, no per-element work.  ``dma_streaming=None``
+    auto-selects the hand-rolled double-buffered HBM->VMEM pulse path for
+    big tiles and the automatic k-grid pipeline otherwise (per-tile scales
+    always use the k-grid pipeline); True/False force it.
     """
     m, k = x_q.shape
     k2, n = w_pulses.shape
@@ -480,7 +504,8 @@ def pvq_matmul_q(
     assert x_q.dtype == jnp.int8, f"x_q must be pre-quantized int8, got {x_q.dtype}"
     assert w_pulses.dtype == jnp.int8, w_pulses.dtype
     assert scales.shape == (k // group, n), (scales.shape, (k // group, n))
-    assert act_scale.shape in ((m, 1), (1, 1)), (act_scale.shape, m)
+    per_tile = act_scale.shape == (m, k // group) and k > group
+    assert per_tile or act_scale.shape in ((m, 1), (1, 1)), (act_scale.shape, m)
     assert activation in ACTIVATIONS, f"activation {activation!r} not in {ACTIVATIONS}"
     if bias is not None:
         assert bias.shape == (n,), (bias.shape, n)
@@ -490,15 +515,24 @@ def pvq_matmul_q(
     xp = _pad_to(_pad_to(x_q, 0, bm), 1, bk)
     wp = _pad_to(_pad_to(w_pulses, 0, bk), 1, bn)
     sp = _pad_to(_pad_to(scales, 0, bk // group), 1, bn)
-    ap = _pad_to(
-        jnp.broadcast_to(act_scale.astype(jnp.float32), (m, 1)), 0, bm
-    )
+    if per_tile:
+        # padded k-groups carry zero pulses; their (zero-padded) scales are
+        # inert, so the tile grid sees a consistent (mp, kp//group) matrix
+        ap = _pad_to(
+            _pad_to(act_scale.astype(jnp.float32), 0, bm), 1, bk // group
+        )
+    else:
+        ap = _pad_to(
+            jnp.broadcast_to(act_scale.astype(jnp.float32), (m, 1)), 0, bm
+        )
     mp, kp = xp.shape
     np_ = wp.shape[1]
     n_k = kp // bk
 
     if dma_streaming is None:
         dma_streaming = _dma_streaming_wanted(mp, kp, np_, bm, bn, bk)
+    if per_tile:
+        dma_streaming = False  # the DMA body only threads the per-row scale
     if dma_streaming and kp // bk >= 2:
         kernel = functools.partial(
             _kernel_q_dma, group=group, bk=bk, n_chunks=n_k,
@@ -541,16 +575,20 @@ def pvq_matmul_q(
         pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
         pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
         pl.BlockSpec((bk // group, bn), lambda i, j, kk: (kk, j)),
-        pl.BlockSpec((bm, 1), lambda i, j, kk: (i, 0)),
+        pl.BlockSpec((bm, bk // group), lambda i, j, kk: (i, kk))
+        if per_tile
+        else pl.BlockSpec((bm, 1), lambda i, j, kk: (i, 0)),
     ]
     operands = [xp, wp, sp, ap]
     if bias is None:
         kernel = functools.partial(
-            _kernel_q, group=group, n_k=n_k, activation=activation
+            _kernel_q, group=group, n_k=n_k, activation=activation,
+            per_tile=per_tile,
         )
     else:
         kernel = functools.partial(
-            _kernel_q_bias, group=group, n_k=n_k, activation=activation
+            _kernel_q_bias, group=group, n_k=n_k, activation=activation,
+            per_tile=per_tile,
         )
         in_specs.append(pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)))
         operands.append(_pad_to(bias.astype(jnp.float32)[None, :], 1, bn))
@@ -616,3 +654,196 @@ def pvq_matmul_q_batched(
 
     _, out = jax.lax.scan(body, None, (x_q, w_pulses, scales, act_scale))
     return out
+
+
+# ---------------------------------------------------------------------------
+# Kernel v4: pvq_attn_q — flash attention decode over the packed KV cache
+# ---------------------------------------------------------------------------
+
+#: finite mask value (matches nn.attention.NEG_INF).  Finite on purpose:
+#: a fully-masked seq block merges out with weight exp(-1e30 - m) == 0
+#: instead of the NaNs that -inf arithmetic would produce.
+_ATTN_NEG_INF = -1e30
+
+
+def _attn_kernel_q(
+    q_ref,  # (1, m, hd) int8 quantized queries (m = heads per kv head)
+    a_ref,  # (1, m, 1) f32 per-row query scales
+    kp_ref,  # (1, bs, hd) int8 packed K pulses
+    ks_ref,  # (1, bs, ng) f32 per-group K rho
+    vp_ref,  # (1, bs, hd) int8 packed V pulses
+    vs_ref,  # (1, bs, ng) f32 per-group V rho
+    len_ref,  # (1, 1) int32 valid kv length for this (batch, kv-head)
+    o_ref,  # (1, m, hd) f32 out: UNNORMALIZED output accumulator
+    mo_ref,  # (1, m, 1) f32 out: running row max
+    lo_ref,  # (1, m, 1) f32 out: running softmax denominator
+    acc_ref, m_ref, l_ref,  # scratch: (m, hd) f32, (m, 1) f32, (m, 1) f32
+    *, group: int, n_s: int, sm_scale: float,
+):
+    """One (batch x kv-head, seq-block) step of the packed flash decode.
+
+    Scores: per sub-head group, int8 query x int8 K-pulse ``dot_general``
+    with int32 MXU accumulation; the group's K rho multiplies the int32
+    partial once, the per-row query scale and softmax scale apply once per
+    score.  Online softmax keeps running (max, denom) per row.  Output: V's
+    rho folds into the probabilities per group (one multiply per group),
+    the scaled probs requantize to int8 on a per-row dynamic scale, and a
+    second int8 x int8 / int32 dot accumulates the output.  The caller
+    merges (acc, m, l) with the exact-f32 tail block via logsumexp.
+    """
+    si = pl.program_id(1)
+
+    @pl.when(si == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, _ATTN_NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    bs, hd = kp_ref.shape[1], kp_ref.shape[2]
+    ng = hd // group
+    kv_len = len_ref[0, 0]
+    m_rows = q_ref.shape[1]
+    cols = si * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
+    valid = cols < kv_len  # (1, bs)
+
+    q = q_ref[0]  # (m, hd) int8
+    scores = jnp.zeros((m_rows, bs), jnp.float32)
+    for g in range(ng):
+        qg = q[:, g * group : (g + 1) * group]  # (m, group) int8
+        kg = kp_ref[0, :, g * group : (g + 1) * group]  # (bs, group) int8
+        part = jax.lax.dot_general(
+            qg, kg, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.int32,
+        )  # (m, bs) int32
+        scores = scores + part.astype(jnp.float32) * ks_ref[0, :, g][None, :]
+    scores = scores * a_ref[0] * sm_scale
+    scores = jnp.where(valid, scores, _ATTN_NEG_INF)
+
+    m_prev = m_ref[...]  # (m, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(scores, axis=-1, keepdims=True))
+    # NEG_INF is finite: exp(scores - m_new) on an all-masked block would be
+    # exp(0) = 1 — zero masked probabilities through the mask, never the value
+    p = jnp.where(valid, jnp.exp(scores - m_new), 0.0)  # (m, bs)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    m_ref[...] = m_new
+
+    outs = []
+    for g in range(ng):
+        pg = p * vs_ref[0, :, g][None, :]  # V rho folded: ONE multiply per group
+        pmax = jnp.max(jnp.abs(pg), axis=-1, keepdims=True)
+        s_p = pmax / 127.0
+        inv = jnp.where(s_p > 0, 1.0 / jnp.maximum(s_p, 1e-30), 0.0)
+        pq = jnp.clip(jnp.round(pg * inv), -127, 127).astype(jnp.int8)
+        vg = vp_ref[0, :, g * group : (g + 1) * group]  # (bs, group) int8
+        out_g = jax.lax.dot_general(
+            pq, vg, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32,
+        )  # (m, group) int32
+        outs.append(out_g.astype(jnp.float32) * s_p)
+    acc_ref[...] = acc_ref[...] * alpha + (
+        outs[0] if ng == 1 else jnp.concatenate(outs, axis=-1)
+    )
+
+    @pl.when(si == n_s - 1)
+    def _done():
+        o_ref[0] = acc_ref[...]
+        mo_ref[0] = m_ref[...]
+        lo_ref[0] = l_ref[...]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("group", "sm_scale", "bs", "interpret")
+)
+def pvq_attn_q(
+    q_i8: jax.Array,  # (BH, m, hd) int8 — BH = batch * n_kv, m = q heads / kv head
+    act_scale: jax.Array,  # (BH, m, 1) f32 per-row query scales
+    k_pulses: jax.Array,  # (BH, S, hd) int8
+    k_scales: jax.Array,  # (BH, S, ng) f32
+    v_pulses: jax.Array,  # (BH, S, hd) int8
+    v_scales: jax.Array,  # (BH, S, ng) f32
+    kv_len: jax.Array,  # (BH,) int32 — packed positions valid per (batch, kv-head)
+    *,
+    group: int,
+    sm_scale: float,
+    bs: int = 128,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Kernel v4: packed-KV flash attention decode contraction.
+
+    Grid ``(BH, S/bs)``: each (batch x kv-head) row walks its sequence in
+    ``bs``-token blocks with an online softmax.  Returns the UNNORMALIZED
+    triple ``(acc (BH, m, hd) f32, m (BH, m, 1), l (BH, m, 1))`` so the
+    caller can logsumexp-merge the exact-f32 tail block (the in-flight
+    partial cache block lives outside the pulse planes):
+
+        m_tot = max(m_packed, m_tail)
+        out = (acc_p * e^(m_p - m_tot) + acc_t * e^(m_t - m_tot))
+              / (l_p * e^(m_p - m_tot) + l_t * e^(m_t - m_tot))
+
+    ``kv_len`` rows may be 0 (nothing packed yet): every block masks out,
+    l = 0 and m = -1e30, and the merge reduces to the tail alone.
+    """
+    bh, m, hd = q_i8.shape
+    s = k_pulses.shape[1]
+    ng = hd // group
+    assert hd % group == 0, (hd, group)
+    assert q_i8.dtype == jnp.int8 and k_pulses.dtype == jnp.int8
+    assert v_pulses.dtype == jnp.int8
+    assert k_scales.shape == (bh, s, ng), (k_scales.shape, (bh, s, ng))
+    assert v_scales.shape == (bh, s, ng)
+    assert act_scale.shape == (bh, m, 1), (act_scale.shape, (bh, m, 1))
+    assert kv_len.shape == (bh,), kv_len.shape
+
+    bs = max(min(bs, -(-s // 128) * 128), 128) if s > 128 else max(s, 8)
+    mp = -(-m // 8) * 8  # sublane-align the tiny head-group row count
+
+    qp = _pad_to(q_i8, 1, mp)
+    ap = _pad_to(act_scale.astype(jnp.float32), 1, mp)
+    kpp = _pad_to(k_pulses, 1, bs)
+    ksp = _pad_to(k_scales.astype(jnp.float32), 1, bs)
+    vpp = _pad_to(v_pulses, 1, bs)
+    vsp = _pad_to(v_scales.astype(jnp.float32), 1, bs)
+    sp = kpp.shape[1]
+    n_s = sp // bs
+
+    kernel = functools.partial(
+        _attn_kernel_q, group=group, n_s=n_s, sm_scale=float(sm_scale)
+    )
+    acc, m_run, l_run = pl.pallas_call(
+        kernel,
+        grid=(bh, n_s),
+        in_specs=[
+            pl.BlockSpec((1, mp, hd), lambda b, si: (b, 0, 0)),
+            pl.BlockSpec((1, mp, 1), lambda b, si: (b, 0, 0)),
+            pl.BlockSpec((1, bs, hd), lambda b, si: (b, si, 0)),
+            pl.BlockSpec((1, bs, ng), lambda b, si: (b, si, 0)),
+            pl.BlockSpec((1, bs, hd), lambda b, si: (b, si, 0)),
+            pl.BlockSpec((1, bs, ng), lambda b, si: (b, si, 0)),
+            pl.BlockSpec(
+                (1, 1), lambda b, si: (b, 0), memory_space=pltpu.SMEM
+            ),
+        ],
+        out_specs=(
+            pl.BlockSpec((1, mp, hd), lambda b, si: (b, 0, 0)),
+            pl.BlockSpec((1, mp, 1), lambda b, si: (b, 0, 0)),
+            pl.BlockSpec((1, mp, 1), lambda b, si: (b, 0, 0)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((bh, mp, hd), jnp.float32),
+            jax.ShapeDtypeStruct((bh, mp, 1), jnp.float32),
+            jax.ShapeDtypeStruct((bh, mp, 1), jnp.float32),
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((mp, hd), jnp.float32),
+            pltpu.VMEM((mp, 1), jnp.float32),
+            pltpu.VMEM((mp, 1), jnp.float32),
+        ],
+        interpret=interpret,
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")
+        ),
+    )(qp, ap, kpp, ksp, vpp, vsp, kv_len.astype(jnp.int32)[:, None])
+    if mp != m:
+        acc, m_run, l_run = acc[:, :m], m_run[:, :m], l_run[:, :m]
+    return acc, m_run, l_run

@@ -24,9 +24,17 @@ exported from.
 activations to per-row symmetric int8 and runs the int8 x int8 kernel v3
 (int32 MXU accumulation) — the all-integer contraction of the paper plus
 Liguori's follow-up, with an activation-bandwidth win on top of the weight
-one.  ``--agreement-min T`` additionally serves the same prompts with f32
-activations and fails (exit 1) if greedy top-1 token agreement drops below
-T — the CI gate.
+one.  ``--agreement-min T`` additionally serves the same prompts on the
+f32 reference path (f32 activations, dense f32 KV cache) and fails
+(exit 1) if greedy top-1 token agreement drops below T — the CI gate.
+
+``--kv-pvq`` sets the process-wide ``KVQuant`` contract: every attention
+layer's decode cache becomes a ``core.packed.PackedKV`` — completed blocks
+of K/V rows are PVQ-encoded (int8 pulse planes + per-group rho), decode
+contracts them with the int8 attention kernel v4, and only the in-flight
+partial block stays exact f32.  This is the decode *bandwidth* half: after
+``--pvq --act-int8`` shrank weights and activations, re-reading the KV
+cache every token dominates; packed KV cuts those bytes ~3.6x vs f32.
 """
 
 from __future__ import annotations
@@ -172,12 +180,43 @@ def main() -> int:
         "accumulation); requires --pvq or --artifact",
     )
     ap.add_argument(
+        "--kv-pvq",
+        action="store_true",
+        help="PVQ-compress the decode KV cache: completed blocks are stored "
+        "as int8 pulse planes + per-group rho and contracted by the int8 "
+        "attention kernel v4; the in-flight partial block stays exact f32",
+    )
+    ap.add_argument(
+        "--kv-block",
+        type=int,
+        default=32,
+        help="with --kv-pvq: tokens per encoded cache block (the f32 tail "
+        "ring is this long)",
+    )
+    ap.add_argument(
+        "--kv-group",
+        type=int,
+        default=32,
+        help="with --kv-pvq: sub-head PVQ group width (fitted down when it "
+        "does not divide head_dim)",
+    )
+    ap.add_argument(
+        "--max-kv-bytes-ratio",
+        type=float,
+        default=0.35,
+        metavar="R",
+        help="with --kv-pvq: exit 1 if the packed cache's bytes/token "
+        "exceeds R x the f32 cache (the compression the kernel-v4 path "
+        "exists to deliver)",
+    )
+    ap.add_argument(
         "--agreement-min",
         type=float,
         default=None,
         metavar="T",
-        help="with --act-int8: also serve the same prompts with f32 "
-        "activations and exit 1 if greedy top-1 token agreement < T",
+        help="with --act-int8 and/or --kv-pvq: also serve the same prompts "
+        "on the f32 reference path (f32 activations, dense f32 KV cache) "
+        "and exit 1 if greedy top-1 token agreement < T",
     )
     ap.add_argument("--n-over-k", type=float, default=1.0)
     ap.add_argument("--seed", type=int, default=0)
@@ -192,9 +231,9 @@ def main() -> int:
     if args.act_int8 and not (args.pvq or args.artifact):
         ap.error("--act-int8 quantizes the packed matmul activations; "
                  "it requires --pvq or --artifact")
-    if args.agreement_min is not None and not args.act_int8:
-        ap.error("--agreement-min compares int8 vs f32 activations; "
-                 "it requires --act-int8")
+    if args.agreement_min is not None and not (args.act_int8 or args.kv_pvq):
+        ap.error("--agreement-min compares a quantized path against the f32 "
+                 "reference; it requires --act-int8 and/or --kv-pvq")
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -243,6 +282,21 @@ def main() -> int:
                 tuned[f"{m}x{k_pad}x{n}:int8"] = {
                     kk: e8[kk] for kk in ("bm", "bn", "bk", "us")
                 }
+        if args.kv_pvq:
+            # kernel-v4 attention decode shape: m = grouped query rows per kv
+            # head, s = the packed plane length the serve caches will carry
+            # (prefill pads roundup(prompt, block) planes out to cache_len)
+            from repro.core.packed import _fit_group
+
+            hd = cfg.resolved_head_dim
+            g = _fit_group(args.kv_group, hd)
+            blk = max(args.kv_block, 1)
+            m_q = max(cfg.n_heads // cfg.n_kv_heads, 1)
+            s_planes = -(-args.prompt_len // blk) * blk + args.gen
+            ea = autotune.autotune_attn(m_q, hd, s_planes, group=g, dtype=jnp.int8)
+            tuned[f"attn{m_q}x{hd}x{s_planes}:int8"] = {
+                kk: ea[kk] for kk in ("bs", "us")
+            }
         report["tuned_tiles"] = tuned
         report["tune_cache"] = str(autotune.cache_path())
     if args.artifact:
@@ -286,7 +340,14 @@ def main() -> int:
             report.update(_expert_report(params))
         report["pvq_encode_s"] = round(time.time() - t0, 1)
 
-    from repro.core.quantize import ActQuant, act_quant_scope, set_default_act_quant
+    from repro.core.quantize import (
+        ActQuant,
+        KVQuant,
+        act_quant_scope,
+        kv_quant_scope,
+        set_default_act_quant,
+        set_default_kv_quant,
+    )
 
     if args.act_int8:
         # one switch sets the process-wide contract: every packed matmul
@@ -294,6 +355,29 @@ def main() -> int:
         # activations and dispatches kernel v3 — no per-layer threading
         set_default_act_quant(ActQuant(mode="per_row"))
         report["act_quant"] = "int8:per_row"
+    if args.kv_pvq:
+        # same pattern for the KV cache: init_kv_cache /
+        # attention_prefill_cache pick the default up and every attention
+        # layer's cache comes out as a PackedKV (kernel-v4 decode)
+        kvq = KVQuant(block=args.kv_block, group=args.kv_group)
+        set_default_kv_quant(kvq)
+        from repro.core.packed import _fit_group
+
+        hd = cfg.resolved_head_dim
+        g = _fit_group(kvq.group, hd)
+        ng = hd // g
+        packed_bpt = 2 * (hd + 4 * ng)  # per kv head: K+V pulses + scales
+        dense_bpt = 2 * hd * 4  # f32 reference
+        report["kv_quant"] = f"pvq:block{kvq.block}:g{g}:k{kvq.k}"
+        report["kv_bytes_per_token_per_head"] = packed_bpt
+        report["kv_bytes_ratio_vs_f32"] = round(packed_bpt / dense_bpt, 3)
+        if packed_bpt / dense_bpt > args.max_kv_bytes_ratio:
+            report["kv_bytes_fail"] = (
+                f"packed KV bytes ratio {packed_bpt / dense_bpt:.3f} > "
+                f"allowed {args.max_kv_bytes_ratio}"
+            )
+            print(json.dumps(report))
+            return 1
 
     key = jax.random.PRNGKey(args.seed + 1)
     tokens = jax.random.randint(key, (args.batch, args.prompt_len), 0, cfg.vocab_size)
@@ -315,17 +399,18 @@ def main() -> int:
     })
 
     if args.agreement_min is not None:
-        # A/B legs: identical packed weights, f32 activations (kernel v2)
-        # vs int8 activations (kernel v3), contexts AND compute path matched
-        # — both walk the same decode loop teacher-forced with the
-        # int8-generated tokens.  (A free-running comparison conflates
+        # A/B legs: identical packed weights; the quantized leg keeps the
+        # active ActQuant/KVQuant defaults, the reference leg clears BOTH
+        # (f32 activations, dense f32 KV cache).  Contexts AND compute path
+        # matched — both walk the same decode loop teacher-forced with the
+        # quantized-leg tokens.  (A free-running comparison conflates
         # kernel fidelity with the autoregressive cascade — one near-tie
         # flip rewrites the whole suffix; a prefill re-score changes the
         # tile shapes, which int8 rounding amplifies into whole quanta.)
         lg_q = teacher_forced_logits(
             model, params, out, prompt_len=args.prompt_len, extra_batch=extra
         )
-        with act_quant_scope(None):
+        with act_quant_scope(None), kv_quant_scope(None):
             lg_f = teacher_forced_logits(
                 model, params, out, prompt_len=args.prompt_len,
                 extra_batch=extra,

@@ -68,7 +68,44 @@ def KVCache(k: jax.Array, v: jax.Array) -> dict:
     return {"k": k, "v": v}
 
 
-def init_kv_cache(batch: int, max_len: int, n_kv: int, head_dim: int, dtype=jnp.bfloat16) -> dict:
+def init_kv_cache(
+    batch: int,
+    max_len: int,
+    n_kv: int,
+    head_dim: int,
+    dtype=None,
+    *,
+    quantized=None,
+) -> Any:
+    """Zero decode cache: a dense ``KVCache`` dict or a PVQ-packed
+    ``core.packed.PackedKV``.
+
+    dtype: cache storage dtype; ``None`` means bf16.  The dtype stored here
+      is authoritative — every append in ``attention_decode`` casts the new
+      K/V rows to the *cache* dtype, so an explicitly f32 cache stays f32
+      even when the projections compute in bf16 (and vice versa).  For a
+      packed cache, ``dtype`` governs the exact tail ring; the pulse planes
+      are int8/f32 by construction.
+    quantized: ``None`` defers to ``core.quantize.default_kv_quant()`` (set
+      process-wide by ``serve --kv-pvq`` / ``kv_quant_scope``); ``False``
+      forces a dense cache regardless of the default (cross-attention KV is
+      read in full every step and never appended — it stays dense); ``True``
+      uses the default ``KVQuant()``; a ``KVQuant`` instance wins outright.
+    """
+    from repro.core.quantize import KVQuant, default_kv_quant
+
+    if dtype is None:
+        dtype = jnp.bfloat16
+    if quantized is None:
+        quantized = default_kv_quant()
+    if quantized is True:
+        quantized = KVQuant()
+    if quantized:
+        from repro.core.packed import PackedKV
+
+        return PackedKV.init(
+            batch, max_len, n_kv, head_dim, kvq=quantized, dtype=dtype
+        )
     shape = (batch, max_len, n_kv, head_dim)
     return KVCache(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype))
 
@@ -239,6 +276,94 @@ def decode_attention(
     return out.reshape(b, sq, h, cache_v.shape[-1])
 
 
+def decode_attention_packed(
+    q: jax.Array,  # (b, sq, h, hd) float queries
+    kv,  # core.packed.PackedKV
+    *,
+    scale: float,
+    length: jax.Array,  # (b,) int: valid cache rows per batch (ragged mask)
+    filled: Optional[jax.Array] = None,  # scalar int: physical fill count
+    exact: Optional[bool] = None,
+) -> jax.Array:
+    """Decode attention over a PVQ-packed KV cache (kernel v4 fast path).
+
+    Two legs merged by online softmax:
+
+    * packed leg — positions ``< packed_end(length)`` via
+      ``ops.pvq_attn_decode``: int8 queries x int8 K pulses for scores,
+      int8 probs x int8 V pulses for outputs, int32 MXU accumulation, each
+      rho applied once per group.  The kernel returns UNNORMALIZED
+      ``(acc, m, l)`` per query row.
+    * tail leg — the in-flight partial block, exact in f32 against the tail
+      ring (ring slot of position ``p`` is ``p % block``; since
+      ``packed_end`` is block-aligned, tail position ``packed_end + t``
+      lives at slot ``t``).
+
+    ``out = (acc_p * e^(m_p - M) + acc_t) / (l_p * e^(m_p - M) + l_t)`` with
+    ``M = max(m_p, m_t)`` — exactly the flash-attention merge, so the split
+    point is invisible in the output.  The grouped-query layout is preserved
+    throughout (the packed cache is never expanded to n_heads).
+
+    ``filled`` is the PHYSICAL fill count (uniform across the batch on the
+    streaming decode path: ``pos + 1``) — it alone determines where the
+    packed planes end and the tail ring begins.  ``length`` is the per-row
+    validity mask and may be ragged (``length <= filled``): positions in
+    ``[packed_end(length), min(length, packed_end(filled)))`` live in the
+    *planes*, so the kernel masks on ``min(length, packed_end(filled))``
+    while the tail leg masks on ``length - packed_end(filled)``.  When
+    ``filled`` is omitted it defaults to ``max(length)`` — correct whenever
+    the cache was filled exactly up to the longest row.
+
+    ``exact=True`` (or env ``REPRO_KV_PVQ_EXACT=1``) instead dequantizes the
+    whole cache through ``PackedKV.dense_kv`` and runs the dense
+    ``decode_attention`` — the debugging/ablation oracle for the kernel.
+    """
+    import os
+
+    from repro.kernels import ops
+
+    if filled is None:
+        filled = jnp.max(length)
+    if exact is None:
+        exact = os.environ.get("REPRO_KV_PVQ_EXACT", "") not in ("", "0", "false")
+    if exact:
+        kd, vd = kv.dense_kv(filled, dtype=jnp.float32)
+        return decode_attention(q, kd, vd, scale=scale, length=length)
+
+    b, sq, h, hd = q.shape
+    n_kv = kv.k_pulses.shape[2]
+    blk = kv.block
+    pe = kv.packed_end(filled)  # scalar block-aligned packed extent
+    kv_len = jnp.minimum(pe, length)  # (b,) packed rows visible per batch
+
+    acc_p, m_p, l_p = ops.pvq_attn_decode(q, kv, kv_len, sm_scale=scale)
+    # shapes: (b, sq, n_kv, g, hd) / (b, sq, n_kv, g, 1) x2
+
+    # exact tail leg over the f32 ring: slot t holds position pe + t,
+    # valid while pe + t < length
+    qg = _group_q(q, n_kv).astype(jnp.float32)
+    tk = kv.tail_k.astype(jnp.float32)  # (b, blk, n_kv, hd)
+    tv = kv.tail_v.astype(jnp.float32)
+    s_t = jnp.einsum(
+        "bqhgd,bthd->bqhgt", qg, tk, preferred_element_type=jnp.float32
+    ) * scale
+    valid = jnp.arange(blk)[None, :] < (length - pe)[:, None]  # (b, blk)
+    s_t = jnp.where(valid[:, None, None, None, :], s_t, NEG_INF)
+    m_t = jnp.max(s_t, axis=-1, keepdims=True)
+
+    m_tot = jnp.maximum(m_p, m_t)
+    # NEG_INF is finite: zero masked probs via the mask, never via exp()
+    p_t = jnp.where(
+        valid[:, None, None, None, :], jnp.exp(s_t - m_tot), 0.0
+    )
+    l_t = jnp.sum(p_t, axis=-1, keepdims=True)
+    acc_t = jnp.einsum("bqhgt,bthd->bqhgd", p_t, tv)
+
+    alpha = jnp.exp(m_p - m_tot)  # 0 when the packed leg is empty (m_p=NEG_INF)
+    out = (acc_p * alpha + acc_t) / (l_p * alpha + l_t)
+    return out.reshape(b, sq, h, hd).astype(q.dtype)
+
+
 # ---------------------------------------------------------------------------
 # Full module apply
 # ---------------------------------------------------------------------------
@@ -290,12 +415,27 @@ def attention_prefill_cache(
     n_kv_heads: int,
     head_dim: int,
     rope_theta: Optional[float] = 10000.0,
-) -> dict:
+    quantized=None,
+) -> Any:
+    """Prompt-time KV cache.  ``quantized`` follows the
+    :func:`init_kv_cache` contract — when a KVQuant is active the prompt's
+    full blocks are PVQ-encoded immediately (``PackedKV.from_dense``) and
+    only the ragged remainder lands in the f32 tail ring."""
     b, s, _ = x.shape
     k = dense(p["wk"], x).reshape(b, s, n_kv_heads, head_dim)
     v = dense(p["wv"], x).reshape(b, s, n_kv_heads, head_dim)
     if rope_theta is not None:
         k = apply_rope(k, jnp.arange(s)[None, :], rope_theta)
+    from repro.core.quantize import KVQuant, default_kv_quant
+
+    if quantized is None:
+        quantized = default_kv_quant()
+    if quantized is True:
+        quantized = KVQuant()
+    if quantized:
+        from repro.core.packed import PackedKV
+
+        return PackedKV.from_dense(k, v, kvq=quantized)
     return KVCache(k=k, v=v)
 
 
@@ -321,12 +461,26 @@ def attention_decode(
     if rope_theta is not None:
         q = apply_rope(q, posb, rope_theta)
         k = apply_rope(k, posb, rope_theta)
+    scale = softmax_scale if softmax_scale is not None else 1.0 / math.sqrt(head_dim)
+    length = jnp.full((b,), pos + 1)
+    from repro.core.packed import is_packed_kv
+
+    if is_packed_kv(cache):
+        # packed fast path: append into the tail ring (encode-on-block-fill
+        # happens inside PackedKV.append), then the kernel-v4 contraction
+        if update_cache:
+            cache = cache.append(k, v, pos)
+        out = decode_attention_packed(
+            q, cache, scale=scale, length=length, filled=pos + 1
+        )
+        y = dense(p["wo"], out.reshape(b, 1, n_heads * head_dim))
+        return y, cache
     if update_cache:
+        # the cast follows the CACHE dtype, never the projection dtype: an
+        # explicitly f32 cache must not be silently downcast to bf16 here
         ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), pos, axis=1)
         cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), pos, axis=1)
         cache = KVCache(k=ck, v=cv)
-    scale = softmax_scale if softmax_scale is not None else 1.0 / math.sqrt(head_dim)
-    length = jnp.full((b,), pos + 1)
     out = decode_attention(q, cache["k"], cache["v"], scale=scale, length=length)
     y = dense(p["wo"], out.reshape(b, 1, n_heads * head_dim))
     return y, cache

@@ -5,6 +5,12 @@ causal attention.  Decode: the *absorbed* formulation — W_uk is folded into
 the query and W_uv into the output, so the KV cache holds only the
 ``kv_lora_rank + rope_dim`` latent per token (the whole point of MLA: 576
 floats/token for the 236b config instead of 2*128*128=32768).
+
+The MLA latent cache deliberately stays DENSE under ``--kv-pvq``: it is
+already a learned compression (64x for the 236b config), and the absorbed
+decode contracts the latent directly against query-folded weights — there
+are no per-head K/V rows for ``core.packed.PackedKV`` to block-encode.
+Packed-KV compression applies to the standard attention cache only.
 """
 
 from __future__ import annotations

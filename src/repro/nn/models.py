@@ -163,11 +163,19 @@ class Model:
             def pad_seq(path, leaf):
                 # sequence-indexed cache tensors have shape (..., s, tail);
                 # cross-attention KV is over the (fixed) encoder length and
-                # must NOT be padded — zero keys would join the softmax
+                # must NOT be padded — zero keys would join the softmax.
+                # PackedKV pulse/scale planes are seq-indexed at the same
+                # axis (zero pulses/scales stay inert behind the length
+                # mask); its block-length tail ring is NOT seq-indexed and
+                # must keep its shape.
                 names = [getattr(p, "name", getattr(p, "key", "")) for p in path]
                 if "cross" in names:
                     return leaf
-                if any(n in ("k", "v", "c_kv", "k_rope") for n in names) and leaf.ndim >= 3:
+                seq_names = (
+                    "k", "v", "c_kv", "k_rope",
+                    "k_pulses", "v_pulses", "k_scales", "v_scales",
+                )
+                if any(n in seq_names for n in names) and leaf.ndim >= 3:
                     cfgpad = [(0, 0)] * leaf.ndim
                     cfgpad[2] = (0, pad)  # (repeats, batch, seq, ...)
                     return jnp.pad(leaf, cfgpad)

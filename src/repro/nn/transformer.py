@@ -331,7 +331,11 @@ def init_block_cache(
         c["rwkv_state"] = jnp.zeros((batch, h, cfg.rwkv.head_size, cfg.rwkv.head_size), jnp.float32)
         c["rwkv_shift_att"] = jnp.zeros((batch, cfg.d_model), dtype)
     if spec.cross:
-        c["cross"] = attn_lib.init_kv_cache(batch, enc_len, cfg.n_heads, cfg.resolved_head_dim, dtype)
+        # cross KV is written once from the encoder and read in full every
+        # step (no append stream) — always dense, even under --kv-pvq
+        c["cross"] = attn_lib.init_kv_cache(
+            batch, enc_len, cfg.n_heads, cfg.resolved_head_dim, dtype, quantized=False
+        )
     if spec.ffn == "cmix":
         c["rwkv_shift_ffn"] = jnp.zeros((batch, cfg.d_model), dtype)
     return c

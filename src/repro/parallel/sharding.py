@@ -305,6 +305,12 @@ def batch_pspec(mesh: Mesh, *, context_parallel: bool = False) -> P:
 # arch — head-sharding would force per-step cache all-gathers).
 _CACHE_RULES: Tuple[Tuple[str, Tuple[Any, ...]], ...] = (
     (r"kv/(k|v)$", (None, "dp", "seq", None, None)),
+    # PVQ-packed cache children (PackedKV flattens with DictKeys): the
+    # pulse/scale planes are seq-indexed exactly like dense k/v; the
+    # block-length tail ring is replicated along seq (it is one block).
+    (r"kv/(k|v)_pulses$", (None, "dp", "seq", None, None)),
+    (r"kv/(k|v)_scales$", (None, "dp", "seq", None, None)),
+    (r"kv/tail_(k|v)$", (None, "dp", None, None, None)),
     (r"cross/(k|v)$", (None, "dp", "seq", None, None)),
     (r"mla/c_kv$", (None, "dp", "seq", None)),
     (r"mla/k_rope$", (None, "dp", "seq", None)),

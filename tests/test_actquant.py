@@ -64,6 +64,81 @@ def test_per_tensor_shares_one_scale():
 
 
 # ---------------------------------------------------------------------------
+# per-tile (row x k-group) scales: ActQuant(granularity="tile")
+# ---------------------------------------------------------------------------
+
+
+def test_actquant_granularity_maps_to_mode():
+    assert ActQuant(granularity="tile").mode == "per_tile"
+    assert ActQuant(granularity="row").mode == "per_row"
+    with pytest.raises(ValueError):
+        ActQuant(granularity="per_block")
+
+
+@settings(deadline=None, max_examples=10)
+@given(st.integers(0, 2**31 - 1))
+def test_prop_per_tile_roundtrip_bound(seed):
+    """Per-tile roundtrip: |x - q * scale_tile| <= scale_tile / 2 within
+    each (row, k-group) tile; scale shape is (m, k // tile)."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (5, 128)) * 2.0
+    # pathological dynamic range: one huge group per row defeats a per-row scale
+    x = x.at[:, :32].multiply(100.0)
+    q, scale = quantize_activations(x, ActQuant(granularity="tile"), tile=32)
+    assert scale.shape == (5, 4)
+    err = jnp.abs(x - q.astype(jnp.float32) * jnp.repeat(scale, 32, axis=-1))
+    cap = jnp.repeat(scale, 32, axis=-1) / 2 + 1e-6
+    assert bool(jnp.all(err <= cap))
+
+
+@settings(deadline=None, max_examples=8)
+@given(st.integers(0, 2**31 - 1))
+def test_prop_kernel_v3_per_tile_within_error_bound(seed):
+    """Satellite: per-tile int8 logits stay within the per-tile analytic
+    bound (a @ weighted), which is strictly tighter than the per-row bound
+    on high-dynamic-range rows."""
+    m, k, n, group = 6, 256, 96, 64
+    x, w, s = _problem(seed, m, k, n, group)
+    x = x.at[:, :group].multiply(50.0)  # long-prefill-style outlier group
+    xq, a = quantize_activations(x, ActQuant(granularity="tile"), tile=group)
+    assert a.shape == (m, k // group)
+    y_f = pvq_matmul_ref(x, w, s, group=group)
+    y_q = pvq_matmul_q(xq, w, s, a, group=group, interpret=True)
+    bound = act_matmul_error_bound(a, w, s, group)
+    assert bound.shape == (m, n)
+    assert bool(jnp.all(jnp.abs(y_q - y_f) <= bound + 1e-5))
+
+
+def test_per_tile_beats_per_row_on_outlier_rows():
+    """The motivating case: a row whose groups span 100x dynamic range loses
+    most of its small-group signal to one per-row scale; per-tile scales
+    recover it.  Compare actual kernel error, not just bounds."""
+    m, k, n, group = 4, 256, 64, 64
+    x, w, s = _problem(30, m, k, n, group)
+    x = x.at[:, :group].multiply(100.0)
+    y_f = pvq_matmul_ref(x, w, s, group=group)
+    y_row = ops.pvq_matmul(x, w, s, group=group, act_quant=ActQuant())
+    y_tile = ops.pvq_matmul(
+        x, w, s, group=group, act_quant=ActQuant(granularity="tile")
+    )
+    e_row = float(jnp.linalg.norm(y_row - y_f))
+    e_tile = float(jnp.linalg.norm(y_tile - y_f))
+    assert e_tile < e_row
+
+
+def test_ops_per_tile_dispatch_through_packed_matmul():
+    """ops threads the weight group into the per-tile quantizer (the tile
+    width IS the PVQ group) — the packed entry point works end to end, with
+    padding applied before quantization so scale groups stay aligned."""
+    w = jax.random.laplace(jax.random.PRNGKey(31), (96, 48)) * 0.1
+    pk = pack_matmul(w, group=64, n_over_k=2.0)  # k_pad = 128 > d_in = 96
+    x = jax.random.normal(jax.random.PRNGKey(32), (5, 96))
+    y_f = ops.packed_matmul(x, pk)
+    y_t = ops.packed_matmul(x, pk, act_quant=ActQuant(granularity="tile"))
+    rel = float(jnp.linalg.norm(y_t - y_f) / jnp.linalg.norm(y_f))
+    assert rel < 0.05
+
+
+# ---------------------------------------------------------------------------
 # kernel v3 vs the analytic error bound
 # ---------------------------------------------------------------------------
 

@@ -1,0 +1,294 @@
+"""The PVQ-compressed KV cache (kernel v4): PackedKV container semantics,
+packed-vs-f32 decode_attention agreement across GQA group counts and ragged
+lengths, the in-flight partial tail block, the f32-cache dtype regression,
+and kernel-version-keyed autotune invalidation."""
+
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.packed import PackedKV, is_packed_kv
+from repro.core.quantize import KVQuant, default_kv_quant, kv_quant_scope
+from repro.nn import attention as A
+
+KVQ = KVQuant(block=32, group=32, k=127)
+
+
+def _dense_kv(seed, b, s, n_kv, hd, scale=1.0):
+    kk, kv = jax.random.split(jax.random.PRNGKey(seed))
+    k = jax.random.normal(kk, (b, s, n_kv, hd), jnp.float32) * scale
+    v = jax.random.normal(kv, (b, s, n_kv, hd), jnp.float32) * scale
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# PackedKV container: roundtrip bound, tail exactness, append == from_dense
+# ---------------------------------------------------------------------------
+
+
+def test_packed_kv_roundtrip_bound_per_block():
+    """Dequantized full blocks stay within a uniform relative error bound;
+    the tail (partial block) region is EXACT (it is stored f32)."""
+    b, s, n_kv, hd = 2, 71, 2, 64  # 2 full blocks + 7-row tail
+    k, v = _dense_kv(0, b, s, n_kv, hd)
+    pkv = PackedKV.from_dense(k, v, kvq=KVQ, dtype=jnp.float32)
+    kd, vd = pkv.dense_kv(jnp.full((b,), s))
+    pe = 64  # packed_end(71)
+    # packed region: bounded relative error per (token, head, group) row
+    for orig, deq in ((k, kd), (v, vd)):
+        num = jnp.linalg.norm(deq[:, :pe] - orig[:, :pe])
+        den = jnp.linalg.norm(orig[:, :pe])
+        assert float(num / den) < 0.12
+    # tail region: bit-exact f32
+    np.testing.assert_array_equal(np.asarray(kd[:, pe:s]), np.asarray(k[:, pe:s]))
+    np.testing.assert_array_equal(np.asarray(vd[:, pe:s]), np.asarray(v[:, pe:s]))
+
+
+def test_packed_kv_append_matches_from_dense():
+    """Streaming appends (with the encode-on-block-fill lax.cond) land in
+    the same planes/tail as a one-shot from_dense of the same rows."""
+    b, s, n_kv, hd = 1, 40, 2, 32  # crosses one block boundary at 32
+    k, v = _dense_kv(1, b, s, n_kv, hd)
+    ref = PackedKV.from_dense(k, v, kvq=KVQ, dtype=jnp.float32)
+
+    pkv = PackedKV.init(b, 64, n_kv, hd, kvq=KVQ, dtype=jnp.float32)
+    step = jax.jit(lambda c, kn, vn, p: c.append(kn, vn, p))
+    for pos in range(s):
+        pkv = step(pkv, k[:, pos : pos + 1], v[:, pos : pos + 1], pos)
+
+    kd_a, vd_a = pkv.dense_kv(jnp.full((b,), s))
+    kd_r, vd_r = ref.dense_kv(jnp.full((b,), s))
+    np.testing.assert_allclose(
+        np.asarray(kd_a[:, :s]), np.asarray(kd_r[:, :s]), atol=1e-5
+    )
+    np.testing.assert_allclose(
+        np.asarray(vd_a[:, :s]), np.asarray(vd_r[:, :s]), atol=1e-5
+    )
+
+
+def test_packed_kv_partial_tail_positions_exact():
+    """Every position of the in-flight partial block reads back exactly —
+    the ring-slot rule (slot = pos % block) at each fill level."""
+    b, n_kv, hd = 1, 1, 32
+    pkv = PackedKV.init(b, 64, n_kv, hd, kvq=KVQ, dtype=jnp.float32)
+    rows = jax.random.normal(jax.random.PRNGKey(2), (40, 1, 1, n_kv, hd))
+    step = jax.jit(lambda c, kn, p: c.append(kn, kn, p))
+    for pos in range(40):
+        pkv = step(pkv, rows[pos], pos)
+        kd, _ = pkv.dense_kv(jnp.full((b,), pos + 1))
+        pe = ((pos + 1) // 32) * 32
+        for t in range(pe, pos + 1):
+            np.testing.assert_array_equal(
+                np.asarray(kd[:, t]), np.asarray(rows[t][:, 0])
+            )
+
+
+def test_packed_kv_bytes_per_token():
+    pkv = PackedKV.init(1, 32, 2, 64, kvq=KVQ, dtype=jnp.float32)
+    # per kv-head pair: K+V pulse bytes (hd each) + f32 scales (4 * hd/group)
+    assert pkv.packed_bytes_per_token == 2 * (64 + 4 * 2)
+    assert pkv.dense_bytes_per_token == 2 * 64 * 4
+    assert pkv.packed_bytes_per_token / pkv.dense_bytes_per_token <= 0.35
+
+
+def test_packed_kv_is_pytree_with_stable_keys():
+    pkv = PackedKV.init(1, 32, 1, 32, kvq=KVQ)
+    leaves = jax.tree_util.tree_leaves_with_path(pkv)
+    names = {str(p[-1]) for p, _ in leaves}
+    assert names == {
+        "['k_pulses']", "['k_scales']", "['v_pulses']", "['v_scales']",
+        "['tail_k']", "['tail_v']",
+    }
+    assert is_packed_kv(pkv) and not is_packed_kv({"k": 1})
+
+
+# ---------------------------------------------------------------------------
+# decode agreement: packed vs f32 across GQA group counts + ragged lengths
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n_heads,n_kv", [(4, 4), (8, 2), (8, 1)])
+def test_decode_attention_packed_agrees_across_gqa(n_heads, n_kv):
+    b, s, hd = 2, 96, 64
+    k, v = _dense_kv(3, b, s, n_kv, hd)
+    q = jax.random.normal(jax.random.PRNGKey(4), (b, 1, n_heads, hd))
+    length = jnp.array([96, 50])  # ragged: one row mid-block
+    scale = 1.0 / np.sqrt(hd)
+    y_f = A.decode_attention(q, k, v, scale=scale, length=length)
+    pkv = PackedKV.from_dense(k, v, kvq=KVQ, dtype=jnp.float32)
+    y_p = A.decode_attention_packed(q, pkv, scale=scale, length=length)
+    rel = float(jnp.linalg.norm(y_p - y_f) / jnp.linalg.norm(y_f))
+    assert rel < 0.08, rel
+
+
+def test_decode_attention_packed_ragged_short_lengths():
+    """Lengths inside the first block: the packed leg is empty (l=0) and
+    the tail-only merge must still be well-defined and close to f32."""
+    b, s, n_kv, hd = 2, 32, 2, 32
+    k, v = _dense_kv(5, b, s, n_kv, hd)
+    q = jax.random.normal(jax.random.PRNGKey(6), (b, 1, 4, hd))
+    length = jnp.array([7, 1])
+    scale = 1.0 / np.sqrt(hd)
+    # keep tail == raw rows so the comparison is exact up to fp noise
+    pkv = PackedKV.from_dense(k[:, :31], v[:, :31], kvq=KVQ, dtype=jnp.float32)
+    y_f = A.decode_attention(q, k[:, :31], v[:, :31], scale=scale, length=length)
+    y_p = A.decode_attention_packed(q, pkv, scale=scale, length=length)
+    assert bool(jnp.all(jnp.isfinite(y_p)))
+    np.testing.assert_allclose(np.asarray(y_p), np.asarray(y_f), atol=1e-4)
+
+
+def test_decode_attention_packed_exact_oracle_matches_dense():
+    """REPRO_KV_PVQ_EXACT routes through dense_kv + the dense decode — on a
+    tail-only cache that equals the f32 reference to fp tolerance."""
+    b, s, n_kv, hd = 1, 16, 2, 32
+    k, v = _dense_kv(7, b, s, n_kv, hd)
+    q = jax.random.normal(jax.random.PRNGKey(8), (b, 1, 4, hd))
+    length = jnp.full((b,), s)
+    pkv = PackedKV.from_dense(k, v, kvq=KVQ, dtype=jnp.float32)
+    y_exact = A.decode_attention_packed(
+        q, pkv, scale=0.125, length=length, exact=True
+    )
+    kd, vd = pkv.dense_kv(length)
+    y_dense = A.decode_attention(q, kd, vd, scale=0.125, length=length)
+    np.testing.assert_array_equal(np.asarray(y_exact), np.asarray(y_dense))
+
+
+def test_attention_decode_full_loop_packed_vs_dense():
+    """attention_decode end to end: packed cache output stays close to the
+    dense-cache output across a block boundary, and the cache object stays
+    a PackedKV (never silently expanded)."""
+    b, d, nh, nkv, hd, L = 2, 64, 8, 2, 64, 80
+    p = A.init_attention(jax.random.PRNGKey(9), d, nh, nkv, hd)
+    cd = A.init_kv_cache(b, L, nkv, hd, jnp.float32, quantized=False)
+    cp = A.init_kv_cache(b, L, nkv, hd, jnp.float32, quantized=KVQ)
+    assert is_packed_kv(cp)
+    step = jax.jit(
+        lambda c, xt, pos: A.attention_decode(
+            p, xt, c, pos, n_heads=nh, n_kv_heads=nkv, head_dim=hd
+        )
+    )
+    for pos in range(40):
+        xt = jax.random.normal(
+            jax.random.fold_in(jax.random.PRNGKey(10), pos), (b, 1, d)
+        ) * 0.5
+        yd, cd = step(cd, xt, pos)
+        yp, cp = step(cp, xt, pos)
+        assert is_packed_kv(cp)
+        rel = float(jnp.linalg.norm(yp - yd) / jnp.linalg.norm(yd))
+        assert rel < 0.1, (pos, rel)
+
+
+# ---------------------------------------------------------------------------
+# init_kv_cache contract: dtype regression + quantized selection
+# ---------------------------------------------------------------------------
+
+
+def test_init_kv_cache_f32_not_downcast_on_append():
+    """Regression (satellite): an explicitly f32 cache stays f32 through the
+    decode append even though the projections run in another dtype — the
+    cast follows the CACHE dtype, never the projection dtype."""
+    b, d, nh, nkv, hd = 1, 32, 2, 2, 16
+    p = A.init_attention(jax.random.PRNGKey(11), d, nh, nkv, hd)
+    p = jax.tree.map(lambda x: x.astype(jnp.bfloat16), p)
+    cache = A.init_kv_cache(b, 8, nkv, hd, jnp.float32, quantized=False)
+    x = jax.random.normal(jax.random.PRNGKey(12), (b, 1, d), jnp.bfloat16)
+    _, cache = A.attention_decode(
+        p, x, cache, 0, n_heads=nh, n_kv_heads=nkv, head_dim=hd
+    )
+    assert cache["k"].dtype == jnp.float32
+    assert cache["v"].dtype == jnp.float32
+    # and the packed cache's exact tail obeys the same rule
+    pc = A.init_kv_cache(b, 32, nkv, hd, jnp.float32, quantized=KVQ)
+    _, pc = A.attention_decode(
+        p, x, pc, 0, n_heads=nh, n_kv_heads=nkv, head_dim=hd
+    )
+    assert pc.tail_k.dtype == jnp.float32
+
+
+def test_init_kv_cache_default_dtype_is_bf16():
+    cache = A.init_kv_cache(1, 8, 1, 16)
+    assert cache["k"].dtype == jnp.bfloat16
+
+
+def test_init_kv_cache_quantized_dispatch():
+    """quantized=None defers to the process default; False forces dense even
+    inside a kv_quant_scope (the cross-attention rule)."""
+    assert default_kv_quant() is None
+    assert not is_packed_kv(A.init_kv_cache(1, 32, 1, 32))
+    with kv_quant_scope(KVQ):
+        assert is_packed_kv(A.init_kv_cache(1, 32, 1, 32))
+        assert not is_packed_kv(A.init_kv_cache(1, 32, 1, 32, quantized=False))
+    assert not is_packed_kv(A.init_kv_cache(1, 32, 1, 32))
+    assert is_packed_kv(A.init_kv_cache(1, 32, 1, 32, quantized=True))
+
+
+def test_prefill_cache_packed_under_scope():
+    b, s, d, nh, nkv, hd = 1, 40, 32, 4, 2, 16
+    p = A.init_attention(jax.random.PRNGKey(13), d, nh, nkv, hd)
+    x = jax.random.normal(jax.random.PRNGKey(14), (b, s, d))
+    with kv_quant_scope(KVQ):
+        c = A.attention_prefill_cache(
+            p, x, n_heads=nh, n_kv_heads=nkv, head_dim=hd
+        )
+    assert is_packed_kv(c)
+    assert c.k_pulses.shape[1] == 64  # block-rounded
+    c2 = A.attention_prefill_cache(p, x, n_heads=nh, n_kv_heads=nkv, head_dim=hd)
+    assert not is_packed_kv(c2)
+
+
+# ---------------------------------------------------------------------------
+# autotune: kv4 schema keys — kv3 entries can never serve v4 dispatch
+# ---------------------------------------------------------------------------
+
+
+def test_attn_autotune_kv3_entries_never_served(tmp_path, monkeypatch):
+    from repro.kernels import autotune as at
+    from repro.kernels.pvq_matmul import KERNEL_VERSION
+
+    assert KERNEL_VERSION == 4
+    path = tmp_path / "tune.json"
+    backend = jax.default_backend()
+    key_v4 = at.attn_cache_key(1, 64, 256, 32, jnp.int8, backend)
+    assert ":kv4:" in key_v4
+    stale = key_v4.replace(":kv4:", ":kv3:")
+    path.write_text(json.dumps({
+        stale: {"bs": 512, "us": 1.0, "candidates": 1},
+    }))
+    monkeypatch.setenv("REPRO_PVQ_AUTOTUNE", "0")
+    monkeypatch.setenv("REPRO_PVQ_TUNE_CACHE", str(path))
+    at.clear_memory_cache()
+    try:
+        # stale kv3 bs=512 must NOT be served: dispatch falls to the heuristic
+        assert at.get_attn_tiles(1, 64, 256, group=32) == at.heuristic_attn_bs(256)
+        # a genuine kv4 entry IS served
+        path.write_text(json.dumps({
+            stale: {"bs": 512, "us": 1.0, "candidates": 1},
+            key_v4: {"bs": 256, "us": 1.0, "candidates": 1},
+        }))
+        at.clear_memory_cache()
+        assert at.get_attn_tiles(1, 64, 256, group=32) == 256
+        # same invariant for the matmul tiles (the v3->v4 bump invalidates
+        # every tile timed against the pre-attention kernel body)
+        mk = at.cache_key(8, 256, 128, 128, jnp.float32, backend)
+        assert ":kv4:" in mk
+    finally:
+        at.clear_memory_cache()
+
+
+def test_attn_autotune_persists_and_hits(tmp_path, monkeypatch):
+    from repro.kernels import autotune as at
+
+    monkeypatch.setenv("REPRO_PVQ_TUNE_CACHE", str(tmp_path / "t.json"))
+    at.clear_memory_cache()
+    try:
+        e = at.autotune_attn(2, 32, 64, group=32, reps=1, max_candidates=2)
+        assert e["bs"] >= 8
+        # second call is a pure cache hit (same entry object contents)
+        assert at.autotune_attn(2, 32, 64, group=32, reps=1) == e
+        assert at.get_attn_tiles(2, 32, 64, group=32) == e["bs"]
+    finally:
+        at.clear_memory_cache()
