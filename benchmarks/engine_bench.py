@@ -1,0 +1,94 @@
+"""Continuous-batching engine vs the sequential fixed-batch loop.
+
+Serves one Poisson request trace two ways over the same PVQ-quantized
+model (packed weights + PVQ KV cache): (a) through ``launch.engine``'s
+slot-pool engine (paged KV, async admission, prefill/decode
+disaggregation) and (b) through ``serve.generate`` run request-by-request
+— what serving without continuous batching degenerates to under ragged
+arrivals.  Reports tokens/s, p50/p99 request latency, and slot
+utilization; rows land in ``BENCH_engine.json`` via ``benchmarks.run``.
+
+On this CPU container the Pallas kernels run interpret=True, so absolute
+throughput is a correctness proxy; the engine-vs-sequential ratio and the
+slot-utilization/eviction accounting are what the trajectory tracks.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+
+def bench_engine(arch: str = "smollm-360m", *, n_requests: int = 6,
+                 n_slots: int = 3, prompt_len: int = 12, gen: int = 8,
+                 rate: float = 0.0) -> List[Dict]:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config
+    from repro.core.packed import quantize_params
+    from repro.core.quantize import (
+        KVQuant, QuantPolicy, kv_quant_scope,
+    )
+    from repro.launch.engine import PVQEngine, bucket_len, poisson_trace
+    from repro.launch.serve import generate
+    from repro.nn.models import build_model
+
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0), max_seq=2 * (prompt_len + gen))
+    policy = QuantPolicy(
+        rules=(("embedding", cfg.pvq.n_over_k_embed, cfg.pvq.group),
+               ("kernel|experts", cfg.pvq.n_over_k, cfg.pvq.group)),
+        scale_mode="ls",
+    )
+    params = quantize_params(params, policy)
+
+    kvq = KVQuant(block=8, group=16)
+    rows: List[Dict] = []
+    with kv_quant_scope(kvq):
+        trace = poisson_trace(
+            n_requests, rate=rate, vocab=cfg.vocab_size,
+            prompt_lens=(max(prompt_len // 2, 1), prompt_len),
+            max_new=gen, seed=2,
+        )
+        max_len = bucket_len(prompt_len + gen, kvq.block)
+        eng = PVQEngine(model, params, n_slots=n_slots, max_len=max_len)
+        eng.warmup(prompt_lens=[len(r.prompt) for r in trace])
+        res = eng.run(trace)
+        res.pop("outputs")
+
+        # sequential fixed-batch baseline over the SAME trace, warmed
+        prompts = {r.rid: jnp.asarray([r.prompt], jnp.int32) for r in trace}
+        generate(model, params, prompts[trace[0].rid], gen=gen,
+                 cache_len=len(trace[0].prompt) + gen)
+        t0 = time.perf_counter()
+        base_tokens = 0
+        for r in trace:
+            out = generate(model, params, prompts[r.rid], gen=gen,
+                           cache_len=len(r.prompt) + gen)
+            jax.block_until_ready(out)
+            base_tokens += out.shape[1] - len(r.prompt)
+        base_dt = time.perf_counter() - t0
+
+    base_tps = base_tokens / max(base_dt, 1e-9)
+    rows.append({
+        "bench": f"engine:{cfg.name}:slots{n_slots}:req{n_requests}",
+        "arch": cfg.name,
+        "n_slots": n_slots,
+        "n_requests": n_requests,
+        "engine_tokens_per_s": round(res["tokens_per_s"], 2),
+        "baseline_tokens_per_s": round(base_tps, 2),
+        "speedup_vs_fixed_batch": round(res["tokens_per_s"] / max(base_tps, 1e-9), 3),
+        "latency_p50_s": res["latency_p50_s"],
+        "latency_p99_s": res["latency_p99_s"],
+        "ttft_p50_s": res["ttft_p50_s"],
+        "ttft_p99_s": res["ttft_p99_s"],
+        "slot_utilization": res["slot_utilization"],
+        "evictions": res["evictions"],
+        "decode_steps": res["decode_steps"],
+        "decode_traces": res["trace_counts"]["decode"],
+        "kv_page": eng.page,
+        "n_pages": eng.n_pages,
+    })
+    return rows

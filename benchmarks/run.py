@@ -5,9 +5,11 @@
 Prints ``name,us_per_call,derived`` CSV rows (one per benchmark), then a
 human-readable table dump.  Kernel rows are additionally written to
 ``BENCH_kernels.json`` (us_per_call + bytes-ratios per kernel/shape), the
-packed-vs-f32 serving rows to ``BENCH_serve.json``, and the .pvqz codec
-rows (bits/weight + encode/decode MB/s) to ``BENCH_artifact.json`` so
-future PRs can diff perf trajectories.
+packed-vs-f32 serving rows to ``BENCH_serve.json``, the continuous-batching
+engine rows (tok/s, p50/p99 latency, slot utilization) to
+``BENCH_engine.json``, and the .pvqz codec rows (bits/weight +
+encode/decode MB/s) to ``BENCH_artifact.json`` so future PRs can diff perf
+trajectories.
 """
 
 from __future__ import annotations
@@ -23,8 +25,8 @@ def main() -> None:
     ap.add_argument("--only", default="", help="run only benches whose name starts with this")
     args = ap.parse_args()
 
-    from benchmarks import (artifact_bench, attn_bench, kernel_bench, moe_bench,
-                            paper_tables, serve_bench)
+    from benchmarks import (artifact_bench, attn_bench, engine_bench,
+                            kernel_bench, moe_bench, paper_tables, serve_bench)
 
     all_rows = []
 
@@ -44,6 +46,7 @@ def main() -> None:
     run("kernel_pvq_matmul", kernel_bench.bench_pvq_matmul)
     run("kernel_pvq_encode", kernel_bench.bench_pvq_encode)
     run("serve_packed", serve_bench.bench_serve_throughput)
+    run("engine_continuous_batching", engine_bench.bench_engine)
     run("attn_packed_decode", attn_bench.bench_attention_decode)
     run("moe_packed_experts", moe_bench.bench_moe_experts)
     run("artifact_codecs", artifact_bench.bench_artifact_codecs)
@@ -97,6 +100,20 @@ def main() -> None:
         with open("BENCH_serve.json", "w") as f:
             json.dump(payload, f, indent=1, default=str)
         print("wrote BENCH_serve.json", file=sys.stderr)
+
+    # continuous-batching engine trajectory (tok/s, p50/p99, slot util)
+    engine_rows = [r for r in all_rows if r["bench_group"].startswith("engine_")]
+    if engine_rows:
+        import jax
+
+        payload = {
+            "schema": "bench-engine-v1",
+            "backend": jax.default_backend(),
+            "rows": engine_rows,
+        }
+        with open("BENCH_engine.json", "w") as f:
+            json.dump(payload, f, indent=1, default=str)
+        print("wrote BENCH_engine.json", file=sys.stderr)
 
     # packed-vs-f32 KV-cache decode trajectory (bytes/token + us/token)
     attn_rows = [r for r in all_rows if r["bench_group"].startswith("attn_")]

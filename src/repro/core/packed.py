@@ -437,6 +437,306 @@ def is_packed_kv(leaf: Any) -> bool:
 
 
 # ---------------------------------------------------------------------------
+# Paged PVQ KV pool (continuous-batching serve engine)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class PagedKV:
+    """Physical-page pool view of :class:`PackedKV` for a slot-pool engine.
+
+    The continuous-batching engine (``launch.engine``) serves a fixed pool
+    of ``n_slots`` decode slots whose sequences join and leave mid-flight.
+    Instead of one contiguous plane per slot, the PVQ-encoded KV blocks
+    live in a shared pool of physical *pages* — **page size = kv block
+    size**, so a page is exactly one PVQ encode unit and pages stay packed
+    at rest (int8 pulse planes + per-group rho, never re-encoded on
+    allocator moves; moving a page is moving int8 bytes).
+
+    Children (unstacked; a leading layer-stack axis rides along like every
+    other cache leaf):
+
+    * ``k_pages``/``v_pages`` — ``(P + 1, page, n_kv, hd)`` int8 pulse
+      pool.  Physical page ``P`` (the last one) is the *trash page*:
+      masked scatter destinations land there, and page-table entries of
+      unallocated logical blocks point at it.  Its content is garbage and
+      is never visible through a length mask.
+    * ``k_page_scales``/``v_page_scales`` — ``(P + 1, page, n_kv, ng)``
+      f32 per-group rho pool.
+    * ``tail_k``/``tail_v`` — ``(n_slots, page, n_kv, hd)`` exact ring in
+      the cache dtype: the per-slot in-flight partial block (ring slot of
+      position ``p`` is ``p % page``, same as :class:`PackedKV`).
+    * ``page_table`` — ``(n_slots, max_pages)`` int32: physical page of
+      each slot's logical block, trash-page id where unallocated.  The
+      engine's host-side allocator owns these values and refreshes them
+      every step.
+    * ``write_page`` — ``(n_slots,)`` int32: physical destination of the
+      block a slot completes THIS step (trash-page id when the step does
+      not complete a block).  Pre-assigned by the allocator, so ``append``
+      never needs host round-trips.
+
+    ``gather()`` materializes a :class:`PackedKV` view through the page
+    table — the kernel-v4 decode contract is unchanged, only indirected.
+    """
+
+    k_pages: Array  # int8 (P+1, page, n_kv, hd)
+    k_page_scales: Array  # f32 (P+1, page, n_kv, ng)
+    v_pages: Array  # int8 (P+1, page, n_kv, hd)
+    v_page_scales: Array  # f32 (P+1, page, n_kv, ng)
+    tail_k: Array  # cache dtype (n_slots, page, n_kv, hd)
+    tail_v: Array  # cache dtype (n_slots, page, n_kv, hd)
+    page_table: Array  # int32 (n_slots, max_pages)
+    write_page: Array  # int32 (n_slots,)
+    page: int  # tokens per page == PVQ block (static)
+    group: int  # sub-head PVQ group (static, divides hd)
+    k: int  # pulse budget per group (static, <= 127)
+    dtype: str  # logical cache dtype name (tail dtype)
+
+    # ------------------------------------------------------------- properties
+
+    @property
+    def _stacked(self) -> bool:
+        return self.k_pages.ndim == 5
+
+    @property
+    def n_pages(self) -> int:
+        """Usable physical pages (the +1 trash page excluded)."""
+        return int(self.k_pages.shape[-4]) - 1
+
+    @property
+    def trash_page(self) -> int:
+        return self.n_pages
+
+    @property
+    def n_slots(self) -> int:
+        return int(self.tail_k.shape[-4])
+
+    @property
+    def max_pages(self) -> int:
+        """Logical pages per slot (page-table width)."""
+        return int(self.page_table.shape[-1])
+
+    @property
+    def head_dim(self) -> int:
+        return int(self.k_pages.shape[-1])
+
+    @property
+    def n_groups(self) -> int:
+        return int(self.k_page_scales.shape[-1])
+
+    @property
+    def block(self) -> int:
+        """PackedKV-compatible alias: the PVQ encode granularity."""
+        return self.page
+
+    def packed_end(self, filled) -> Array:
+        return (filled // self.page) * self.page
+
+    # -------------------------------------------------------------- creation
+
+    @classmethod
+    def init(
+        cls, n_slots: int, n_pages: int, max_pages: int, n_kv: int,
+        head_dim: int, *, kvq: KVQuant, dtype=jnp.bfloat16,
+    ) -> "PagedKV":
+        g = _fit_group(kvq.group, head_dim)
+        page = int(kvq.block)
+        ng = head_dim // g
+        dt = jnp.dtype(dtype)
+        trash = int(n_pages)
+        return cls(
+            k_pages=jnp.zeros((n_pages + 1, page, n_kv, head_dim), jnp.int8),
+            k_page_scales=jnp.zeros((n_pages + 1, page, n_kv, ng), jnp.float32),
+            v_pages=jnp.zeros((n_pages + 1, page, n_kv, head_dim), jnp.int8),
+            v_page_scales=jnp.zeros((n_pages + 1, page, n_kv, ng), jnp.float32),
+            tail_k=jnp.zeros((n_slots, page, n_kv, head_dim), dt),
+            tail_v=jnp.zeros((n_slots, page, n_kv, head_dim), dt),
+            page_table=jnp.full((n_slots, max_pages), trash, jnp.int32),
+            write_page=jnp.full((n_slots,), trash, jnp.int32),
+            page=page, group=g, k=int(kvq.k), dtype=dt.name,
+        )
+
+    def with_tables(self, page_table: Array, write_page: Array) -> "PagedKV":
+        """Refresh the allocator-owned children (broadcasts over a leading
+        layer-stack axis when the container is stacked)."""
+        if self._stacked:
+            reps = self.k_pages.shape[0]
+            page_table = jnp.broadcast_to(page_table[None], (reps,) + page_table.shape)
+            write_page = jnp.broadcast_to(write_page[None], (reps,) + write_page.shape)
+        return dataclasses.replace(
+            self, page_table=page_table.astype(jnp.int32),
+            write_page=write_page.astype(jnp.int32),
+        )
+
+    # ---------------------------------------------------------------- views
+
+    def gather(self) -> PackedKV:
+        """Slot-major :class:`PackedKV` view through the page table.
+
+        ``k_pulses[slot, b * page + t] = k_pages[page_table[slot, b], t]``
+        — unallocated logical blocks read the trash page, whose garbage
+        stays behind the per-slot length mask.  This is the gather a fused
+        paged kernel would do through its page-table operand; expressing it
+        as a jnp gather keeps kernel v4 bit-compatible.
+        """
+        pt = self.page_table  # (n_slots, mp)
+        ns, mp = pt.shape
+        s = mp * self.page
+
+        def pick(pool):  # (P+1, page, n_kv, X) -> (n_slots, S, n_kv, X)
+            g = pool[pt]  # (n_slots, mp, page, n_kv, X)
+            return g.reshape(ns, s, g.shape[-2], g.shape[-1])
+
+        return PackedKV(
+            k_pulses=pick(self.k_pages), k_scales=pick(self.k_page_scales),
+            v_pulses=pick(self.v_pages), v_scales=pick(self.v_page_scales),
+            tail_k=self.tail_k, tail_v=self.tail_v,
+            block=self.page, group=self.group, k=self.k, dtype=self.dtype,
+        )
+
+    def dense_kv(self, filled, dtype=jnp.float32) -> Tuple[Array, Array]:
+        """Exact dense oracle view (via the gathered :class:`PackedKV`)."""
+        return self.gather().dense_kv(filled, dtype=dtype)
+
+    # --------------------------------------------------------------- updates
+
+    def append(self, k_new: Array, v_new: Array, pos) -> "PagedKV":
+        """Write one decode step ``(n_slots, 1, n_kv, hd)`` at per-slot
+        positions ``pos (n_slots,)``.
+
+        Every slot's row lands in its tail ring at ``pos % page``; slots
+        whose write completes a block (``(pos + 1) % page == 0``) get the
+        whole ring PVQ-encoded and scattered to their pre-assigned
+        ``write_page`` — all other slots scatter to the trash page, so the
+        encode is one masked vector op with no per-slot control flow.
+        """
+        page = self.page
+        tdt = self.tail_k.dtype
+        pos = jnp.asarray(pos, jnp.int32)
+        slot_in_ring = jnp.mod(pos, page)
+
+        upd_row = jax.vmap(
+            lambda ring, row, p: jax.lax.dynamic_update_slice_in_dim(
+                ring, row, p, axis=0
+            )
+        )
+        tail_k = upd_row(self.tail_k, k_new.astype(tdt), slot_in_ring)
+        tail_v = upd_row(self.tail_v, v_new.astype(tdt), slot_in_ring)
+
+        completes = jnp.mod(pos + 1, page) == 0  # (n_slots,)
+        dest = jnp.where(completes, self.write_page, self.trash_page)
+
+        def encode(pools):
+            kpg, ksg, vpg, vsg = pools
+            pk, sk = _kv_encode_planes(tail_k.astype(jnp.float32), self.group, self.k)
+            pv, sv = _kv_encode_planes(tail_v.astype(jnp.float32), self.group, self.k)
+            # duplicate trash indices are fine: the trash page is never read
+            return (
+                kpg.at[dest].set(pk), ksg.at[dest].set(sk),
+                vpg.at[dest].set(pv), vsg.at[dest].set(sv),
+            )
+
+        pools = (self.k_pages, self.k_page_scales, self.v_pages, self.v_page_scales)
+        kpg, ksg, vpg, vsg = jax.lax.cond(
+            jnp.any(completes), encode, lambda p: p, pools
+        )
+        return dataclasses.replace(
+            self, k_pages=kpg, k_page_scales=ksg, v_pages=vpg, v_page_scales=vsg,
+            tail_k=tail_k, tail_v=tail_v,
+        )
+
+    def graft(
+        self, k_dense: Array, v_dense: Array, slot, page_ids: Array, real_len
+    ) -> "PagedKV":
+        """Graft one prefilled request into decode slot ``slot``.
+
+        ``k_dense``/``v_dense``: the request's EXACT dense prefill cache
+        ``(1, L_b, n_kv, hd)`` at a page-aligned bucket length ``L_b``
+        (prompt padded up; padded rows are garbage and stay behind the
+        length mask).  ``page_ids (L_b // page,)`` are the allocator's
+        physical destinations — trash-page id for block indices at/after
+        ``real_len // page``, so the partially-filled last block never
+        pollutes the pool.  The exact rows of that partial block land in
+        the slot's tail ring (f32-exact, same as a fresh ``append``
+        stream would have left them).
+
+        PVQ encoding happens HERE, not in the prefill step: the prefill
+        runs with a dense cache and the graft encodes only complete
+        blocks, which keeps the encode bit-identical to the fixed-batch
+        ``PackedKV.from_dense`` path.
+        """
+        if self._stacked:
+            return jax.vmap(
+                lambda s, kd, vd: s.graft(kd, vd, slot, page_ids, real_len)
+            )(self, k_dense, v_dense)
+        page = self.page
+        kf = k_dense[0].astype(jnp.float32)  # (L_b, n_kv, hd)
+        vf = v_dense[0].astype(jnp.float32)
+        nb = kf.shape[0] // page
+        kb = kf.reshape(nb, page, kf.shape[-2], kf.shape[-1])
+        vb = vf.reshape(nb, page, vf.shape[-2], vf.shape[-1])
+        pk, sk = _kv_encode_planes(kb, self.group, self.k)
+        pv, sv = _kv_encode_planes(vb, self.group, self.k)
+        ids = jnp.asarray(page_ids, jnp.int32)
+
+        # exact tail: the block window starting at packed_end(real_len).
+        # When real_len == L_b the clamped window copies garbage that the
+        # zero tail-valid count masks until appends overwrite it.
+        start = self.packed_end(jnp.asarray(real_len, jnp.int32))
+        tdt = self.tail_k.dtype
+        tk = jax.lax.dynamic_slice_in_dim(kf, start, page, axis=0).astype(tdt)
+        tv = jax.lax.dynamic_slice_in_dim(vf, start, page, axis=0).astype(tdt)
+        upd = jax.lax.dynamic_update_slice_in_dim
+        return dataclasses.replace(
+            self,
+            k_pages=self.k_pages.at[ids].set(pk),
+            k_page_scales=self.k_page_scales.at[ids].set(sk),
+            v_pages=self.v_pages.at[ids].set(pv),
+            v_page_scales=self.v_page_scales.at[ids].set(sv),
+            tail_k=upd(self.tail_k, tk[None], slot, axis=0),
+            tail_v=upd(self.tail_v, tv[None], slot, axis=0),
+        )
+
+    def __repr__(self) -> str:
+        return (
+            f"PagedKV(pages={self.n_pages}, page={self.page}, "
+            f"slots={tuple(self.tail_k.shape)}, dtype={self.dtype}, "
+            f"group={self.group}, k={self.k})"
+        )
+
+
+_PAGED_KV_CHILDREN = (
+    "k_pages", "k_page_scales", "v_pages", "v_page_scales",
+    "tail_k", "tail_v", "page_table", "write_page",
+)
+
+
+def _paged_kv_flatten_with_keys(p: PagedKV):
+    children = tuple(
+        (jax.tree_util.DictKey(n), getattr(p, n)) for n in _PAGED_KV_CHILDREN
+    )
+    aux = (p.page, p.group, p.k, p.dtype)
+    return children, aux
+
+
+def _paged_kv_unflatten(aux, children):
+    page, group, k, dtype = aux
+    kwargs = dict(zip(_PAGED_KV_CHILDREN, children))
+    return PagedKV(page=page, group=group, k=k, dtype=dtype, **kwargs)
+
+
+jax.tree_util.register_pytree_with_keys(
+    PagedKV,
+    _paged_kv_flatten_with_keys,
+    lambda aux, xs: _paged_kv_unflatten(aux, xs),
+)
+
+
+def is_paged_kv(leaf: Any) -> bool:
+    return isinstance(leaf, PagedKV)
+
+
+# ---------------------------------------------------------------------------
 # Pulse geometry: layout -> canonical symbol orders (entropy coding + stats)
 # ---------------------------------------------------------------------------
 

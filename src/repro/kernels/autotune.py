@@ -564,3 +564,28 @@ def tune_shapes(
             m, k, n, group=group, dtype=dtype, reps=reps, interpret=interpret
         )
     return out
+
+
+def tune_attn_shapes(
+    shapes: Iterable[Tuple[int, int, int]],
+    *,
+    group: int = 32,
+    dtype=jnp.int8,
+    interpret: Optional[bool] = None,
+) -> Dict[str, dict]:
+    """Pre-tune a batch of ``(m, hd, s)`` decode-attention shapes.
+
+    The continuous-batching engine keys its kernel-v4 dispatch on the
+    SLOT-POOL geometry, not the per-request one: ``m`` is query rows per kv
+    head and ``s`` the pool extent ``max_pages_per_slot * page`` — every
+    decode step of the engine hits the same (m, hd, s) entry regardless of
+    how many requests are in flight.  Returns key->entry like
+    :func:`tune_shapes`.
+    """
+    out = {}
+    backend = jax.default_backend()
+    for m, hd, s in shapes:
+        out[attn_cache_key(m, hd, s, group, dtype, backend)] = autotune_attn(
+            m, hd, s, group=group, dtype=dtype, interpret=interpret
+        )
+    return out

@@ -294,10 +294,14 @@ def pvq_attn_decode(
     planes (kernel v4, ``pvq_attn_q``).
 
     ``q``: (b, q_len, n_heads, hd) float queries; ``kv``: a
-    ``repro.core.packed.PackedKV``; ``kv_len``: (b,) int32 count of *packed*
-    positions valid per batch row (the caller clamps to
-    ``min(packed_end(filled), length)`` — the f32 tail block is the caller's
-    exact side leg, merged via logsumexp).
+    ``repro.core.packed.PackedKV`` — or a ``PagedKV`` slot-pool, which is
+    gathered through its page table into the slot-major ``PackedKV`` view
+    right here at the dispatch boundary (a fused paged kernel would consume
+    the page table directly; until then the gather lives next to the kernel
+    it feeds).  ``kv_len``: (b,) int32 count of *packed* positions valid per
+    batch row (the caller clamps to ``min(packed_end(filled), length)`` —
+    the f32 tail block is the caller's exact side leg, merged via
+    logsumexp).
 
     Queries are quantized to per-row symmetric int8 here; the kernel
     contracts int8 q x int8 K pulses and int8 probs x int8 V pulses on the
@@ -312,8 +316,11 @@ def pvq_attn_decode(
     ``nn.attention``.  Rows with ``kv_len == 0`` come back with ``l == 0``
     (tail-only merge stays exact).
     """
+    from repro.core.packed import is_paged_kv
     from repro.core.quantize import ActQuant, quantize_activations
 
+    if is_paged_kv(kv):
+        kv = kv.gather()
     if interpret is None:
         interpret = not _on_tpu()
     b, q_len, n_heads, hd = q.shape

@@ -1,0 +1,559 @@
+"""Continuous-batching serve engine over the PVQ-packed artifact.
+
+The fixed-batch ``serve.generate`` loop decodes a lockstep batch: every
+sequence starts together, ends together, and a short request pays for the
+longest one.  This engine serves a fixed pool of ``n_slots`` decode slots
+that sequences join and leave **mid-flight**, with the PVQ-compressed KV
+cache paged through a shared physical pool:
+
+admission -> batcher -> page table -> prefill/decode steps
+
+* **Admission** — an asyncio feeder releases :class:`Request`s into the
+  pending queue at their (Poisson) arrival times; :meth:`PVQEngine.run`'s
+  loop admits from the queue head whenever a slot AND the prompt's full
+  pages are available (backpressure is simply "the queue waits").
+* **Paged KV** — each attention layer's cache is a
+  :class:`core.packed.PagedKV`: PVQ-encoded blocks live in a pool of
+  physical pages with **page size = kv block size**, so a page is exactly
+  one PVQ encode unit and stays packed at rest (int8 pulse planes +
+  per-group rho; an allocator move is an int8 byte move, never a
+  re-encode).  The host-side :class:`PageAllocator` owns the free list;
+  the device sees only the ``page_table``/``write_page`` arrays refreshed
+  every step.
+* **Prefill/decode disaggregation** — prompts run through a separately
+  compiled prefill step (``model.prefill_bucketed``, prompt length padded
+  to a page-multiple bucket so compile count is bounded by buckets, and
+  with a DENSE cache via ``kv_quant_scope(None)``), then the prefilled KV
+  is **grafted** into the slot pool: complete blocks are PVQ-encoded
+  straight into allocator-assigned pages (bit-identical to the
+  ``PackedKV.from_dense`` encode the fixed-batch path uses) and the exact
+  partial tail block lands in the slot's f32 tail ring.  Decode then runs
+  one engine-static compiled step over the whole slot pool with per-slot
+  positions.
+* **Eviction** — when a decode step needs more pages than the pool has
+  free, the youngest active sequence is evicted: its pages return to the
+  pool and the request is requeued at the queue head with its
+  prompt + generated-so-far as the new prefill context (generated tokens
+  are kept; re-admission re-prefills them teacher-forced).
+* **Per-sequence stopping** — each slot retires on its own EOS or
+  ``max_new_tokens``; a finished slot frees its pages and stops consuming
+  batch capacity immediately.
+
+The decode step is **engine-static**: shapes depend only on
+``(n_slots, n_pages, max_pages)``, never on which sequences are resident,
+so the whole run compiles ONE decode step (plus one prefill/graft pair per
+prompt bucket).  ``trace_counts`` records actual traces for the
+compile-count regression tests.
+"""
+
+from __future__ import annotations
+
+import asyncio
+import dataclasses
+import time
+from collections import deque
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.packed import is_paged_kv
+from repro.core.quantize import default_kv_quant, kv_quant_scope
+
+
+def bucket_len(n: int, multiple: int) -> int:
+    """Round ``n`` up to a positive multiple — the static-shape buckets
+    that keep XLA compile counts bounded (shared by the engine's prefill
+    and by ``serve.generate``'s cache-length bucketing)."""
+    m = max(int(multiple), 1)
+    return max(m, -(-int(n) // m) * m)
+
+
+# ---------------------------------------------------------------------------
+# Host-side page allocator
+# ---------------------------------------------------------------------------
+
+
+class PageAllocator:
+    """Free-list allocator over the physical KV page pool.
+
+    Page ids are ``0 .. n_pages-1``; id ``n_pages`` is the device-side
+    *trash page* (masked scatter target / unallocated page-table entries)
+    and is never handed out.  Double frees and trash frees raise — the
+    tests lean on this to prove no page is ever owned by two sequences.
+    """
+
+    def __init__(self, n_pages: int):
+        if n_pages < 1:
+            raise ValueError(f"need at least one page, got {n_pages}")
+        self.n_pages = int(n_pages)
+        self._free: List[int] = list(range(self.n_pages - 1, -1, -1))
+        self._used: set = set()
+
+    @property
+    def trash(self) -> int:
+        return self.n_pages
+
+    @property
+    def available(self) -> int:
+        return len(self._free)
+
+    @property
+    def used(self) -> int:
+        return len(self._used)
+
+    def alloc(self) -> Optional[int]:
+        if not self._free:
+            return None
+        pid = self._free.pop()
+        self._used.add(pid)
+        return pid
+
+    def alloc_many(self, n: int) -> Optional[List[int]]:
+        if len(self._free) < n:
+            return None
+        return [self.alloc() for _ in range(n)]
+
+    def free(self, ids: Sequence[int]) -> None:
+        for pid in ids:
+            pid = int(pid)
+            if pid == self.trash:
+                raise ValueError("freeing the trash page")
+            if pid not in self._used:
+                raise ValueError(f"double free of page {pid}")
+            self._used.discard(pid)
+            self._free.append(pid)
+
+
+# ---------------------------------------------------------------------------
+# Requests and traces
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request plus its engine-owned progress/timing state.
+
+    After an eviction ``generated`` keeps everything produced so far; the
+    re-admission prefills ``prompt + generated[:-1]`` and resumes decoding
+    with ``generated[-1]`` as the pending input token, so eviction never
+    loses or re-samples a token."""
+
+    rid: int
+    prompt: List[int]
+    max_new_tokens: int
+    eos_id: Optional[int] = None
+    arrival: float = 0.0  # seconds offset within the trace
+    generated: List[int] = dataclasses.field(default_factory=list)
+    submit_t: Optional[float] = None
+    first_token_t: Optional[float] = None
+    finish_t: Optional[float] = None
+    evictions: int = 0
+
+    @property
+    def done(self) -> bool:
+        if len(self.generated) >= self.max_new_tokens:
+            return True
+        return (
+            bool(self.generated)
+            and self.eos_id is not None
+            and self.generated[-1] == self.eos_id
+        )
+
+
+def poisson_trace(
+    n_requests: int,
+    *,
+    rate: float,
+    vocab: int,
+    prompt_lens: Tuple[int, int] = (8, 24),
+    max_new: int = 16,
+    eos_id: Optional[int] = None,
+    seed: int = 0,
+) -> List[Request]:
+    """Poisson request trace: exponential inter-arrival gaps at ``rate``
+    requests/second and uniformly random prompt lengths in
+    ``prompt_lens = (lo, hi)``.  ``rate=inf`` (or 0) puts every arrival at
+    t=0 — the saturate-then-drain pattern the CI smoke uses."""
+    rng = np.random.default_rng(seed)
+    lo, hi = prompt_lens
+    t = 0.0
+    out = []
+    for rid in range(n_requests):
+        if rate and np.isfinite(rate) and rate > 0:
+            t += float(rng.exponential(1.0 / rate))
+        plen = int(rng.integers(lo, hi + 1))
+        out.append(
+            Request(
+                rid=rid,
+                prompt=[int(x) for x in rng.integers(0, vocab, plen)],
+                max_new_tokens=int(max_new),
+                eos_id=eos_id,
+                arrival=t,
+            )
+        )
+    return out
+
+
+@dataclasses.dataclass
+class _Slot:
+    req: Request
+    length: int  # cache rows currently filled for this slot
+    pages: List[int]  # physical pages owned (in logical-block order)
+    admit_order: int
+
+
+# ---------------------------------------------------------------------------
+# The engine
+# ---------------------------------------------------------------------------
+
+
+class PVQEngine:
+    """Continuous-batching decode over a paged, PVQ-compressed KV cache.
+
+    Requires an active process-wide ``KVQuant`` default (pages ARE the PVQ
+    kv blocks) — the same switch the fixed-batch ``serve --kv-pvq`` path
+    uses, so both paths share kernels, encode, and autotune entries.
+
+    Slot invariant: an active slot holds ``length`` cache rows
+    (= prompt + all generated tokens except the newest), and the next
+    decode step feeds ``req.generated[-1]`` at position ``length``.
+    """
+
+    def __init__(
+        self,
+        model,
+        params,
+        *,
+        n_slots: int = 4,
+        max_len: int = 128,
+        n_pages: Optional[int] = None,
+    ):
+        kvq = default_kv_quant()
+        if kvq is None:
+            raise ValueError(
+                "PVQEngine pages the PVQ-compressed cache: set a process-wide "
+                "KVQuant first (set_default_kv_quant / kv_quant_scope)"
+            )
+        self.page = int(kvq.block)
+        if self.page < 2:
+            raise ValueError("page (= kv block) must be >= 2")
+        self.model = model
+        self.params = params
+        self.n_slots = int(n_slots)
+        self.max_pages = bucket_len(max_len, self.page) // self.page
+        full = self.n_slots * self.max_pages
+        self.n_pages = int(n_pages) if n_pages else full
+        if self.n_pages < self.max_pages:
+            # a lone sequence must always be able to run to max_len, or
+            # eviction could never free enough pages to make progress
+            raise ValueError(
+                f"n_pages={self.n_pages} < max_pages={self.max_pages}: "
+                "one full-length sequence must fit the pool"
+            )
+        self.alloc = PageAllocator(self.n_pages)
+        self.cache = model.init_paged_cache(self.n_slots, self.n_pages, self.max_pages)
+        self.slots: List[Optional[_Slot]] = [None] * self.n_slots
+        self._page_table = np.full(
+            (self.n_slots, self.max_pages), self.alloc.trash, np.int32
+        )
+        self._admit_seq = 0
+        self.pending: deque = deque()
+        self.finished: List[Request] = []
+        self.trace_counts: Dict[str, int] = {"decode": 0, "prefill": 0, "graft": 0}
+        self.stats: Dict[str, int] = {
+            "steps": 0, "active_slot_steps": 0, "evictions": 0, "decode_tokens": 0,
+        }
+        self._decode = jax.jit(self._decode_fn)
+        self._prefill = jax.jit(self._prefill_fn)
+        self._graft = jax.jit(self._graft_fn)
+
+    # ------------------------------------------------------------- capacity
+
+    @property
+    def capacity_tokens(self) -> int:
+        return self.max_pages * self.page
+
+    def validate(self, req: Request) -> None:
+        need = len(req.prompt) + req.max_new_tokens
+        if len(req.prompt) < 1:
+            raise ValueError(f"request {req.rid}: empty prompt")
+        if need > self.capacity_tokens:
+            raise ValueError(
+                f"request {req.rid}: prompt+max_new={need} exceeds per-slot "
+                f"capacity {self.capacity_tokens} (= max_pages * page)"
+            )
+
+    # --------------------------------------------------------- device steps
+
+    def _decode_fn(self, params, cache, tokens, pos, page_table, write_page):
+        # trace-time side effect: counts actual XLA traces, not calls
+        self.trace_counts["decode"] += 1
+        cache = jax.tree.map(
+            lambda c: c.with_tables(page_table, write_page) if is_paged_kv(c) else c,
+            cache,
+            is_leaf=is_paged_kv,
+        )
+        logits, cache = self.model.decode_step(params, cache, tokens, pos)
+        return jnp.argmax(logits[:, -1, :], -1).astype(jnp.int32), cache
+
+    def _prefill_fn(self, params, tokens, real_len):
+        self.trace_counts["prefill"] += 1
+        logits, caches = self.model.prefill_bucketed(
+            params, {"tokens": tokens}, real_len
+        )
+        return jnp.argmax(logits[:, -1, :], -1).astype(jnp.int32), caches
+
+    def _graft_fn(self, cache, pre, slot, page_ids, real_len):
+        self.trace_counts["graft"] += 1
+
+        def walk(c, p):
+            if is_paged_kv(c):
+                return c.graft(p["k"], p["v"], slot, page_ids, real_len)
+            if isinstance(c, dict):
+                return {key: walk(v, p[key]) for key, v in c.items()}
+            return c
+
+        return walk(cache, pre)
+
+    # ------------------------------------------------------------ admission
+
+    def _free_slot(self) -> Optional[int]:
+        for s, st in enumerate(self.slots):
+            if st is None:
+                return s
+        return None
+
+    def try_admit(self, req: Request, t_now: Optional[float] = None) -> bool:
+        """Admit one request if a slot and its prompt's full pages are
+        available.  Runs the bucketed prefill (dense cache via
+        ``kv_quant_scope(None)`` — the graft does the PVQ encode) and
+        grafts the result into the slot pool."""
+        self.validate(req)
+        if req.generated:
+            # re-admission after eviction: the last generated token is the
+            # pending decode input, everything before it is prefill context
+            ctx = list(req.prompt) + req.generated[:-1]
+        else:
+            ctx = list(req.prompt)
+        plen = len(ctx)
+        n_full = plen // self.page
+        slot = self._free_slot()
+        if slot is None or self.alloc.available < n_full:
+            return False
+        if req.submit_t is None:
+            req.submit_t = time.perf_counter() if t_now is None else t_now
+
+        lb = bucket_len(plen, self.page)
+        toks = np.zeros((1, lb), np.int32)
+        toks[0, :plen] = np.asarray(ctx, np.int32)
+        with kv_quant_scope(None):
+            tok0, pre = self._prefill(self.params, toks, np.int32(plen))
+
+        ids = self.alloc.alloc_many(n_full) or []
+        page_ids = np.full((lb // self.page,), self.alloc.trash, np.int32)
+        page_ids[: len(ids)] = ids
+        self.cache = self._graft(
+            self.cache, pre, np.int32(slot), page_ids, np.int32(plen)
+        )
+        if not req.generated:
+            req.generated.append(int(tok0[0]))
+            req.first_token_t = time.perf_counter()
+        if req.done:
+            # prefill alone satisfied the request (max_new == 1 / instant
+            # EOS): never occupies a slot
+            self.alloc.free(ids)
+            self._finish(req)
+            return True
+        self.slots[slot] = _Slot(
+            req=req, length=plen, pages=list(ids), admit_order=self._admit_seq
+        )
+        self._admit_seq += 1
+        self._page_table[slot, :] = self.alloc.trash
+        self._page_table[slot, :n_full] = ids
+        return True
+
+    def admit_pending(self, t_now: Optional[float] = None) -> int:
+        """Admit from the queue head until blocked (FIFO — no request can
+        starve behind a later, smaller one)."""
+        admitted = 0
+        while self.pending and self.try_admit(self.pending[0], t_now):
+            self.pending.popleft()
+            admitted += 1
+        return admitted
+
+    # ----------------------------------------------------- retire and evict
+
+    def _finish(self, req: Request) -> None:
+        req.finish_t = time.perf_counter()
+        self.finished.append(req)
+
+    def _release(self, s: int) -> _Slot:
+        st = self.slots[s]
+        assert st is not None
+        if st.pages:
+            self.alloc.free(st.pages)
+        self._page_table[s, :] = self.alloc.trash
+        self.slots[s] = None
+        return st
+
+    def _retire(self, s: int) -> None:
+        self._finish(self._release(s).req)
+
+    def _evict(self, s: int) -> None:
+        st = self._release(s)
+        st.req.evictions += 1
+        self.stats["evictions"] += 1
+        # queue head: the victim resumes as soon as pages free up
+        self.pending.appendleft(st.req)
+
+    # ----------------------------------------------------------- decode step
+
+    def step(self) -> int:
+        """One decode step over every active slot.  Returns the number of
+        tokens generated (0 when idle).
+
+        Slots completing a PVQ block this step get their destination page
+        pre-assigned (``write_page``); if the pool can't cover every
+        completing slot, the youngest active sequence is evicted until it
+        can (guaranteed to terminate: a lone sequence never needs more
+        than ``max_pages`` <= ``n_pages``)."""
+        while True:
+            active = [(s, st) for s, st in enumerate(self.slots) if st is not None]
+            if not active:
+                return 0
+            needed = sum(
+                1 for _, st in active if (st.length + 1) % self.page == 0
+            )
+            if needed <= self.alloc.available:
+                break
+            victim = max(active, key=lambda t: t[1].admit_order)[0]
+            self._evict(victim)
+
+        tokens = np.zeros((self.n_slots, 1), np.int32)
+        pos = np.zeros((self.n_slots,), np.int32)
+        write_page = np.full((self.n_slots,), self.alloc.trash, np.int32)
+        for s, st in active:
+            tokens[s, 0] = st.req.generated[-1]
+            pos[s] = st.length
+            if (st.length + 1) % self.page == 0:
+                pid = self.alloc.alloc()
+                assert pid is not None  # reserved above
+                st.pages.append(pid)
+                self._page_table[s, st.length // self.page] = pid
+                write_page[s] = pid
+
+        tok_ids, self.cache = self._decode(
+            self.params, self.cache, tokens, pos,
+            self._page_table.copy(), write_page,
+        )
+        tok_host = np.asarray(jax.device_get(tok_ids))
+        self.stats["steps"] += 1
+        self.stats["active_slot_steps"] += len(active)
+        self.stats["decode_tokens"] += len(active)
+        for s, st in active:
+            st.length += 1
+            st.req.generated.append(int(tok_host[s]))
+            if st.req.done:
+                self._retire(s)
+        return len(active)
+
+    # --------------------------------------------------------------- warmup
+
+    def warmup(self, prompt_lens: Sequence[int] = ()) -> None:
+        """Compile the decode step and every prefill/graft bucket before
+        the timed run (slots must be idle; the dummy graft's writes all
+        target the trash page / a tail ring the real graft overwrites)."""
+        assert all(st is None for st in self.slots), "warmup needs an idle engine"
+        for lb in sorted({bucket_len(max(int(p), 1), self.page) for p in prompt_lens}):
+            toks = np.zeros((1, lb), np.int32)
+            with kv_quant_scope(None):
+                _, pre = self._prefill(self.params, toks, np.int32(1))
+            ids = np.full((lb // self.page,), self.alloc.trash, np.int32)
+            self.cache = self._graft(
+                self.cache, pre, np.int32(0), ids, np.int32(1)
+            )
+        tokens = np.zeros((self.n_slots, 1), np.int32)
+        pos = np.zeros((self.n_slots,), np.int32)
+        wp = np.full((self.n_slots,), self.alloc.trash, np.int32)
+        _, self.cache = self._decode(
+            self.params, self.cache, tokens, pos, self._page_table.copy(), wp
+        )
+
+    # ------------------------------------------------------------- run loop
+
+    async def _feed(self, trace: List[Request], t0: float, time_scale: float):
+        loop = asyncio.get_running_loop()
+        for req in sorted(trace, key=lambda r: r.arrival):
+            delay = (t0 + req.arrival * time_scale) - loop.time()
+            if delay > 0:
+                await asyncio.sleep(delay)
+            req.submit_t = time.perf_counter()
+            self.pending.append(req)
+
+    async def _run_async(self, trace: List[Request], time_scale: float):
+        for req in trace:
+            self.validate(req)
+        t_start = time.perf_counter()
+        loop = asyncio.get_running_loop()
+        feeder = asyncio.create_task(self._feed(trace, loop.time(), time_scale))
+        try:
+            while True:
+                self.admit_pending()
+                n = self.step()
+                if n:
+                    await asyncio.sleep(0)  # yield to the arrival feeder
+                elif feeder.done() and not self.pending:
+                    break
+                else:
+                    await asyncio.sleep(0.0005)  # idle: wait for arrivals
+        finally:
+            await feeder
+        return self.report(time.perf_counter() - t_start)
+
+    def run(self, trace: Sequence[Request], *, time_scale: float = 1.0) -> Dict[str, Any]:
+        """Serve a trace to completion; returns the metrics report.
+        ``time_scale`` compresses/stretches the trace's arrival times."""
+        return asyncio.run(self._run_async(list(trace), time_scale))
+
+    # -------------------------------------------------------------- metrics
+
+    def report(self, wall_s: float) -> Dict[str, Any]:
+        done = self.finished
+        toks = sum(len(r.generated) for r in done)
+        lat = [
+            r.finish_t - r.submit_t
+            for r in done
+            if r.finish_t is not None and r.submit_t is not None
+        ]
+        ttft = [
+            r.first_token_t - r.submit_t
+            for r in done
+            if r.first_token_t is not None and r.submit_t is not None
+        ]
+
+        def pct(xs, q):
+            return float(np.percentile(np.asarray(xs), q)) if xs else 0.0
+
+        steps = max(self.stats["steps"], 1)
+        return {
+            "requests": len(done),
+            "generated_tokens": toks,
+            "wall_s": round(wall_s, 4),
+            "tokens_per_s": round(toks / max(wall_s, 1e-9), 2),
+            "latency_p50_s": round(pct(lat, 50), 4),
+            "latency_p99_s": round(pct(lat, 99), 4),
+            "ttft_p50_s": round(pct(ttft, 50), 4),
+            "ttft_p99_s": round(pct(ttft, 99), 4),
+            "slot_utilization": round(
+                self.stats["active_slot_steps"] / (steps * self.n_slots), 4
+            ),
+            "evictions": self.stats["evictions"],
+            "decode_steps": self.stats["steps"],
+            "n_slots": self.n_slots,
+            "n_pages": self.n_pages,
+            "page": self.page,
+            "trace_counts": dict(self.trace_counts),
+            "outputs": {r.rid: list(r.generated) for r in done},
+        }

@@ -42,14 +42,52 @@ from __future__ import annotations
 import argparse
 import json
 import time
+import weakref
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import get_config
 from repro.core.packed import expert_leaves, packed_stats, quantize_params
 from repro.core.quantize import QuantPolicy, quantize_tree, total_bits
+from repro.launch.engine import bucket_len
 from repro.nn.models import build_model
+
+# Actual XLA trace counts of the shared decode step (incremented by a
+# Python side effect that only runs while tracing).  The regression tests
+# read this to prove cache-length bucketing + the shared jit keep
+# generate() from recompiling per (batch, cache_len).
+TRACE_COUNTS: dict = {"decode_step": 0}
+_STEP_JITS: "weakref.WeakKeyDictionary" = weakref.WeakKeyDictionary()
+
+
+def _jit_step(model):
+    """One shared jitted ``decode_step`` per Model.
+
+    The old pattern — a fresh ``jax.jit(model.decode_step)`` inside every
+    ``generate()`` call — gave each call its own empty compile cache, so
+    EVERY call retraced (and every distinct ``(batch, cache_len)`` pair
+    recompiled even across a shared wrapper).  One wrapper per model plus
+    kv-block cache-length bucketing bounds compiles by shape buckets."""
+    fn = _STEP_JITS.get(model)
+    if fn is None:
+        def counted_step(params, cache, tok, pos):
+            TRACE_COUNTS["decode_step"] += 1
+            return model.decode_step(params, cache, tok, pos)
+
+        fn = jax.jit(counted_step)
+        _STEP_JITS[model] = fn
+    return fn
+
+
+def _decode_bucket() -> int:
+    """Cache-length bucket: the active KVQuant block (packed planes must
+    cover whole blocks anyway) or 32 for dense caches."""
+    from repro.core.quantize import default_kv_quant
+
+    kvq = default_kv_quant()
+    return int(kvq.block) if kvq else 32
 
 
 def _expert_report(params) -> dict:
@@ -68,7 +106,12 @@ def _expert_report(params) -> dict:
 
 
 def generate(model, params, tokens, *, gen: int, cache_len: int, extra_batch=None):
-    """Greedy decode. tokens: (b, s) prompt. Returns (b, s+gen)."""
+    """Greedy decode. tokens: (b, s) prompt. Returns (b, s+gen).
+
+    ``cache_len`` is rounded up to the kv-block bucket so nearby lengths
+    share one compiled decode step (positions past the true length stay
+    behind the attention length mask)."""
+    cache_len = bucket_len(cache_len, _decode_bucket())
     batch = {"tokens": tokens}
     if extra_batch:
         batch.update(extra_batch)
@@ -76,7 +119,7 @@ def generate(model, params, tokens, *, gen: int, cache_len: int, extra_batch=Non
     out = [tokens]
     tok = jnp.argmax(logits[:, -1, :], -1)[:, None].astype(jnp.int32)
 
-    step = jax.jit(model.decode_step)
+    step = _jit_step(model)
     pos0 = tokens.shape[1]
     for i in range(gen):
         out.append(tok)
@@ -95,9 +138,10 @@ def teacher_forced_logits(
     batch = {"tokens": seq[:, :prompt_len]}
     if extra_batch:
         batch.update(extra_batch)
-    logits, cache = model.prefill(params, batch, cache_len=seq.shape[1])
+    cache_len = bucket_len(seq.shape[1], _decode_bucket())
+    logits, cache = model.prefill(params, batch, cache_len=cache_len)
     steps = [logits[:, -1, :]]
-    step = jax.jit(model.decode_step)
+    step = _jit_step(model)
     for i in range(seq.shape[1] - prompt_len - 1):
         tok = seq[:, prompt_len + i : prompt_len + i + 1]
         logits, cache = step(params, cache, tok, jnp.int32(prompt_len + i))
@@ -142,6 +186,45 @@ def top1_agreement(logits_a, logits_b) -> dict:
         "top1_agreement": float(jnp.mean(agree.astype(jnp.float32))),
         "top1_agreement_strict": float(jnp.mean(strict.astype(jnp.float32))),
         "ties_excused": int(jnp.sum((agree & ~strict).astype(jnp.int32))),
+    }
+
+
+def engine_token_agreement(model, params, requests, outputs) -> dict:
+    """Token-level agreement of the continuous-batching engine against the
+    fixed-batch decode oracle.
+
+    For every request, the engine's full output sequence is teacher-forced
+    through the fixed-batch path (prefill + lockstep ``decode_step``, same
+    quantized contracts) and each engine token is compared against the
+    oracle's argmax *given the identical context* — no free-running
+    cascade, so one near-tie flip can't rewrite a suffix.  A disagreeing
+    token is excused only when the oracle itself calls it a near-tie (its
+    margin over the engine's pick is under 5% of the logits' spread —
+    the ``top1_agreement`` tie rule with the oracle as its own reference).
+    """
+    agree = total = excused = 0
+    for req in requests:
+        gen = outputs.get(req.rid)
+        if not gen:
+            continue
+        seq = jnp.asarray([list(req.prompt) + list(gen)], jnp.int32)
+        lg = teacher_forced_logits(model, params, seq, prompt_len=len(req.prompt))
+        lg = jnp.asarray(lg[0], jnp.float32)  # (len(gen), vocab)
+        oracle = np.asarray(jnp.argmax(lg, -1))
+        toks = np.asarray(gen)
+        match = oracle == toks
+        margin = np.asarray(
+            jnp.take_along_axis(lg, jnp.asarray(oracle)[:, None], -1)[:, 0]
+            - jnp.take_along_axis(lg, jnp.asarray(toks)[:, None], -1)[:, 0]
+        )
+        tie = margin <= 0.05 * np.asarray(jnp.std(lg, axis=-1))
+        agree += int(np.sum(match | tie))
+        excused += int(np.sum(~match & tie))
+        total += len(gen)
+    return {
+        "engine_token_agreement": agree / max(total, 1),
+        "engine_tokens_compared": total,
+        "engine_ties_excused": excused,
     }
 
 
@@ -218,6 +301,29 @@ def main() -> int:
         "on the f32 reference path (f32 activations, dense f32 KV cache) "
         "and exit 1 if greedy top-1 token agreement < T",
     )
+    ap.add_argument(
+        "--engine",
+        action="store_true",
+        help="serve a Poisson request trace through the continuous-batching "
+        "engine (launch.engine): paged PVQ KV cache, async admission, "
+        "prefill/decode disaggregation; requires --kv-pvq (pages are PVQ "
+        "blocks).  Also times the fixed-batch generate() loop run "
+        "sequentially over the same trace for the speedup report",
+    )
+    ap.add_argument("--engine-slots", type=int, default=4,
+                    help="with --engine: decode slot-pool size")
+    ap.add_argument("--engine-pages", type=int, default=None,
+                    help="with --engine: physical KV pages (default: fully "
+                    "provisioned slots*max_pages; smaller oversubscribes "
+                    "and exercises eviction)")
+    ap.add_argument("--requests", type=int, default=16,
+                    help="with --engine: trace length")
+    ap.add_argument("--rate", type=float, default=0.0,
+                    help="with --engine: Poisson arrival rate (req/s); "
+                    "0/inf = all arrive at t=0 (saturate-then-drain)")
+    ap.add_argument("--min-speedup", type=float, default=None, metavar="S",
+                    help="with --engine: exit 1 if engine tokens/s is not "
+                    "at least S x the sequential fixed-batch baseline")
     ap.add_argument("--n-over-k", type=float, default=1.0)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument(
@@ -234,6 +340,9 @@ def main() -> int:
     if args.agreement_min is not None and not (args.act_int8 or args.kv_pvq):
         ap.error("--agreement-min compares a quantized path against the f32 "
                  "reference; it requires --act-int8 and/or --kv-pvq")
+    if args.engine and not args.kv_pvq:
+        ap.error("--engine pages the PVQ-compressed KV cache (page = kv "
+                 "block); it requires --kv-pvq")
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -260,6 +369,13 @@ def main() -> int:
             (args.batch, d_ff, d_model),
             (args.batch * args.prompt_len, d_model, d_ff),
         }
+        if args.engine:
+            # slot-pool decode GEMMs: m is the engine's fixed slot count
+            shapes |= {
+                (args.engine_slots, d_model, d_model),
+                (args.engine_slots, d_model, d_ff),
+                (args.engine_slots, d_ff, d_model),
+            }
         if cfg.moe is not None:
             # per-expert dispatch-buffer GEMMs (m = groups * capacity): the
             # batched expert matmul keys its shared tiles on exactly these
@@ -297,6 +413,17 @@ def main() -> int:
             tuned[f"attn{m_q}x{hd}x{s_planes}:int8"] = {
                 kk: ea[kk] for kk in ("bs", "us")
             }
+            if args.engine:
+                # engine decode shapes are keyed on the slot-pool geometry:
+                # the gathered plane extent is always max_pages * page,
+                # independent of which sequences are resident
+                s_pool = bucket_len(args.prompt_len + args.gen, blk)
+                for ent in autotune.tune_attn_shapes(
+                    [(m_q, hd, s_pool)], group=g, dtype=jnp.int8
+                ).values():
+                    tuned[f"attn{m_q}x{hd}x{s_pool}:int8:engine"] = {
+                        kk: ent[kk] for kk in ("bs", "us")
+                    }
         report["tuned_tiles"] = tuned
         report["tune_cache"] = str(autotune.cache_path())
     if args.artifact:
@@ -378,6 +505,68 @@ def main() -> int:
             )
             print(json.dumps(report))
             return 1
+
+    if args.engine:
+        from repro.launch.engine import PVQEngine, poisson_trace
+
+        max_len = bucket_len(args.prompt_len + args.gen, args.kv_block)
+        trace = poisson_trace(
+            args.requests, rate=args.rate, vocab=cfg.vocab_size,
+            prompt_lens=(max(args.prompt_len // 2, 1), args.prompt_len),
+            max_new=args.gen, seed=args.seed + 2,
+        )
+        eng = PVQEngine(
+            model, params, n_slots=args.engine_slots, max_len=max_len,
+            n_pages=args.engine_pages,
+        )
+        eng.warmup(prompt_lens=[len(r.prompt) for r in trace])
+        res = eng.run(trace)
+        outputs = res.pop("outputs")
+        report["arch"] = cfg.name
+        report.update({f"engine_{k}": v for k, v in res.items()})
+
+        # baseline: the fixed-batch generate() loop run SEQUENTIALLY over
+        # the same trace (one request at a time — what serving without
+        # continuous batching degenerates to under ragged arrivals).
+        # Warm its compile buckets first so both legs time steady state.
+        prompts = {
+            r.rid: jnp.asarray([r.prompt], jnp.int32) for r in trace
+        }
+        for r in trace[:1]:
+            generate(model, params, prompts[r.rid], gen=args.gen,
+                     cache_len=len(r.prompt) + args.gen)
+        t0 = time.time()
+        base_tokens = 0
+        for r in trace:
+            out = generate(model, params, prompts[r.rid], gen=args.gen,
+                           cache_len=len(r.prompt) + args.gen)
+            base_tokens += out.shape[1] - len(r.prompt)
+        base_dt = time.time() - t0
+        report["baseline_tokens_per_s"] = round(base_tokens / max(base_dt, 1e-9), 2)
+        report["baseline_wall_s"] = round(base_dt, 2)
+        speedup = res["tokens_per_s"] / max(report["baseline_tokens_per_s"], 1e-9)
+        report["engine_speedup_vs_fixed_batch"] = round(speedup, 3)
+
+        if args.agreement_min is not None:
+            ag = engine_token_agreement(model, params, trace, outputs)
+            report["engine_token_agreement"] = round(ag["engine_token_agreement"], 4)
+            report["engine_tokens_compared"] = ag["engine_tokens_compared"]
+            report["engine_ties_excused"] = ag["engine_ties_excused"]
+            if ag["engine_token_agreement"] < args.agreement_min:
+                report["agreement_fail"] = (
+                    f"engine token agreement {ag['engine_token_agreement']:.4f}"
+                    f" < required {args.agreement_min}"
+                )
+                print(json.dumps(report))
+                return 1
+        if args.min_speedup is not None and speedup < args.min_speedup:
+            report["speedup_fail"] = (
+                f"engine speedup {speedup:.3f}x < required {args.min_speedup}x"
+            )
+            print(json.dumps(report))
+            return 1
+        print(json.dumps(report))
+        return 0
 
     key = jax.random.PRNGKey(args.seed + 1)
     tokens = jax.random.randint(key, (args.batch, args.prompt_len), 0, cfg.vocab_size)

@@ -278,11 +278,11 @@ def decode_attention(
 
 def decode_attention_packed(
     q: jax.Array,  # (b, sq, h, hd) float queries
-    kv,  # core.packed.PackedKV
+    kv,  # core.packed.PackedKV | core.packed.PagedKV
     *,
     scale: float,
     length: jax.Array,  # (b,) int: valid cache rows per batch (ragged mask)
-    filled: Optional[jax.Array] = None,  # scalar int: physical fill count
+    filled: Optional[jax.Array] = None,  # scalar | (b,) int: physical fill
     exact: Optional[bool] = None,
 ) -> jax.Array:
     """Decode attention over a PVQ-packed KV cache (kernel v4 fast path).
@@ -312,7 +312,11 @@ def decode_attention_packed(
     *planes*, so the kernel masks on ``min(length, packed_end(filled))``
     while the tail leg masks on ``length - packed_end(filled)``.  When
     ``filled`` is omitted it defaults to ``max(length)`` — correct whenever
-    the cache was filled exactly up to the longest row.
+    the cache was filled exactly up to the longest row.  On the slot-pool
+    engine path ``filled`` is per-slot ``(b,)`` (every slot fills its own
+    pages at its own position) and ``kv`` is a ``PagedKV`` whose planes are
+    gathered through the page table at the ``ops`` dispatch boundary; the
+    tail ring is slot-indexed in both containers and is read directly.
 
     ``exact=True`` (or env ``REPRO_KV_PVQ_EXACT=1``) instead dequantizes the
     whole cache through ``PackedKV.dense_kv`` and runs the dense
@@ -331,7 +335,7 @@ def decode_attention_packed(
         return decode_attention(q, kd, vd, scale=scale, length=length)
 
     b, sq, h, hd = q.shape
-    n_kv = kv.k_pulses.shape[2]
+    n_kv = kv.tail_k.shape[-2]
     blk = kv.block
     pe = kv.packed_end(filled)  # scalar block-aligned packed extent
     kv_len = jnp.minimum(pe, length)  # (b,) packed rows visible per batch
@@ -443,7 +447,7 @@ def attention_decode(
     p: Params,
     x: jax.Array,  # (b, 1, d)
     cache: dict,
-    pos: jax.Array,  # scalar int32: index of the new token
+    pos: jax.Array,  # scalar int32 (lockstep batch) | (b,) int32 (slot pool)
     *,
     n_heads: int,
     n_kv_heads: int,
@@ -452,20 +456,46 @@ def attention_decode(
     update_cache: bool = True,
     softmax_scale: Optional[float] = None,
 ) -> tuple[jax.Array, dict]:
-    """Single-token decode with cache append at ``pos``."""
+    """Single-token decode with cache append at ``pos``.
+
+    ``pos`` may be a per-slot vector ``(b,)`` — the continuous-batching
+    engine's slot pool, where every batch row sits at its own sequence
+    position.  RoPE, the cache append, and the attention length mask are
+    all per-row in that case; the scalar form is the fixed-batch lockstep
+    special case.
+    """
     b = x.shape[0]
     q = dense(p["wq"], x).reshape(b, 1, n_heads, head_dim)
     k = dense(p["wk"], x).reshape(b, 1, n_kv_heads, head_dim)
     v = dense(p["wv"], x).reshape(b, 1, n_kv_heads, head_dim)
-    posb = jnp.full((b, 1), pos)
+    pos = jnp.asarray(pos, jnp.int32)
+    per_slot = pos.ndim == 1
+    posb = jnp.broadcast_to(pos.reshape(-1, 1), (b, 1))
     if rope_theta is not None:
         q = apply_rope(q, posb, rope_theta)
         k = apply_rope(k, posb, rope_theta)
     scale = softmax_scale if softmax_scale is not None else 1.0 / math.sqrt(head_dim)
-    length = jnp.full((b,), pos + 1)
-    from repro.core.packed import is_packed_kv
+    length = posb[:, 0] + 1  # (b,)
+    from repro.core.packed import is_packed_kv, is_paged_kv
 
+    if is_paged_kv(cache):
+        # slot-pool fast path: per-slot tail-ring append with masked
+        # block-encode scatter to the allocator's pre-assigned write_page,
+        # then the kernel-v4 contraction through the page table.  Each
+        # slot's physical fill IS its own position count.
+        if update_cache:
+            cache = cache.append(k, v, posb[:, 0])
+        out = decode_attention_packed(
+            q, cache, scale=scale, length=length, filled=length
+        )
+        y = dense(p["wo"], out.reshape(b, 1, n_heads * head_dim))
+        return y, cache
     if is_packed_kv(cache):
+        if per_slot:
+            raise NotImplementedError(
+                "per-slot positions need the paged slot-pool cache (PagedKV); "
+                "PackedKV appends are lockstep (scalar pos)"
+            )
         # packed fast path: append into the tail ring (encode-on-block-fill
         # happens inside PackedKV.append), then the kernel-v4 contraction
         if update_cache:
@@ -478,8 +508,17 @@ def attention_decode(
     if update_cache:
         # the cast follows the CACHE dtype, never the projection dtype: an
         # explicitly f32 cache must not be silently downcast to bf16 here
-        ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), pos, axis=1)
-        cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), pos, axis=1)
+        if per_slot:
+            upd = jax.vmap(
+                lambda c, row, pp: jax.lax.dynamic_update_slice_in_dim(
+                    c, row, pp, axis=0
+                )
+            )
+            ck = upd(cache["k"], k.astype(cache["k"].dtype), pos)
+            cv = upd(cache["v"], v.astype(cache["v"].dtype), pos)
+        else:
+            ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), pos, axis=1)
+            cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), pos, axis=1)
         cache = KVCache(k=ck, v=cv)
     out = decode_attention(q, cache["k"], cache["v"], scale=scale, length=length)
     y = dense(p["wo"], out.reshape(b, 1, n_heads * head_dim))

@@ -187,16 +187,51 @@ class Model:
     def init_cache(self, batch: int, cache_len: int, enc_len: int = 0) -> Any:
         return T.init_plan_cache(self.cfg, self.plan, batch, cache_len, enc_len or cache_len)
 
+    def init_paged_cache(self, n_slots: int, n_pages: int, max_pages: int) -> Any:
+        """Slot-pool decode cache for the continuous-batching engine: every
+        attention layer's KV cache is a ``core.packed.PagedKV`` page pool
+        (requires an active ``KVQuant`` default — pages are PVQ blocks)."""
+        return T.init_plan_cache(
+            self.cfg, self.plan, n_slots, max_pages, 0,
+            paged=(n_pages, max_pages),
+        )
+
+    def prefill_bucketed(
+        self, params: Params, batch: Dict[str, jax.Array], real_len: jax.Array
+    ) -> Tuple[jax.Array, Any]:
+        """Disaggregated-prefill step: the prompt is padded up to a static
+        page-aligned bucket length, and the logits are read at the true
+        last position ``real_len - 1`` per row (causal attention makes the
+        padded suffix invisible to every position below ``real_len``).
+        Returns ``(next-token logits (b, 1, vocab), caches)`` — the caches
+        cover the full bucket length; rows at/after ``real_len`` are
+        garbage and must stay behind the engine's per-slot length mask.
+        """
+        logits, _, caches = self.forward(params, batch, mode="prefill")
+        idx = (jnp.asarray(real_len, jnp.int32) - 1).reshape(-1, 1, 1)
+        last = jnp.take_along_axis(
+            logits, jnp.broadcast_to(idx, (logits.shape[0], 1, logits.shape[-1])),
+            axis=1,
+        )
+        return last, caches
+
     def decode_step(
         self, params: Params, cache: Any, token: jax.Array, pos: jax.Array
     ) -> Tuple[jax.Array, Any]:
-        """token: (b, 1) int32; pos: scalar int32 (next position index)."""
+        """token: (b, 1) int32; pos: scalar int32 (next position index,
+        lockstep batch) or (b,) int32 (per-slot positions — the
+        continuous-batching engine's slot pool, threaded through attention
+        as per-row RoPE/append/length)."""
         cfg = self.cfg
         x = self._embed_tokens(params, token, pos_offset=0)
         if cfg.learned_positions:
             # replace the offset-0 slice with the true position embedding
-            pe = jax.lax.dynamic_slice_in_dim(params["pos"]["pos_embedding"], 0, 1, axis=0)
-            pe_t = jax.lax.dynamic_slice_in_dim(params["pos"]["pos_embedding"], pos, 1, axis=0)
+            tab = params["pos"]["pos_embedding"]
+            pe = jax.lax.dynamic_slice_in_dim(tab, 0, 1, axis=0)
+            if jnp.ndim(pos):
+                pe_t = jnp.take(tab, jnp.asarray(pos, jnp.int32), axis=0)[:, None, :]
+            else:
+                pe_t = jax.lax.dynamic_slice_in_dim(tab, pos, 1, axis=0)
             x = x - pe.astype(x.dtype) + pe_t.astype(x.dtype)
         new_cache = {}
         for i, seg in enumerate(self.plan):

@@ -313,11 +313,40 @@ def block_decode(
 
 
 def init_block_cache(
-    cfg: ModelConfig, spec: BlockSpec, batch: int, cache_len: int, enc_len: int = 0
+    cfg: ModelConfig, spec: BlockSpec, batch: int, cache_len: int, enc_len: int = 0,
+    *, paged: Optional[Tuple[int, int]] = None,
 ) -> Dict[str, Any]:
+    """``paged=(n_pages, max_pages)`` builds the continuous-batching
+    slot-pool cache instead: the attention KV cache becomes a
+    ``core.packed.PagedKV`` physical-page pool (``batch`` is the slot
+    count; requires an active ``KVQuant`` default because pages are PVQ
+    encode blocks).  Mixers without a paged representation (ssm/rwkv/mla
+    recurrent state, cross-attention) are rejected — the engine is
+    attention-family only for now."""
     dtype = jnp.dtype(cfg.compute_dtype)
     c: Dict[str, Any] = {}
+    if paged is not None and (spec.mixer != "attn" or spec.cross):
+        raise NotImplementedError(
+            f"paged slot-pool cache supports plain attention blocks only, "
+            f"got mixer={spec.mixer!r} cross={spec.cross}"
+        )
     if spec.mixer == "attn":
+        if paged is not None:
+            from repro.core.packed import PagedKV
+            from repro.core.quantize import default_kv_quant
+
+            kvq = default_kv_quant()
+            if kvq is None:
+                raise ValueError(
+                    "paged slot-pool cache needs an active KVQuant default "
+                    "(pages are PVQ blocks) — set_default_kv_quant(...) first"
+                )
+            n_pages, max_pages = paged
+            c["kv"] = PagedKV.init(
+                batch, n_pages, max_pages, cfg.n_kv_heads,
+                cfg.resolved_head_dim, kvq=kvq, dtype=dtype,
+            )
+            return c
         c["kv"] = attn_lib.init_kv_cache(batch, cache_len, cfg.n_kv_heads, cfg.resolved_head_dim, dtype)
     elif spec.mixer == "mla":
         c["mla"] = mla_lib.MLACache(
@@ -460,12 +489,13 @@ def decode_segment(
 
 
 def init_plan_cache(
-    cfg: ModelConfig, plan: List[Segment], batch: int, cache_len: int, enc_len: int = 0
+    cfg: ModelConfig, plan: List[Segment], batch: int, cache_len: int, enc_len: int = 0,
+    *, paged: Optional[Tuple[int, int]] = None,
 ):
     out = {}
     for si, (repeats, pattern) in enumerate(plan):
         entry = {
-            f"b{i}": init_block_cache(cfg, spec, batch, cache_len, enc_len)
+            f"b{i}": init_block_cache(cfg, spec, batch, cache_len, enc_len, paged=paged)
             for i, spec in enumerate(pattern)
         }
         out[f"seg{si}"] = jax.tree.map(

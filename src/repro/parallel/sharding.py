@@ -311,6 +311,15 @@ _CACHE_RULES: Tuple[Tuple[str, Tuple[Any, ...]], ...] = (
     (r"kv/(k|v)_pulses$", (None, "dp", "seq", None, None)),
     (r"kv/(k|v)_scales$", (None, "dp", "seq", None, None)),
     (r"kv/tail_(k|v)$", (None, "dp", None, None, None)),
+    # Paged slot-pool cache (PagedKV): the physical page pool is shared by
+    # every slot — pages from different sequences interleave freely — so it
+    # has no batch axis and must be replicated.  Slot-indexed children
+    # (page table, write heads; the tail ring reuses the tail rule above)
+    # shard their slot axis over data exactly like a batch axis.
+    (r"kv/(k|v)_pages$", (None, None, None, None, None)),
+    (r"kv/(k|v)_page_scales$", (None, None, None, None, None)),
+    (r"kv/page_table$", (None, "dp", None)),
+    (r"kv/write_page$", (None, "dp")),
     (r"cross/(k|v)$", (None, "dp", "seq", None, None)),
     (r"mla/c_kv$", (None, "dp", "seq", None)),
     (r"mla/k_rope$", (None, "dp", "seq", None)),

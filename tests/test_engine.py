@@ -1,0 +1,371 @@
+"""Continuous-batching engine tests: page allocator invariants, PagedKV
+graft/append parity against the PackedKV oracle, engine-vs-fixed-batch
+token agreement under mid-flight join/evict (ragged lengths, partial tail
+blocks), cross-sequence isolation, per-sequence EOS/max_tokens stopping,
+the compile-count regressions for both the engine decode step and the
+bucketed ``serve.generate`` loop, and the slot-pool cache sharding rules."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.packed import PackedKV, PagedKV, is_paged_kv
+from repro.core.quantize import KVQuant, kv_quant_scope
+from repro.launch.engine import (
+    PageAllocator,
+    PVQEngine,
+    Request,
+    bucket_len,
+    poisson_trace,
+)
+
+KVQ = KVQuant(block=8, group=16)
+
+
+# ---------------------------------------------------------------------------
+# Page allocator (host)
+# ---------------------------------------------------------------------------
+
+
+def test_page_allocator_alloc_free_reuse():
+    al = PageAllocator(4)
+    ids = [al.alloc() for _ in range(4)]
+    assert sorted(ids) == [0, 1, 2, 3]
+    assert al.trash == 4 and al.trash not in ids
+    assert al.alloc() is None  # exhausted
+    assert al.alloc_many(1) is None
+    al.free([ids[1], ids[3]])
+    assert al.available == 2
+    again = al.alloc_many(2)
+    assert sorted(again) == sorted([ids[1], ids[3]])  # freed pages reused
+    al.free([again[0]])
+    with pytest.raises(ValueError):
+        al.free([again[0]])  # double free
+    with pytest.raises(ValueError):
+        al.free([al.trash])
+
+
+def test_bucket_len():
+    assert bucket_len(1, 8) == 8
+    assert bucket_len(8, 8) == 8
+    assert bucket_len(9, 8) == 16
+    assert bucket_len(0, 8) == 8
+
+
+# ---------------------------------------------------------------------------
+# PagedKV container vs the PackedKV oracle
+# ---------------------------------------------------------------------------
+
+
+def _dense_kv(seed, b, s, n_kv, hd):
+    kk, kv = jax.random.split(jax.random.PRNGKey(seed))
+    k = jax.random.normal(kk, (b, s, n_kv, hd), jnp.float32)
+    v = jax.random.normal(kv, (b, s, n_kv, hd), jnp.float32)
+    return k, v
+
+
+def test_paged_graft_matches_from_dense():
+    """Grafting a dense prefill into pages encodes bit-identically to the
+    fixed-batch ``PackedKV.from_dense`` path: same pulse planes for full
+    blocks, same exact tail rows for the in-flight partial block."""
+    n_kv, hd, L = 2, 16, 21  # 2 full blocks of 8 + 5-row tail
+    k, v = _dense_kv(0, 1, L, n_kv, hd)
+    ref = PackedKV.from_dense(k, v, kvq=KVQ, dtype=jnp.float32)
+
+    lb = bucket_len(L, KVQ.block)
+    pad = lb - L
+    kp = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    paged = PagedKV.init(2, 6, 4, n_kv, hd, kvq=KVQ, dtype=jnp.float32)
+    # slot 1, physical pages [3, 0] for logical blocks 0/1; the padded
+    # partial block 2 goes to the trash page
+    ids = jnp.asarray([3, 0, paged.trash_page], jnp.int32)
+    paged = paged.graft(kp, vp, jnp.int32(1), ids, jnp.int32(L))
+    pt = np.full((2, 4), paged.trash_page, np.int32)
+    pt[1, :2] = [3, 0]
+    paged = paged.with_tables(jnp.asarray(pt), jnp.full((2,), paged.trash_page, jnp.int32))
+
+    got = paged.gather()
+    pe = (L // KVQ.block) * KVQ.block
+    np.testing.assert_array_equal(
+        np.asarray(got.k_pulses[1, :pe]), np.asarray(ref.k_pulses[0, :pe])
+    )
+    np.testing.assert_array_equal(
+        np.asarray(got.v_pulses[1, :pe]), np.asarray(ref.v_pulses[0, :pe])
+    )
+    np.testing.assert_array_equal(
+        np.asarray(got.k_scales[1, :pe]), np.asarray(ref.k_scales[0, :pe])
+    )
+    # exact tail rows (positions pe..L-1 live at ring slots 0..L-pe-1)
+    np.testing.assert_array_equal(
+        np.asarray(got.tail_k[1, : L - pe]), np.asarray(ref.tail_k[0, : L - pe])
+    )
+    np.testing.assert_array_equal(
+        np.asarray(got.tail_v[1, : L - pe]), np.asarray(ref.tail_v[0, : L - pe])
+    )
+    # unallocated logical blocks and the other slot read the trash page,
+    # and the dense view agrees with the oracle over the valid extent
+    kd, vd = paged.dense_kv(jnp.asarray([0, L]))
+    kr, vr = ref.dense_kv(jnp.asarray([L]))
+    np.testing.assert_allclose(np.asarray(kd[1, :L]), np.asarray(kr[0, :L]), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(vd[1, :L]), np.asarray(vr[0, :L]), rtol=1e-6)
+
+
+def test_paged_append_matches_packed_append():
+    """Per-slot streaming appends (masked block-encode scatter to the
+    pre-assigned write_page) land the same planes/tails as the lockstep
+    ``PackedKV.append`` stream at the same positions."""
+    n_kv, hd, blk = 2, 16, KVQ.block
+    steps = 2 * blk + 3  # crosses two block boundaries
+    k, v = _dense_kv(1, 1, steps, n_kv, hd)
+    ref = PackedKV.init(1, 4 * blk, n_kv, hd, kvq=KVQ, dtype=jnp.float32)
+    paged = PagedKV.init(1, 4, 4, n_kv, hd, kvq=KVQ, dtype=jnp.float32)
+    pt = np.full((1, 4), paged.trash_page, np.int32)
+    pages = [2, 0]  # deliberately out-of-order physical placement
+    for pos in range(steps):
+        kn, vn = k[:, pos : pos + 1], v[:, pos : pos + 1]
+        ref = ref.append(kn, vn, pos)
+        wp = np.full((1,), paged.trash_page, np.int32)
+        if (pos + 1) % blk == 0:
+            pid = pages[pos // blk]
+            pt[0, pos // blk] = pid
+            wp[0] = pid
+        paged = paged.with_tables(jnp.asarray(pt), jnp.asarray(wp))
+        paged = paged.append(kn, vn, jnp.asarray([pos], jnp.int32))
+    got = paged.gather()
+    pe = (steps // blk) * blk
+    np.testing.assert_array_equal(
+        np.asarray(got.k_pulses[0, :pe]), np.asarray(ref.k_pulses[0, :pe])
+    )
+    np.testing.assert_array_equal(
+        np.asarray(got.v_scales[0, :pe]), np.asarray(ref.v_scales[0, :pe])
+    )
+    t = steps - pe
+    np.testing.assert_array_equal(
+        np.asarray(got.tail_k[0, :t]), np.asarray(ref.tail_k[0, :t])
+    )
+
+
+# ---------------------------------------------------------------------------
+# Engine end-to-end (tiny model)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def served():
+    from repro.configs import get_config
+    from repro.nn.models import build_model
+
+    cfg = get_config("smollm-360m").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0), max_seq=64)
+    return cfg, model, params
+
+
+def _oracle_generate(model, params, prompt, gen):
+    from repro.launch.serve import generate
+
+    out = generate(
+        model, params, jnp.asarray([prompt], jnp.int32),
+        gen=gen, cache_len=len(prompt) + gen,
+    )
+    return [int(x) for x in np.asarray(out[0])[len(prompt):]]
+
+
+def test_engine_agreement_and_compile_counts(served):
+    """Mid-flight join (more requests than slots), ragged prompt lengths
+    with partial tail blocks: engine tokens match the fixed-batch oracle,
+    the engine-static decode step compiles exactly once, and prefill
+    compiles once per prompt bucket."""
+    from repro.launch.serve import engine_token_agreement
+
+    cfg, model, params = served
+    with kv_quant_scope(KVQ):
+        trace = poisson_trace(
+            5, rate=0.0, vocab=cfg.vocab_size, prompt_lens=(3, 13),
+            max_new=8, seed=3,
+        )
+        eng = PVQEngine(model, params, n_slots=3, max_len=32)
+        res = eng.run(
+            [Request(rid=r.rid, prompt=list(r.prompt), max_new_tokens=8) for r in trace]
+        )
+        outs = res.pop("outputs")
+        assert res["requests"] == 5
+        assert all(len(outs[r.rid]) == 8 for r in trace)
+        # engine-static shapes: ONE decode trace for the whole run,
+        # prefill/graft once per page-aligned prompt bucket
+        buckets = {bucket_len(len(r.prompt), KVQ.block) for r in trace}
+        assert eng.trace_counts["decode"] == 1
+        assert eng.trace_counts["prefill"] == len(buckets)
+        assert eng.trace_counts["graft"] == len(buckets)
+        # all pages returned once every sequence finished
+        assert eng.alloc.used == 0 and eng.alloc.available == eng.n_pages
+        # token-level agreement vs the fixed-batch oracle, teacher-forced
+        ag = engine_token_agreement(model, params, trace, outs)
+        assert ag["engine_tokens_compared"] == 40
+        assert ag["engine_token_agreement"] >= 0.99
+        # free-running comparison against per-request fixed-batch decode
+        matches = total = 0
+        for r in trace:
+            ref = _oracle_generate(model, params, r.prompt, 8)
+            matches += sum(int(a == b) for a, b in zip(ref, outs[r.rid]))
+            total += 8
+        assert matches / total >= 0.9
+
+
+def test_engine_no_cross_sequence_leakage(served):
+    """A request decodes the identical token stream whether it runs alone
+    or packed into the slot pool beside other sequences — pages freed by
+    one sequence and reused by another never leak KV rows."""
+    cfg, model, params = served
+    probe = Request(rid=100, prompt=[5, 17, 9, 63, 2, 41, 8], max_new_tokens=6)
+    with kv_quant_scope(KVQ):
+        eng1 = PVQEngine(model, params, n_slots=2, max_len=32)
+        alone = eng1.run([Request(rid=100, prompt=list(probe.prompt), max_new_tokens=6)])
+        eng2 = PVQEngine(model, params, n_slots=2, max_len=32, n_pages=5)
+        others = poisson_trace(
+            4, rate=0.0, vocab=cfg.vocab_size, prompt_lens=(4, 12),
+            max_new=6, seed=11,
+        )
+        crowd = [Request(rid=100, prompt=list(probe.prompt), max_new_tokens=6)] + others
+        packed = eng2.run(crowd)
+        assert eng2.stats["evictions"] >= 0  # oversubscribed pool in play
+        assert packed["requests"] == 5
+    assert alone["outputs"][100] == packed["outputs"][100]
+
+
+def test_engine_eviction_requeue_completes(served):
+    """An oversubscribed page pool forces evictions; evicted requests are
+    requeued with their generated prefix intact and still finish with
+    oracle-agreeing tokens."""
+    from repro.launch.serve import engine_token_agreement
+
+    cfg, model, params = served
+    with kv_quant_scope(KVQ):
+        trace = poisson_trace(
+            6, rate=0.0, vocab=cfg.vocab_size, prompt_lens=(6, 14),
+            max_new=10, seed=7,
+        )
+        # max_len 32 -> 4 pages/slot; 3 slots want 12 pages, give 5
+        eng = PVQEngine(model, params, n_slots=3, max_len=32, n_pages=5)
+        res = eng.run(trace)
+        outs = res.pop("outputs")
+        assert res["evictions"] > 0
+        assert res["requests"] == 6
+        assert all(len(outs[r.rid]) == 10 for r in trace)
+        assert eng.alloc.used == 0
+        ag = engine_token_agreement(model, params, trace, outs)
+        assert ag["engine_token_agreement"] >= 0.99
+
+
+def test_engine_eos_and_max_tokens_stopping(served):
+    """Per-sequence stopping: a slot retires on its own EOS (freeing its
+    pages immediately) and the remaining sequences are numerically
+    untouched — their streams equal the truncation-free run's."""
+    cfg, model, params = served
+    with kv_quant_scope(KVQ):
+        trace = poisson_trace(
+            4, rate=0.0, vocab=cfg.vocab_size, prompt_lens=(4, 10),
+            max_new=8, seed=5,
+        )
+        eng = PVQEngine(model, params, n_slots=4, max_len=32)
+        free_run = eng.run([Request(rid=r.rid, prompt=list(r.prompt), max_new_tokens=8) for r in trace])
+        # pick an EOS id that appears mid-stream for at least one request
+        eos = None
+        for r in trace:
+            gen = free_run["outputs"][r.rid]
+            for tok in gen[:-1]:
+                if tok != gen[-1]:
+                    eos = tok
+                    break
+            if eos is not None:
+                break
+        assert eos is not None
+        eng2 = PVQEngine(model, params, n_slots=4, max_len=32)
+        stopped = eng2.run(
+            [Request(rid=r.rid, prompt=list(r.prompt), max_new_tokens=8, eos_id=eos) for r in trace]
+        )
+        truncated_any = False
+        for r in trace:
+            full = free_run["outputs"][r.rid]
+            got = stopped["outputs"][r.rid]
+            expect = full[: full.index(eos) + 1] if eos in full else full
+            assert got == expect
+            truncated_any |= len(got) < len(full)
+        assert truncated_any
+        assert eng2.alloc.used == 0
+
+
+def test_engine_requires_kv_quant_and_capacity(served):
+    cfg, model, params = served
+    with pytest.raises(ValueError):
+        PVQEngine(model, params, n_slots=2, max_len=32)  # no KVQuant default
+    with kv_quant_scope(KVQ):
+        eng = PVQEngine(model, params, n_slots=2, max_len=16)
+        with pytest.raises(ValueError):
+            eng.validate(Request(rid=0, prompt=[1] * 12, max_new_tokens=8))
+        with pytest.raises(ValueError):
+            # single sequence could never fit: n_pages < max_pages
+            PVQEngine(model, params, n_slots=2, max_len=32, n_pages=2)
+
+
+# ---------------------------------------------------------------------------
+# serve.generate compile-count regression (bucketing + shared jit)
+# ---------------------------------------------------------------------------
+
+
+def test_generate_decode_compiles_once_per_bucket(served):
+    """generate() used to re-jit decode_step per call (every call
+    retraced) and key compiles on the exact cache_len.  With the shared
+    per-model jit + kv-block bucketing, nearby cache lengths and repeat
+    calls reuse one compiled step."""
+    from repro.launch import serve
+
+    cfg, model, params = served
+    tokens = jnp.asarray([[3, 1, 4, 1, 5, 9]], jnp.int32)
+    before = serve.TRACE_COUNTS["decode_step"]
+    serve.generate(model, params, tokens, gen=2, cache_len=20)
+    first = serve.TRACE_COUNTS["decode_step"] - before
+    assert first == 1
+    # same bucket (32), different cache_len and a repeat call: no retrace
+    serve.generate(model, params, tokens, gen=2, cache_len=25)
+    serve.generate(model, params, tokens, gen=2, cache_len=20)
+    assert serve.TRACE_COUNTS["decode_step"] - before == 1
+    # a new bucket traces exactly once more
+    serve.generate(model, params, tokens, gen=2, cache_len=40)
+    assert serve.TRACE_COUNTS["decode_step"] - before == 2
+
+
+# ---------------------------------------------------------------------------
+# Sharding rules for the slot-pool cache
+# ---------------------------------------------------------------------------
+
+
+class _FakeMesh:
+    def __init__(self, shape):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+
+
+def test_cache_pspec_paged_rules():
+    from jax.sharding import PartitionSpec as P
+
+    from repro.parallel.sharding import ShardingPolicy, cache_pspec
+
+    mesh = _FakeMesh({"data": 4, "model": 2})
+    pol = ShardingPolicy()
+    # the physical page pool is shared across slots: replicated
+    assert cache_pspec("seg0/b0/kv/k_pages", (2, 65, 8, 4, 64), mesh, pol) == P(
+        None, None, None, None, None
+    )
+    assert cache_pspec("seg0/b0/kv/v_page_scales", (2, 65, 8, 4, 2), mesh, pol) == P(
+        None, None, None, None, None
+    )
+    # slot-indexed children shard the slot axis like batch
+    pt = cache_pspec("seg0/b0/kv/page_table", (2, 8, 16), mesh, pol)
+    assert pt[1] in ("data", ("data",))
+    wp = cache_pspec("seg0/b0/kv/write_page", (2, 8), mesh, pol)
+    assert wp[1] in ("data", ("data",))
+    tail = cache_pspec("seg0/b0/kv/tail_k", (2, 8, 8, 4, 64), mesh, pol)
+    assert tail[1] in ("data", ("data",))
