@@ -15,19 +15,10 @@ is backend-independent and is what the acceptance gate checks
 
 from __future__ import annotations
 
-import time
 from typing import Dict, List
 
-
-def _time_us(fn, reps: int = 5) -> float:
-    import jax
-
-    jax.block_until_ready(fn())  # warmup: trace + compile
-    t0 = time.perf_counter()
-    for _ in range(reps):
-        out = fn()
-    jax.block_until_ready(out)
-    return 1e6 * (time.perf_counter() - t0) / reps
+# shared timing helper (was a local copy of the same loop)
+from repro.runtime.telemetry import time_call_us as _time_us
 
 
 def bench_attention_decode(*, batch: int = 2, seq: int = 96,

@@ -18,6 +18,8 @@ from __future__ import annotations
 import time
 from typing import Dict, List
 
+from repro.runtime.telemetry import Histogram
+
 
 def bench_engine(arch: str = "smollm-360m", *, n_requests: int = 6,
                  n_slots: int = 3, prompt_len: int = 12, gen: int = 8,
@@ -58,16 +60,21 @@ def bench_engine(arch: str = "smollm-360m", *, n_requests: int = 6,
         res = eng.run(trace)
         res.pop("outputs")
 
-        # sequential fixed-batch baseline over the SAME trace, warmed
+        # sequential fixed-batch baseline over the SAME trace, warmed;
+        # per-request latencies go through the shared telemetry histogram
+        # (the same percentile type engine.report() uses — no inline pct)
+        base_lat = Histogram()
         prompts = {r.rid: jnp.asarray([r.prompt], jnp.int32) for r in trace}
         generate(model, params, prompts[trace[0].rid], gen=gen,
                  cache_len=len(trace[0].prompt) + gen)
         t0 = time.perf_counter()
         base_tokens = 0
         for r in trace:
+            t_req = time.perf_counter()
             out = generate(model, params, prompts[r.rid], gen=gen,
                            cache_len=len(r.prompt) + gen)
             jax.block_until_ready(out)
+            base_lat.record(time.perf_counter() - t_req)
             base_tokens += out.shape[1] - len(r.prompt)
         base_dt = time.perf_counter() - t0
 
@@ -84,6 +91,11 @@ def bench_engine(arch: str = "smollm-360m", *, n_requests: int = 6,
         "latency_p99_s": res["latency_p99_s"],
         "ttft_p50_s": res["ttft_p50_s"],
         "ttft_p99_s": res["ttft_p99_s"],
+        "queue_wait_p50_s": res["queue_wait_p50_s"],
+        "queue_wait_p99_s": res["queue_wait_p99_s"],
+        "eviction_cost_total_s": res["eviction_cost_total_s"],
+        "baseline_latency_p50_s": round(base_lat.percentile(50), 4),
+        "baseline_latency_p99_s": round(base_lat.percentile(99), 4),
         "slot_utilization": res["slot_utilization"],
         "evictions": res["evictions"],
         "decode_steps": res["decode_steps"],

@@ -59,83 +59,26 @@ def main() -> None:
         derived = {k: v for k, v in r.items() if k not in ("bench_group", "bench", "us_per_call")}
         print(f"{name},{us},{json.dumps(derived, default=str).replace(',', ';')}")
 
-    # perf-trajectory file: kernel rows only, stable schema for cross-PR diffs
-    kernel_rows = [r for r in all_rows if r["bench_group"].startswith("kernel_")]
-    if kernel_rows:
-        import jax
+    # perf-trajectory files, one per bench family, all through the shared
+    # telemetry payload wrapper so every BENCH_*.json row carries one schema
+    # shape ({schema, backend, rows}) for cross-PR diffs
+    from repro.runtime.telemetry import bench_payload
 
-        payload = {
-            "schema": "bench-kernels-v1",
-            "backend": jax.default_backend(),
-            "rows": kernel_rows,
-        }
-        with open("BENCH_kernels.json", "w") as f:
-            json.dump(payload, f, indent=1, default=str)
-        print("wrote BENCH_kernels.json", file=sys.stderr)
-
-    # packed-vs-dense MoE expert-bank trajectory (throughput + weight bytes)
-    moe_rows = [r for r in all_rows if r["bench_group"].startswith("moe_")]
-    if moe_rows:
-        import jax
-
-        payload = {
-            "schema": "bench-moe-v1",
-            "backend": jax.default_backend(),
-            "rows": moe_rows,
-        }
-        with open("BENCH_moe.json", "w") as f:
-            json.dump(payload, f, indent=1, default=str)
-        print("wrote BENCH_moe.json", file=sys.stderr)
-
-    # packed-vs-f32 serving trajectory (stable schema for cross-PR diffs)
-    serve_rows = [r for r in all_rows if r["bench_group"].startswith("serve_")]
-    if serve_rows:
-        import jax
-
-        payload = {
-            "schema": "bench-serve-v1",
-            "backend": jax.default_backend(),
-            "rows": serve_rows,
-        }
-        with open("BENCH_serve.json", "w") as f:
-            json.dump(payload, f, indent=1, default=str)
-        print("wrote BENCH_serve.json", file=sys.stderr)
-
-    # continuous-batching engine trajectory (tok/s, p50/p99, slot util)
-    engine_rows = [r for r in all_rows if r["bench_group"].startswith("engine_")]
-    if engine_rows:
-        import jax
-
-        payload = {
-            "schema": "bench-engine-v1",
-            "backend": jax.default_backend(),
-            "rows": engine_rows,
-        }
-        with open("BENCH_engine.json", "w") as f:
-            json.dump(payload, f, indent=1, default=str)
-        print("wrote BENCH_engine.json", file=sys.stderr)
-
-    # packed-vs-f32 KV-cache decode trajectory (bytes/token + us/token)
-    attn_rows = [r for r in all_rows if r["bench_group"].startswith("attn_")]
-    if attn_rows:
-        import jax
-
-        payload = {
-            "schema": "bench-attention-v1",
-            "backend": jax.default_backend(),
-            "rows": attn_rows,
-        }
-        with open("BENCH_attention.json", "w") as f:
-            json.dump(payload, f, indent=1, default=str)
-        print("wrote BENCH_attention.json", file=sys.stderr)
-
-    # .pvqz codec trajectory: bits/weight + encode/decode MB/s per codec
-    artifact_rows = [r for r in all_rows if r["bench_group"].startswith("artifact_")]
-    if artifact_rows:
-        payload = {"schema": "bench-artifact-v1", "rows": artifact_rows}
-        with open("BENCH_artifact.json", "w") as f:
-            json.dump(payload, f, indent=1, default=str)
-        print("wrote BENCH_artifact.json", file=sys.stderr)
+    trajectories = {
+        "kernel_": ("BENCH_kernels.json", "bench-kernels-v1"),
+        "moe_": ("BENCH_moe.json", "bench-moe-v1"),
+        "serve_": ("BENCH_serve.json", "bench-serve-v1"),
+        "engine_": ("BENCH_engine.json", "bench-engine-v1"),
+        "attn_": ("BENCH_attention.json", "bench-attention-v1"),
+        "artifact_": ("BENCH_artifact.json", "bench-artifact-v1"),
+    }
+    for prefix, (fname, schema) in trajectories.items():
+        rows = [r for r in all_rows if r["bench_group"].startswith(prefix)]
+        if not rows:
+            continue
+        with open(fname, "w") as f:
+            json.dump(bench_payload(schema, rows), f, indent=1, default=str)
+        print(f"wrote {fname}", file=sys.stderr)
 
 
 if __name__ == "__main__":

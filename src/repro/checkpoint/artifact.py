@@ -37,6 +37,7 @@ from __future__ import annotations
 import json
 import os
 import struct
+import time
 import zlib
 from pathlib import Path
 from typing import Any, Dict, Iterator, Optional, Tuple
@@ -56,6 +57,24 @@ MAGIC = b"PVQZ"
 END_MAGIC = b"ZPVQ"
 VERSION = 1
 _FOOTER = struct.Struct("<QQ4s")
+
+
+def _note_codec(op: str, codec: str, n_symbols: int, seconds: float) -> None:
+    """Per-codec entropy-coding throughput metrics (``op`` is ``encode`` or
+    ``decode``; ``n_symbols`` = int8 pulse symbols moved).  No-op unless the
+    telemetry registry is enabled."""
+    from repro.runtime import obs
+
+    if not obs.enabled():
+        return
+    labels = {"codec": codec}
+    obs.counter(f"artifact.{op}_leaves", labels).inc()
+    obs.counter(f"artifact.{op}_symbols", labels).add(n_symbols)
+    obs.counter(f"artifact.{op}_s", labels).add(seconds)
+    if seconds > 0:
+        obs.histogram(f"artifact.{op}_mb_s", labels).record(
+            n_symbols / seconds / 1e6
+        )
 
 
 # ---------------------------------------------------------------------------
@@ -182,9 +201,12 @@ def _write_pvqz_file(
                         stream, groups, leaf.k, enum_budget=enum_budget
                     )
                 symbols = groups if leaf_codec == "enum" else stream
+                t_enc = time.perf_counter()
                 blob, info = bitstream.encode_pulses(
                     symbols, leaf_codec, k_max=leaf.k, chunk=chunk
                 )
+                enc_s = time.perf_counter() - t_enc
+                _note_codec("encode", leaf_codec, int(np.asarray(symbols).size), enc_s)
                 scales = np.ascontiguousarray(
                     np.asarray(leaf.scales, np.float32), dtype="<f4"
                 )
@@ -230,6 +252,10 @@ def _write_pvqz_file(
                     "candidate_bits_per_weight": {
                         c: round(b / max(numel, 1), 4) for c, b in sizes.items()
                     },
+                    "encode_s": round(enc_s, 4),
+                    "encode_mb_s": round(
+                        int(np.asarray(symbols).size) / max(enc_s, 1e-9) / 1e6, 3
+                    ),
                 }
             else:
                 arr = np.asarray(leaf)
@@ -309,12 +335,16 @@ def _decode_packed(f, rec: Dict[str, Any]) -> PackedPVQ:
     )
     info = rec["pulse_info"]
     pulse_shape = tuple(rec["pulse_shape"])
+    t_dec = time.perf_counter()
     if info["codec"] == "enum":
         groups = bitstream.decode_pulses(blob, info, rec["group"])
         pulses = _groups_to_physical(groups, rec["layout"], pulse_shape)
     else:
         flat = bitstream.decode_pulses(blob, info)
         pulses = _unstream(flat, rec["layout"], pulse_shape, tuple(rec["shape"]))
+    _note_codec(
+        "decode", info["codec"], int(pulses.size), time.perf_counter() - t_dec
+    )
     sblob = _read_checked(
         f,
         rec["scales_offset"],

@@ -199,7 +199,33 @@ def _kv_encode_planes(x: Array, group: int, k: int) -> Tuple[Array, Array]:
     pulses = pvq_quantize_direction_fast(xg, k)
     p8 = jnp.clip(pulses, -127, 127).astype(jnp.int8)
     scales = _scales(xg, p8, "ls").astype(jnp.float32)
+    if not isinstance(x, jax.core.Tracer):
+        # eager calls only — inside the jitted decode step x is a tracer
+        # and the probe never runs (host-side hooks only)
+        _probe_kv_encode(xg, p8, scales)
     return p8.reshape(shp), scales
+
+
+def _probe_kv_encode(xg, p8, scales) -> None:
+    """KV-block reconstruction SNR + scale-saturation probe (eager only)."""
+    from repro.runtime import obs, telemetry
+
+    if not obs.enabled():
+        return
+    ref = np.asarray(xg)
+    pn = np.asarray(p8)
+    sn = np.asarray(scales)
+    approx = pn.astype(np.float32) * sn[..., None]
+    obs.counter("quant.kv_blocks_probed").inc()
+    obs.histogram("quant.kv_snr_db").record(telemetry.snr_db(ref, approx))
+    if pn.size:
+        obs.histogram("quant.kv_clamp_frac").record(
+            float(np.count_nonzero(np.abs(pn) == 127)) / pn.size
+        )
+    if sn.size:
+        obs.histogram("quant.kv_zero_scale_frac").record(
+            float(np.count_nonzero(sn == 0)) / sn.size
+        )
 
 
 @dataclasses.dataclass(frozen=True, eq=False)
@@ -932,9 +958,28 @@ def quantize_params(
         packed = _pack_leaf(
             pstr, jnp.asarray(leaf), n_over_k, group, policy.scale_mode, interpret
         )
-        return leaf if packed is None else packed
+        if packed is None:
+            return leaf
+        _probe_weight_pack(pstr, leaf, packed)
+        return packed
 
     return jax.tree_util.tree_map_with_path(visit, params, is_leaf=is_packed)
+
+
+def _probe_weight_pack(pstr: str, leaf, packed: PackedPVQ) -> None:
+    """Per-leaf pack-time reconstruction SNR (pack is a host-side, eager
+    transform, so dequantizing once per leaf here never touches a hot
+    loop; no-op unless the registry is enabled)."""
+    from repro.runtime import obs, telemetry
+
+    if not obs.enabled() or isinstance(leaf, jax.core.Tracer):
+        return
+    ref = np.asarray(jnp.asarray(leaf), np.float32)
+    approx = np.asarray(packed.dequantize(jnp.float32))
+    obs.counter("quant.weight_leaves_packed").inc()
+    obs.counter("quant.weight_bytes_packed").add(packed.nbytes_packed)
+    obs.counter("quant.weight_bytes_dense").add(packed.nbytes_dense)
+    obs.histogram("quant.weight_snr_db").record(telemetry.snr_db(ref, approx))
 
 
 def dequantize_params(params: Any) -> Any:

@@ -158,8 +158,11 @@ def quantize_activations(
         amax_t = jnp.max(jnp.abs(xt), axis=-1)  # (..., k//tile)
         scale = amax_t / ACT_QMAX
         inv = jnp.where(scale > 0, 1.0 / jnp.maximum(scale, 1e-30), 0.0)
-        q = jnp.clip(jnp.round(xt * inv[..., None]), -ACT_QMAX, ACT_QMAX)
-        return q.reshape(xf.shape).astype(jnp.int8), scale.astype(jnp.float32)
+        qt = jnp.clip(jnp.round(xt * inv[..., None]), -ACT_QMAX, ACT_QMAX)
+        q = qt.reshape(xf.shape).astype(jnp.int8)
+        scale = scale.astype(jnp.float32)
+        _probe_act_quant(x, q, scale)
+        return q, scale
     else:  # per_tensor
         amax = jnp.broadcast_to(
             jnp.max(jnp.abs(xf)), xf.shape[:-1] + (1,)
@@ -167,7 +170,36 @@ def quantize_activations(
     scale = amax / ACT_QMAX
     inv = jnp.where(scale > 0, 1.0 / jnp.maximum(scale, 1e-30), 0.0)
     q = jnp.clip(jnp.round(xf * inv), -ACT_QMAX, ACT_QMAX).astype(jnp.int8)
-    return q, scale.astype(jnp.float32)
+    scale = scale.astype(jnp.float32)
+    _probe_act_quant(x, q, scale)
+    return q, scale
+
+
+def _probe_act_quant(x: jax.Array, q: jax.Array, scale: jax.Array) -> None:
+    """Scale-saturation / clamp-rate probe for the int8 activation path.
+
+    Eager calls only: at trace time ``x`` is a tracer and the probe
+    returns before touching the registry, so nothing lands inside jit
+    bodies (jitted serving still quantizes, it just isn't probed — the
+    serve entry points probe representative rows host-side instead).
+    """
+    if isinstance(x, jax.core.Tracer):
+        return
+    from repro.runtime import obs
+
+    if not obs.enabled():
+        return
+    qn = np.asarray(q)
+    sn = np.asarray(scale)
+    obs.counter("quant.act_quant_calls").inc()
+    if qn.size:
+        obs.histogram("quant.act_clamp_frac").record(
+            float(np.count_nonzero(np.abs(qn) == ACT_QMAX)) / qn.size
+        )
+    if sn.size:
+        obs.histogram("quant.act_zero_scale_frac").record(
+            float(np.count_nonzero(sn == 0)) / sn.size
+        )
 
 
 def act_matmul_error_bound(

@@ -46,6 +46,7 @@ see ``src/repro/kernels/README.md``.
 from __future__ import annotations
 
 import json
+import logging
 import os
 import tempfile
 import time
@@ -150,6 +151,62 @@ def clear_memory_cache() -> None:
     _MEM_LOADED_FROM = None
 
 
+# ---------------------------------------------------------------------------
+# tuning observability: hit/miss/search counts + search wall-time, per key
+# ---------------------------------------------------------------------------
+
+_LOG = logging.getLogger("repro.autotune")
+_PLURAL = {"hit": "hits", "miss": "misses", "search": "searches"}
+
+
+def _fresh_stats() -> Dict[str, object]:
+    return {"hits": 0, "misses": 0, "searches": 0, "search_s": 0.0, "by_key": {}}
+
+
+_TUNE_STATS: Dict[str, object] = _fresh_stats()
+
+
+def tune_stats() -> Dict[str, object]:
+    """Copy of the process tuning stats: total/per-key hit, miss, and
+    completed-search counts plus accumulated search wall-time (seconds)."""
+    out = dict(_TUNE_STATS)
+    out["search_s"] = round(float(out["search_s"]), 4)
+    out["by_key"] = {k: dict(v) for k, v in _TUNE_STATS["by_key"].items()}
+    return out
+
+
+def reset_tune_stats() -> None:
+    global _TUNE_STATS
+    _TUNE_STATS = _fresh_stats()
+
+
+def _note(key: str, outcome: str, search_s: float = 0.0) -> None:
+    """Record one cache lookup outcome (``hit``/``miss``) or completed
+    ``search``; logs it and mirrors into the telemetry registry.  Runs on
+    dispatch paths that execute at trace time — host-side only, cheap."""
+    word = _PLURAL[outcome]
+    _TUNE_STATS[word] += 1
+    if search_s:
+        _TUNE_STATS["search_s"] += search_s
+    per = _TUNE_STATS["by_key"].setdefault(
+        key, {"hits": 0, "misses": 0, "searches": 0}
+    )
+    per[word] += 1
+    if outcome == "search":
+        _LOG.info("search done for %s in %.3fs", key, search_s)
+    else:
+        _LOG.debug("cache %s: %s", outcome, key)
+
+    from repro.runtime import obs
+
+    if obs.enabled():
+        if outcome != "search":
+            obs.counter("autotune.lookups").inc()
+        obs.counter(f"autotune.{outcome}").inc()
+        if outcome == "search":
+            obs.histogram("autotune.search_s").record(search_s)
+
+
 def heuristic_tiles(m: int, k: int, n: int, group: int) -> Tuple[int, int, int]:
     """Static MXU-aligned guess: full 128 tiles clamped to the problem, with a
     deeper bk when the k extent dwarfs the MXU (fewer grid steps, same VMEM
@@ -233,7 +290,10 @@ def autotune(
     key = cache_key(m, k, n, group, dtype, backend)
     hit = _load().get(key)
     if hit is not None:
+        _note(key, "hit")
         return hit
+    _note(key, "miss")
+    t_search = time.perf_counter()
 
     if max_candidates is None:
         max_candidates = (
@@ -267,6 +327,7 @@ def autotune(
         "candidates": len(cands),
     }
     _persist(key, entry)
+    _note(key, "search", time.perf_counter() - t_search)
     return entry
 
 
@@ -352,7 +413,10 @@ def autotune_encode(
     key = encode_cache_key(g, n, k_pulses, dtype, backend)
     hit = _load().get(key)
     if hit is not None:
+        _note(key, "hit")
         return hit
+    _note(key, "miss")
+    t_search = time.perf_counter()
     if max_candidates is None:
         max_candidates = (
             MAX_ENCODE_CANDIDATES_INTERPRET
@@ -375,6 +439,7 @@ def autotune_encode(
         "candidates": len(cands),
     }
     _persist(key, entry)
+    _note(key, "search", time.perf_counter() - t_search)
     return entry
 
 
@@ -391,14 +456,18 @@ def get_encode_params(
     heuristic default.  ``search=None`` defers to ``REPRO_PVQ_AUTOTUNE``,
     exactly like the matmul tile dispatch."""
     backend = jax.default_backend()
-    hit = _load().get(encode_cache_key(g, n, k_pulses, dtype, backend))
+    key = encode_cache_key(g, n, k_pulses, dtype, backend)
+    hit = _load().get(key)
     if hit is not None:
+        _note(key, "hit")
         return (hit["bg"], hit["delta_max"])
     if search is None:
         search = os.environ.get("REPRO_PVQ_AUTOTUNE", "") not in ("", "0", "false")
     if search:
+        # autotune_encode records the miss + search itself
         e = autotune_encode(g, n, k_pulses, dtype=dtype, interpret=interpret)
         return (e["bg"], e["delta_max"])
+    _note(key, "miss")
     return (min(ENCODE_DEFAULTS[0], g), ENCODE_DEFAULTS[1])
 
 
@@ -457,7 +526,10 @@ def autotune_attn(
     key = attn_cache_key(m, hd, s, group, dtype, backend)
     hit = _load().get(key)
     if hit is not None:
+        _note(key, "hit")
         return hit
+    _note(key, "miss")
+    t_search = time.perf_counter()
     if max_candidates is None:
         max_candidates = (
             MAX_CANDIDATES_INTERPRET if interpret else MAX_CANDIDATES_COMPILED
@@ -493,6 +565,7 @@ def autotune_attn(
     assert best is not None
     entry = {"bs": best, "us": round(1e6 * best_t, 2), "candidates": len(cands)}
     _persist(key, entry)
+    _note(key, "search", time.perf_counter() - t_search)
     return entry
 
 
@@ -509,15 +582,19 @@ def get_attn_tiles(
     """KV block-size dispatch for ``ops.pvq_attn_decode``: cache hit >
     search (``REPRO_PVQ_AUTOTUNE=1``) > heuristic, mirroring ``get_tiles``."""
     backend = jax.default_backend()
-    hit = _load().get(attn_cache_key(m, hd, s, group, dtype, backend))
+    key = attn_cache_key(m, hd, s, group, dtype, backend)
+    hit = _load().get(key)
     if hit is not None:
+        _note(key, "hit")
         return int(hit["bs"])
     if search is None:
         search = os.environ.get("REPRO_PVQ_AUTOTUNE", "") not in ("", "0", "false")
     if search:
+        # autotune_attn records the miss + search itself
         return int(
             autotune_attn(m, hd, s, group=group, dtype=dtype, interpret=interpret)["bs"]
         )
+    _note(key, "miss")
     return heuristic_attn_bs(s)
 
 
@@ -540,12 +617,15 @@ def get_tiles(
     key = cache_key(m, k, n, group, dtype, backend)
     hit = _load().get(key)
     if hit is not None:
+        _note(key, "hit")
         return (hit["bm"], hit["bn"], hit["bk"])
     if search is None:
         search = os.environ.get("REPRO_PVQ_AUTOTUNE", "") not in ("", "0", "false")
     if search:
+        # autotune records the miss + search itself
         e = autotune(m, k, n, group=group, dtype=dtype, interpret=interpret)
         return (e["bm"], e["bn"], e["bk"])
+    _note(key, "miss")
     return heuristic_tiles(m, k, n, group)
 
 

@@ -60,6 +60,8 @@ import numpy as np
 
 from repro.core.packed import is_paged_kv
 from repro.core.quantize import default_kv_quant, kv_quant_scope
+from repro.runtime import obs
+from repro.runtime.telemetry import Histogram
 
 
 def bucket_len(n: int, multiple: int) -> int:
@@ -150,6 +152,13 @@ class Request:
     first_token_t: Optional[float] = None
     finish_t: Optional[float] = None
     evictions: int = 0
+    # admission-blocked duration: total seconds spent waiting in the
+    # pending queue (initial wait + every post-eviction re-wait)
+    queue_wait_s: float = 0.0
+    # eviction latency cost: seconds from each eviction to the end of the
+    # re-admission (re-queue wait + teacher-forced re-prefill), summed
+    evict_cost_s: float = 0.0
+    evict_t: Optional[float] = None  # in-flight eviction timestamp
 
     @property
     def done(self) -> bool:
@@ -268,6 +277,10 @@ class PVQEngine:
         self._decode = jax.jit(self._decode_fn)
         self._prefill = jax.jit(self._prefill_fn)
         self._graft = jax.jit(self._graft_fn)
+        # sampled KV quality probes: the graft's in-graph encode cannot
+        # probe itself (traced), so the first few admissions re-encode one
+        # prefilled page eagerly when the registry is on
+        self._kv_probe_budget = 8
 
     # ------------------------------------------------------------- capacity
 
@@ -342,21 +355,39 @@ class PVQEngine:
         slot = self._free_slot()
         if slot is None or self.alloc.available < n_full:
             return False
+        t_adm = time.perf_counter()
         if req.submit_t is None:
-            req.submit_t = time.perf_counter() if t_now is None else t_now
+            req.submit_t = t_adm if t_now is None else t_now
+        # queue wait: submitted (or evicted) -> admission actually starting
+        base = req.evict_t if req.evict_t is not None else req.submit_t
+        req.queue_wait_s += max(t_adm - base, 0.0)
 
         lb = bucket_len(plen, self.page)
         toks = np.zeros((1, lb), np.int32)
         toks[0, :plen] = np.asarray(ctx, np.int32)
-        with kv_quant_scope(None):
+        with kv_quant_scope(None), obs.span(
+            "engine/prefill", args={"rid": req.rid, "bucket": lb, "ctx": plen}
+        ):
             tok0, pre = self._prefill(self.params, toks, np.int32(plen))
+        if obs.enabled() and self._kv_probe_budget > 0 and plen >= self.page:
+            self._kv_probe_budget -= 1
+            self._probe_kv_quality(pre)
 
         ids = self.alloc.alloc_many(n_full) or []
         page_ids = np.full((lb // self.page,), self.alloc.trash, np.int32)
         page_ids[: len(ids)] = ids
-        self.cache = self._graft(
-            self.cache, pre, np.int32(slot), page_ids, np.int32(plen)
-        )
+        with obs.span("engine/graft", args={"rid": req.rid, "pages": n_full}):
+            self.cache = self._graft(
+                self.cache, pre, np.int32(slot), page_ids, np.int32(plen)
+            )
+        if req.evict_t is not None:
+            # the eviction's full latency cost lands at re-admission: the
+            # re-queue wait plus the teacher-forced re-prefill just done
+            req.evict_cost_s += max(time.perf_counter() - req.evict_t, 0.0)
+            req.evict_t = None
+        if obs.enabled():
+            obs.counter("engine.admissions").inc()
+            obs.event("engine/admit", args={"rid": req.rid, "ctx": plen})
         if not req.generated:
             req.generated.append(int(tok0[0]))
             req.first_token_t = time.perf_counter()
@@ -374,6 +405,37 @@ class PVQEngine:
         self._page_table[slot, :n_full] = ids
         return True
 
+    def _probe_kv_quality(self, pre) -> None:
+        """Host-side KV quality probe: eagerly re-encode the first page of
+        one prefilled layer with the engine's KVQuant so the eager-only
+        probe inside ``_kv_encode_planes`` fires (records SNR/clamp/scale
+        metrics).  Sampled — never on the per-token path."""
+        from repro.core.packed import _kv_encode_planes
+
+        kvq = default_kv_quant()
+
+        def find(c):
+            if isinstance(c, dict):
+                if "k" in c and "v" in c:
+                    return c
+                for v in c.values():
+                    hit = find(v)
+                    if hit is not None:
+                        return hit
+            return None
+
+        kv = find(pre)
+        if kv is None or kvq is None:
+            return
+        k = np.asarray(jax.device_get(kv["k"]), np.float32)
+        if k.ndim < 2:
+            return
+        k = k[:, : self.page]
+        g, hd = kvq.group, k.shape[-1]
+        while g > 1 and hd % g:  # same power-of-two fit the cache init uses
+            g //= 2
+        _kv_encode_planes(jnp.asarray(k), g, kvq.k)
+
     def admit_pending(self, t_now: Optional[float] = None) -> int:
         """Admit from the queue head until blocked (FIFO — no request can
         starve behind a later, smaller one)."""
@@ -388,6 +450,20 @@ class PVQEngine:
     def _finish(self, req: Request) -> None:
         req.finish_t = time.perf_counter()
         self.finished.append(req)
+        if obs.enabled():
+            obs.counter("engine.requests_finished").inc()
+            if req.submit_t is not None:
+                obs.histogram("engine.request_latency_s").record(
+                    req.finish_t - req.submit_t
+                )
+                if req.first_token_t is not None:
+                    obs.histogram("engine.ttft_s").record(
+                        req.first_token_t - req.submit_t
+                    )
+            obs.histogram("engine.queue_wait_s").record(req.queue_wait_s)
+            if req.evictions:
+                obs.histogram("engine.evict_cost_s").record(req.evict_cost_s)
+            obs.event("engine/retire", args={"rid": req.rid})
 
     def _release(self, s: int) -> _Slot:
         st = self.slots[s]
@@ -404,7 +480,14 @@ class PVQEngine:
     def _evict(self, s: int) -> None:
         st = self._release(s)
         st.req.evictions += 1
+        st.req.evict_t = time.perf_counter()
         self.stats["evictions"] += 1
+        if obs.enabled():
+            obs.counter("engine.evictions").inc()
+            obs.event(
+                "engine/evict",
+                args={"rid": st.req.rid, "kept_tokens": len(st.req.generated)},
+            )
         # queue head: the victim resumes as soon as pages free up
         self.pending.appendleft(st.req)
 
@@ -444,14 +527,33 @@ class PVQEngine:
                 self._page_table[s, st.length // self.page] = pid
                 write_page[s] = pid
 
-        tok_ids, self.cache = self._decode(
-            self.params, self.cache, tokens, pos,
-            self._page_table.copy(), write_page,
-        )
-        tok_host = np.asarray(jax.device_get(tok_ids))
+        # obs.NOOP when disabled: no span object, no args dict — the
+        # telemetry hook adds zero allocations to the disabled decode step
+        span = obs.NOOP
+        if obs.enabled():
+            span = obs.span("engine/decode_step", args={
+                "active": len(active), "queue": len(self.pending),
+                "free_pages": self.alloc.available,
+            })
+        with span:
+            tok_ids, self.cache = self._decode(
+                self.params, self.cache, tokens, pos,
+                self._page_table.copy(), write_page,
+            )
+            tok_host = np.asarray(jax.device_get(tok_ids))
         self.stats["steps"] += 1
         self.stats["active_slot_steps"] += len(active)
         self.stats["decode_tokens"] += len(active)
+        if obs.enabled():
+            obs.counter("engine.decode_steps").inc()
+            obs.counter("engine.decode_tokens").add(len(active))
+            obs.gauge("engine.queue_depth").set(len(self.pending))
+            obs.gauge("engine.page_pool_free").set(self.alloc.available)
+            obs.gauge("engine.active_slots").set(len(active))
+            # counter-track events: perfetto renders these as time series
+            obs.trace_counter("engine.queue_depth", len(self.pending))
+            obs.trace_counter("engine.page_pool_free", self.alloc.available)
+            obs.trace_counter("engine.active_slots", len(active))
         for s, st in active:
             st.length += 1
             st.req.generated.append(int(tok_host[s]))
@@ -532,9 +634,19 @@ class PVQEngine:
             for r in done
             if r.first_token_t is not None and r.submit_t is not None
         ]
+        # the telemetry histogram IS the percentile implementation — one
+        # type shared with the benchmarks instead of inline pct() copies
+        lat_h = Histogram.from_values(lat)
+        ttft_h = Histogram.from_values(ttft)
+        qwait_h = Histogram.from_values(r.queue_wait_s for r in done)
+        evict_costs = [r.evict_cost_s for r in done if r.evictions]
+        evict_h = Histogram.from_values(evict_costs)
 
-        def pct(xs, q):
-            return float(np.percentile(np.asarray(xs), q)) if xs else 0.0
+        if obs.enabled():
+            # trace-count watcher as a first-class metric (one gauge per
+            # jitted fn; report() may run repeatedly, so not a counter)
+            for fn, n in self.trace_counts.items():
+                obs.gauge("engine.trace_count", {"fn": fn}).set(n)
 
         steps = max(self.stats["steps"], 1)
         return {
@@ -542,10 +654,14 @@ class PVQEngine:
             "generated_tokens": toks,
             "wall_s": round(wall_s, 4),
             "tokens_per_s": round(toks / max(wall_s, 1e-9), 2),
-            "latency_p50_s": round(pct(lat, 50), 4),
-            "latency_p99_s": round(pct(lat, 99), 4),
-            "ttft_p50_s": round(pct(ttft, 50), 4),
-            "ttft_p99_s": round(pct(ttft, 99), 4),
+            "latency_p50_s": round(lat_h.percentile(50), 4),
+            "latency_p99_s": round(lat_h.percentile(99), 4),
+            "ttft_p50_s": round(ttft_h.percentile(50), 4),
+            "ttft_p99_s": round(ttft_h.percentile(99), 4),
+            "queue_wait_p50_s": round(qwait_h.percentile(50), 4),
+            "queue_wait_p99_s": round(qwait_h.percentile(99), 4),
+            "eviction_cost_total_s": round(evict_h.total, 4),
+            "eviction_cost_p50_s": round(evict_h.percentile(50), 4),
             "slot_utilization": round(
                 self.stats["active_slot_steps"] / (steps * self.n_slots), 4
             ),

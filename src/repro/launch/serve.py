@@ -53,6 +53,7 @@ from repro.core.packed import expert_leaves, packed_stats, quantize_params
 from repro.core.quantize import QuantPolicy, quantize_tree, total_bits
 from repro.launch.engine import bucket_len
 from repro.nn.models import build_model
+from repro.runtime import obs
 
 # Actual XLA trace counts of the shared decode step (incremented by a
 # Python side effect that only runs while tracing).  The regression tests
@@ -73,7 +74,11 @@ def _jit_step(model):
     fn = _STEP_JITS.get(model)
     if fn is None:
         def counted_step(params, cache, tok, pos):
+            # both side effects run at TRACE time only (host-side python;
+            # nothing lands inside the compiled body): the test dict, and
+            # the same watcher promoted to a first-class metric
             TRACE_COUNTS["decode_step"] += 1
+            obs.counter("serve.decode_step_traces").inc()
             return model.decode_step(params, cache, tok, pos)
 
         fn = jax.jit(counted_step)
@@ -112,20 +117,24 @@ def generate(model, params, tokens, *, gen: int, cache_len: int, extra_batch=Non
     share one compiled decode step (positions past the true length stay
     behind the attention length mask)."""
     cache_len = bucket_len(cache_len, _decode_bucket())
-    batch = {"tokens": tokens}
-    if extra_batch:
-        batch.update(extra_batch)
-    logits, cache = model.prefill(params, batch, cache_len=cache_len)
-    out = [tokens]
-    tok = jnp.argmax(logits[:, -1, :], -1)[:, None].astype(jnp.int32)
-
-    step = _jit_step(model)
-    pos0 = tokens.shape[1]
-    for i in range(gen):
-        out.append(tok)
-        logits, cache = step(params, cache, tok, jnp.int32(pos0 + i))
+    with obs.span("serve/generate", args={
+        "batch": int(tokens.shape[0]), "gen": int(gen), "cache_len": cache_len,
+    }):
+        batch = {"tokens": tokens}
+        if extra_batch:
+            batch.update(extra_batch)
+        with obs.span("serve/prefill"):
+            logits, cache = model.prefill(params, batch, cache_len=cache_len)
+        out = [tokens]
         tok = jnp.argmax(logits[:, -1, :], -1)[:, None].astype(jnp.int32)
-    return jnp.concatenate(out, axis=1)
+
+        step = _jit_step(model)
+        pos0 = tokens.shape[1]
+        for i in range(gen):
+            out.append(tok)
+            logits, cache = step(params, cache, tok, jnp.int32(pos0 + i))
+            tok = jnp.argmax(logits[:, -1, :], -1)[:, None].astype(jnp.int32)
+        return jnp.concatenate(out, axis=1)
 
 
 def teacher_forced_logits(
@@ -135,18 +144,21 @@ def teacher_forced_logits(
     decode path (prefill on the prompt, then ``decode_step`` fed the given
     tokens).  Returns (b, seq_len - prompt_len, vocab) logits predicting
     positions ``prompt_len..seq_len-1``."""
-    batch = {"tokens": seq[:, :prompt_len]}
-    if extra_batch:
-        batch.update(extra_batch)
-    cache_len = bucket_len(seq.shape[1], _decode_bucket())
-    logits, cache = model.prefill(params, batch, cache_len=cache_len)
-    steps = [logits[:, -1, :]]
-    step = _jit_step(model)
-    for i in range(seq.shape[1] - prompt_len - 1):
-        tok = seq[:, prompt_len + i : prompt_len + i + 1]
-        logits, cache = step(params, cache, tok, jnp.int32(prompt_len + i))
-        steps.append(logits[:, -1, :])
-    return jnp.stack(steps, axis=1)
+    with obs.span("serve/teacher_forced", args={
+        "batch": int(seq.shape[0]), "seq_len": int(seq.shape[1]),
+    }):
+        batch = {"tokens": seq[:, :prompt_len]}
+        if extra_batch:
+            batch.update(extra_batch)
+        cache_len = bucket_len(seq.shape[1], _decode_bucket())
+        logits, cache = model.prefill(params, batch, cache_len=cache_len)
+        steps = [logits[:, -1, :]]
+        step = _jit_step(model)
+        for i in range(seq.shape[1] - prompt_len - 1):
+            tok = seq[:, prompt_len + i : prompt_len + i + 1]
+            logits, cache = step(params, cache, tok, jnp.int32(prompt_len + i))
+            steps.append(logits[:, -1, :])
+        return jnp.stack(steps, axis=1)
 
 
 def top1_agreement(logits_a, logits_b) -> dict:
@@ -182,11 +194,21 @@ def top1_agreement(logits_a, logits_b) -> dict:
     )[..., 0]
     tie_cap = 0.05 * jnp.std(a, axis=-1)
     agree = strict | ((margin <= noise) & (margin <= tie_cap))
-    return {
+    out = {
         "top1_agreement": float(jnp.mean(agree.astype(jnp.float32))),
         "top1_agreement_strict": float(jnp.mean(strict.astype(jnp.float32))),
         "ties_excused": int(jnp.sum((agree & ~strict).astype(jnp.int32))),
     }
+    if obs.enabled():
+        # agreement as a streaming metric, not just one gate number
+        total = int(np.prod(np.asarray(strict.shape)))
+        obs.counter("quality.tokens_total").add(total)
+        obs.counter("quality.tokens_agree").add(int(jnp.sum(agree)))
+        obs.counter("quality.ties_excused").add(out["ties_excused"])
+        obs.histogram("quality.ref_margin").record_many(
+            np.asarray(margin, np.float64).ravel()
+        )
+    return out
 
 
 def engine_token_agreement(model, params, requests, outputs) -> dict:
@@ -221,6 +243,12 @@ def engine_token_agreement(model, params, requests, outputs) -> dict:
         agree += int(np.sum(match | tie))
         excused += int(np.sum(~match & tie))
         total += len(gen)
+        if obs.enabled():
+            # per-request streaming counters + the running agreement level
+            obs.counter("quality.tokens_total").add(len(gen))
+            obs.counter("quality.tokens_agree").add(int(np.sum(match | tie)))
+            obs.counter("quality.ties_excused").add(int(np.sum(~match & tie)))
+            obs.gauge("quality.agreement_running").set(agree / max(total, 1))
     return {
         "engine_token_agreement": agree / max(total, 1),
         "engine_tokens_compared": total,
@@ -333,6 +361,14 @@ def main() -> int:
         "shapes and persist them (REPRO_PVQ_TUNE_CACHE); later PVQ-kernel "
         "dispatch through kernels.ops picks the tuned tiles up transparently",
     )
+    ap.add_argument(
+        "--metrics-out",
+        default=None,
+        metavar="DIR",
+        help="enable the process telemetry registry (repro.runtime.obs) and "
+        "write metrics.jsonl + a perfetto-loadable trace.json into DIR on "
+        "exit (every exit path, gate failures included)",
+    )
     args = ap.parse_args()
     if args.act_int8 and not (args.pvq or args.artifact):
         ap.error("--act-int8 quantizes the packed matmul activations; "
@@ -344,6 +380,42 @@ def main() -> int:
         ap.error("--engine pages the PVQ-compressed KV cache (page = kv "
                  "block); it requires --kv-pvq")
 
+    if args.metrics_out:
+        obs.set_enabled(True)
+    try:
+        return _serve(args)
+    finally:
+        if args.metrics_out:
+            obs.write(args.metrics_out)
+
+
+def _probe_act_rows(params) -> None:
+    """Host-side ActQuant quality probe on real weight rows.
+
+    The serving matmuls quantize activations under jit, where the
+    eager-only probe in ``quantize_activations`` can't fire; here we run
+    the identical transform eagerly on rows of the packed embedding (or
+    the first packed leaf) so the clamp/saturation metrics get real data.
+    """
+    import re
+
+    from repro.core.packed import packed_leaves
+    from repro.core.quantize import default_act_quant, quantize_activations
+
+    aq = default_act_quant()
+    leaves = packed_leaves(params)
+    if aq is None or not leaves:
+        return
+    pick = next(
+        (l for p, l in leaves.items() if re.search(r"(^|/)embedding$", p)),
+        next(iter(leaves.values())),
+    )
+    rows = pick.dequantize(jnp.float32)
+    rows = rows.reshape(-1, rows.shape[-1])[:32]
+    quantize_activations(rows, aq)
+
+
+def _serve(args) -> int:
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
@@ -351,10 +423,14 @@ def main() -> int:
     params = model.init(jax.random.PRNGKey(args.seed), max_seq=args.prompt_len + args.gen)
 
     report = {}
+    if args.metrics_out:
+        report["metrics_out"] = args.metrics_out
     if args.tune:
         from repro.core.packed import matmul_plan
         from repro.kernels import autotune
 
+        t_tune = time.time()
+        autotune.reset_tune_stats()
         d_model = cfg.d_model
         d_ff = getattr(cfg, "d_ff", 0) or 4 * d_model
         group = cfg.pvq.group or 128
@@ -426,6 +502,10 @@ def main() -> int:
                     }
         report["tuned_tiles"] = tuned
         report["tune_cache"] = str(autotune.cache_path())
+        # tuning cost was silent before: total wall time + per-key
+        # hit/miss/search counts straight from the autotuner
+        report["tune_wall_s"] = round(time.time() - t_tune, 2)
+        report["tune_stats"] = autotune.tune_stats()
     if args.artifact:
         import os
 
@@ -505,6 +585,9 @@ def main() -> int:
             )
             print(json.dumps(report))
             return 1
+
+    if obs.enabled() and args.act_int8:
+        _probe_act_rows(params)
 
     if args.engine:
         from repro.launch.engine import PVQEngine, poisson_trace

@@ -338,6 +338,50 @@ def test_generate_decode_compiles_once_per_bucket(served):
 
 
 # ---------------------------------------------------------------------------
+# Engine telemetry: spans/gauges land in the registry, report gains the
+# queue-wait / eviction-cost columns
+# ---------------------------------------------------------------------------
+
+
+def test_engine_telemetry_spans_gauges_and_report_fields(served, tmp_path):
+    from repro.runtime import obs, telemetry
+
+    cfg, model, params = served
+    prev = obs.set_enabled(True)
+    obs.registry().clear()
+    try:
+        with kv_quant_scope(KVQ):
+            trace = poisson_trace(
+                4, rate=0.0, vocab=cfg.vocab_size, prompt_lens=(4, 10),
+                max_new=4, seed=13,
+            )
+            eng = PVQEngine(model, params, n_slots=2, max_len=24)
+            res = eng.run(trace)
+        # report: queue-wait + per-request eviction-cost accounting
+        for key in ("queue_wait_p50_s", "queue_wait_p99_s",
+                    "eviction_cost_total_s", "eviction_cost_p50_s"):
+            assert key in res, key
+        assert res["queue_wait_p50_s"] >= 0.0
+        files = obs.registry().write(str(tmp_path))
+        recs = telemetry.validate_metrics_jsonl(files["metrics"])
+        names = {r["name"] for r in recs}
+        assert {"engine.decode_steps", "engine.queue_depth",
+                "engine.page_pool_free", "engine.admissions",
+                "engine.request_latency_s", "engine.queue_wait_s"} <= names
+        by_name = {r["name"]: r for r in recs if not r["labels"]}
+        assert by_name["engine.admissions"]["value"] == 4
+        assert by_name["engine.request_latency_s"]["count"] == 4
+        events = telemetry.validate_chrome_trace(files["trace"])
+        span_names = {e["name"] for e in events}
+        assert set(telemetry.ENGINE_REQUIRED_SPANS) <= span_names
+        # per-step counter tracks for the perfetto time series
+        assert "engine.queue_depth" in {e["name"] for e in events if e["ph"] == "C"}
+    finally:
+        obs.set_enabled(prev)
+        obs.registry().clear()
+
+
+# ---------------------------------------------------------------------------
 # Sharding rules for the slot-pool cache
 # ---------------------------------------------------------------------------
 

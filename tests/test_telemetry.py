@@ -1,0 +1,321 @@
+"""Observability layer tests: instrument semantics (counters, gauges,
+exact-reservoir histogram percentiles), the disabled registry's true-no-op
+contract (NOOP identity + zero allocations in the engine decode-step guard
+pattern), Chrome trace-event well-formedness, metrics-JSONL schema
+round-trip, trace-count metric parity with the ``TRACE_COUNTS`` compile
+regressions, autotune hit/miss lookup counters, and the quant-quality
+probes' eager-only (never-inside-jit) behavior."""
+
+import gc
+import json
+import os
+import subprocess
+import sys
+import tracemalloc
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.runtime import obs, telemetry
+from repro.runtime.telemetry import (
+    HISTOGRAM_FIELDS,
+    METRICS_SCHEMA,
+    Histogram,
+    MetricsRegistry,
+    snr_db,
+    validate_chrome_trace,
+    validate_dir,
+    validate_metrics_jsonl,
+)
+
+
+@pytest.fixture()
+def enabled_registry():
+    """Flip the module registry on for one test, restore + clear after."""
+    prev = obs.set_enabled(True)
+    obs.registry().clear()
+    yield obs.registry()
+    obs.set_enabled(prev)
+    obs.registry().clear()
+
+
+# ---------------------------------------------------------------------------
+# instruments
+# ---------------------------------------------------------------------------
+
+
+def test_histogram_exact_percentiles_match_numpy():
+    vals = list(np.random.default_rng(0).normal(size=513))
+    h = Histogram.from_values(vals, name="x")
+    assert h.exact
+    assert h.count == len(vals)
+    assert h.total == pytest.approx(sum(vals))
+    assert h.min == min(vals) and h.max == max(vals)
+    for q in (50, 90, 99):
+        assert h.percentile(q) == pytest.approx(float(np.percentile(vals, q)))
+    snap = h.snapshot()
+    assert snap["kind"] == "histogram"
+    for field in HISTOGRAM_FIELDS:
+        assert field in snap
+
+
+def test_histogram_reservoir_caps_storage_keeps_exact_aggregates():
+    h = Histogram("y", max_samples=128)
+    vals = list(range(1000))
+    h.record_many(vals)
+    assert not h.exact  # past the cap: percentiles become sampled
+    assert len(h._values) == 128
+    assert h.count == 1000  # ...but count/sum/min/max stay exact
+    assert h.total == sum(vals)
+    assert h.min == 0 and h.max == 999
+    # reservoir keeps a uniform sample: p50 should be roughly central
+    assert 250 < h.percentile(50) < 750
+    # deterministic: same inputs reproduce the same reservoir
+    h2 = Histogram("y", max_samples=128)
+    h2.record_many(vals)
+    assert h._values == h2._values
+
+
+def test_histogram_empty_percentile_is_zero():
+    assert Histogram("z").percentile(99) == 0.0
+
+
+def test_counter_gauge_labels_and_snapshot():
+    reg = MetricsRegistry(enabled=True)
+    reg.counter("hits").inc()
+    reg.counter("hits").inc(2)
+    reg.counter("hits", {"codec": "zlib"}).inc()  # distinct label set
+    reg.gauge("depth").set(3)
+    reg.gauge("depth").set(1)
+    snaps = {((r["name"],) + tuple(sorted(r["labels"].items()))): r
+             for r in reg.snapshot()}
+    assert snaps[("hits",)]["value"] == 3
+    assert snaps[("hits", ("codec", "zlib"))]["value"] == 1
+    g = snaps[("depth",)]
+    assert g["value"] == 1 and g["min"] == 1 and g["max"] == 3 and g["n"] == 2
+    assert all(r["schema"] == METRICS_SCHEMA for r in snaps.values())
+
+
+def test_snr_db():
+    x = np.ones(64)
+    assert snr_db(x, x) == 99.0  # exact reconstruction hits the cap
+    assert snr_db(x, x * 0.9) == pytest.approx(20.0)
+    assert snr_db(np.zeros(4), np.ones(4)) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# disabled registry: a true no-op
+# ---------------------------------------------------------------------------
+
+
+def test_disabled_registry_returns_noop_singleton():
+    reg = MetricsRegistry(enabled=False)
+    assert reg.counter("a") is telemetry.NOOP
+    assert reg.gauge("b") is telemetry.NOOP
+    assert reg.histogram("c") is telemetry.NOOP
+    assert reg.span("d") is telemetry.NOOP
+    with reg.span("d"):  # NOOP doubles as a context manager
+        pass
+    reg.trace_counter("e", 1.0)
+    reg.event("f")
+    assert reg.snapshot() == []
+    assert reg.chrome_trace()["traceEvents"] == []
+
+
+def test_disabled_decode_step_guard_pattern_allocates_nothing():
+    """The exact instrumentation shape PVQEngine.step uses: when the
+    registry is disabled, repeated steps must not accumulate memory (no
+    instruments, no events, no per-step garbage retained)."""
+    assert not obs.enabled()
+
+    def step_hook():
+        span = obs.NOOP
+        if obs.enabled():
+            span = obs.span("engine/decode_step", args={"active": 1})
+        with span:
+            pass
+        if obs.enabled():
+            obs.gauge("engine.queue_depth").set(0)
+            obs.counter("engine.decode_steps").inc()
+
+    step_hook()  # warm any lazy import/attribute state
+    gc.collect()
+    tracemalloc.start()
+    base = tracemalloc.get_traced_memory()[0]
+    for _ in range(5000):
+        step_hook()
+    gc.collect()
+    grown = tracemalloc.get_traced_memory()[0] - base
+    tracemalloc.stop()
+    # even one retained object per step would be tens of KB over 5000 steps
+    assert grown < 2048, f"disabled telemetry retained {grown} bytes"
+
+
+# ---------------------------------------------------------------------------
+# export round-trips
+# ---------------------------------------------------------------------------
+
+
+def test_chrome_trace_well_formed(tmp_path):
+    reg = MetricsRegistry(enabled=True)
+    with reg.span("engine/decode_step", args={"active": 2}):
+        pass
+    reg.trace_counter("engine.queue_depth", 3.0)
+    reg.event("engine/admit", args={"rid": 7})
+    path = str(tmp_path / "trace.json")
+    reg.export_chrome_trace(path)
+
+    with open(path) as f:
+        doc = json.load(f)  # plain JSON, perfetto-loadable
+    assert doc["displayTimeUnit"] == "ms"
+    events = validate_chrome_trace(path)
+    by_ph = {e["ph"]: e for e in events}
+    assert by_ph["X"]["name"] == "engine/decode_step"
+    assert by_ph["X"]["dur"] >= 0 and by_ph["X"]["args"]["active"] == 2
+    assert by_ph["C"]["args"]["value"] == 3.0
+    assert by_ph["i"]["s"] == "p"
+
+
+def test_metrics_jsonl_schema_round_trip(tmp_path):
+    reg = MetricsRegistry(enabled=True)
+    reg.counter("engine.decode_steps").inc(14)
+    reg.gauge("engine.page_pool_free").set(9)
+    reg.histogram("engine.request_latency_s").record_many([0.1, 0.2, 0.4])
+    files = reg.write(str(tmp_path))
+    recs = validate_metrics_jsonl(files["metrics"])
+    by_name = {r["name"]: r for r in recs}
+    assert by_name["engine.decode_steps"]["value"] == 14
+    assert by_name["engine.page_pool_free"]["value"] == 9.0
+    hist = by_name["engine.request_latency_s"]
+    assert hist["count"] == 3 and hist["exact"] is True
+    assert hist["p50"] == pytest.approx(0.2)
+    assert validate_dir(str(tmp_path)) == {"metrics": 3, "trace_events": 0}
+
+
+def test_validators_reject_malformed(tmp_path):
+    bad_metrics = tmp_path / "metrics.jsonl"
+    bad_metrics.write_text(json.dumps({"schema": "wrong", "kind": "counter",
+                                       "name": "x", "labels": {}, "value": 1}) + "\n")
+    with pytest.raises(ValueError, match="bad schema"):
+        validate_metrics_jsonl(str(bad_metrics))
+    bad_trace = tmp_path / "trace.json"
+    bad_trace.write_text(json.dumps({"traceEvents": [{"name": "x", "ph": "Z", "ts": 0}]}))
+    with pytest.raises(ValueError, match="bad phase"):
+        validate_chrome_trace(str(bad_trace))
+
+
+def test_validate_cli(tmp_path):
+    reg = MetricsRegistry(enabled=True)
+    reg.counter("n").inc()
+    with reg.span("s"):
+        pass
+    reg.write(str(tmp_path))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.getcwd(), "src")
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.runtime.telemetry", "--validate", str(tmp_path)],
+        capture_output=True, text=True, env=env,
+    )
+    assert proc.returncode == 0, proc.stderr
+    out = json.loads(proc.stdout)
+    assert out["ok"] is True and out["metrics"] == 1 and out["trace_events"] == 1
+
+
+# ---------------------------------------------------------------------------
+# trace-count metric parity with TRACE_COUNTS
+# ---------------------------------------------------------------------------
+
+
+def test_decode_step_trace_counter_parity(enabled_registry):
+    """The ``serve.decode_step_traces`` metric moves in lockstep with the
+    ``TRACE_COUNTS['decode_step']`` regression counter: +1 per fresh
+    compile, +0 on cache hits (same shapes), +1 again on a new batch
+    shape — same contract test_engine's compile-count regressions pin."""
+    from repro.launch import serve
+
+    class _Toy:
+        def decode_step(self, params, cache, tok, pos):
+            del pos
+            logits = jnp.zeros((tok.shape[0], 1, 8), jnp.float32) + params
+            return logits, cache
+
+    step = serve._jit_step(_Toy())
+    params = jnp.float32(1.0)
+    cache = jnp.zeros((1,), jnp.float32)
+    before = serve.TRACE_COUNTS["decode_step"]
+
+    step(params, cache, jnp.zeros((1, 1), jnp.int32), jnp.int32(0))
+    step(params, cache, jnp.zeros((1, 1), jnp.int32), jnp.int32(1))  # cache hit
+    step(params, cache, jnp.zeros((2, 1), jnp.int32), jnp.int32(0))  # new shape
+
+    delta = serve.TRACE_COUNTS["decode_step"] - before
+    assert delta == 2
+    assert obs.counter("serve.decode_step_traces").value == delta
+
+
+# ---------------------------------------------------------------------------
+# autotune lookup counters
+# ---------------------------------------------------------------------------
+
+
+def test_autotune_hit_miss_counters(tmp_path, monkeypatch, enabled_registry):
+    from repro.kernels import autotune
+
+    backend = jax.default_backend()
+    key = autotune.cache_key(8, 64, 32, 32, jnp.float32, backend)
+    cache_file = tmp_path / "tune.json"
+    cache_file.write_text(json.dumps({key: {"bm": 8, "bn": 32, "bk": 32, "us": 1.0}}))
+    monkeypatch.setenv("REPRO_PVQ_TUNE_CACHE", str(cache_file))
+    monkeypatch.delenv("REPRO_PVQ_AUTOTUNE", raising=False)
+    autotune.clear_memory_cache()
+    autotune.reset_tune_stats()
+    try:
+        assert autotune.get_tiles(8, 64, 32, group=32, search=False) == (8, 32, 32)
+        autotune.get_tiles(8, 128, 32, group=32, search=False)  # miss -> heuristic
+        st = autotune.tune_stats()
+        assert st["hits"] == 1 and st["misses"] == 1 and st["searches"] == 0
+        assert st["by_key"][key]["hits"] == 1
+        assert obs.counter("autotune.hit").value == 1
+        assert obs.counter("autotune.miss").value == 1
+        assert obs.counter("autotune.lookups").value == 2
+    finally:
+        autotune.clear_memory_cache()
+        autotune.reset_tune_stats()
+
+
+# ---------------------------------------------------------------------------
+# quant-quality probes: eager-only, never inside jit traces
+# ---------------------------------------------------------------------------
+
+
+def test_act_quant_probe_eager_only(enabled_registry):
+    from repro.core.quantize import ActQuant, quantize_activations
+
+    aq = ActQuant()
+    x = jnp.asarray(np.random.default_rng(1).normal(size=(4, 32)), jnp.float32)
+    quantize_activations(x, aq)
+    assert obs.counter("quant.act_quant_calls").value == 1
+    assert obs.registry().histogram("quant.act_clamp_frac").count == 1
+
+    jitted = jax.jit(lambda y: quantize_activations(y, aq)[0])
+    jitted(x)
+    jitted(x)  # tracer path: the probe must stay silent
+    assert obs.counter("quant.act_quant_calls").value == 1
+
+
+def test_weight_pack_probe_records_snr(enabled_registry):
+    from repro.core.packed import quantize_params
+    from repro.core.quantize import QuantPolicy
+
+    w = jnp.asarray(np.random.default_rng(2).normal(size=(8, 32)), jnp.float32)
+    policy = QuantPolicy(rules=(("embedding", 1.0, 16),), scale_mode="ls")
+    quantize_params({"embedding": w}, policy)
+    assert obs.counter("quant.weight_leaves_packed").value == 1
+    h = obs.registry().histogram("quant.weight_snr_db")
+    assert h.count == 1
+    assert h.percentile(50) > 0.0  # reconstruction beats zero-signal
+    assert obs.counter("quant.weight_bytes_packed").value < \
+        obs.counter("quant.weight_bytes_dense").value
