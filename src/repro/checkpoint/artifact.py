@@ -29,7 +29,8 @@ exception: it codes whole (G, group) rows, padded groups included.
 Codec selection (``codec="auto"``) follows the paper's §VI practicality
 order, but *measured*: price every candidate with the exact size models
 (``bitstream.measured_bits``) and take the cheapest in bits — enumeration
-is only admitted when its O(N*K) bigint encode cost fits ``enum_budget``.
+runs on the vectorized limb ladder, so it is default-eligible on every
+leaf whose count tables fit memory (no bigint work budget).
 """
 
 from __future__ import annotations
@@ -47,7 +48,6 @@ import numpy as np
 
 from repro.core import bitstream
 from repro.core.bitstream import (  # noqa: F401  (re-exported API)
-    DEFAULT_ENUM_BUDGET,
     PULSE_CODECS,
     choose_codec,
 )
@@ -133,8 +133,7 @@ def write_pvqz(
     params: Any,
     *,
     codec: str = "auto",
-    chunk: int = bitstream.DEFAULT_CHUNK,
-    enum_budget: int = DEFAULT_ENUM_BUDGET,
+    chunk: Optional[int] = None,
     meta: Optional[Dict[str, Any]] = None,
 ) -> Dict[str, Any]:
     """Encode a (mixed) parameter pytree into a ``.pvqz`` file.
@@ -153,8 +152,7 @@ def write_pvqz(
     tmp_path = path.with_name(f".{path.name}.tmp{os.getpid()}")
     try:
         report = _write_pvqz_file(
-            tmp_path, params, codec=codec, chunk=chunk,
-            enum_budget=enum_budget, meta=meta,
+            tmp_path, params, codec=codec, chunk=chunk, meta=meta,
         )
     except BaseException:
         try:
@@ -172,8 +170,7 @@ def _write_pvqz_file(
     params: Any,
     *,
     codec: str,
-    chunk: int,
-    enum_budget: int,
+    chunk: Optional[int],
     meta: Optional[Dict[str, Any]],
 ) -> Dict[str, Any]:
     flat = _flatten(params)
@@ -192,14 +189,10 @@ def _write_pvqz_file(
                 stream = pulse_stream(leaf)
                 groups = pulse_groups(leaf)
                 if codec == "auto":
-                    leaf_codec, sizes = choose_codec(
-                        stream, groups, leaf.k, enum_budget=enum_budget
-                    )
+                    leaf_codec, sizes = choose_codec(stream, groups, leaf.k)
                 else:
                     leaf_codec = codec
-                    _, sizes = choose_codec(
-                        stream, groups, leaf.k, enum_budget=enum_budget
-                    )
+                    _, sizes = choose_codec(stream, groups, leaf.k)
                 symbols = groups if leaf_codec == "enum" else stream
                 t_enc = time.perf_counter()
                 blob, info = bitstream.encode_pulses(
@@ -329,10 +322,26 @@ def _read_checked(f, offset: int, nbytes: int, crc: int, what: str) -> bytes:
     return blob
 
 
-def _decode_packed(f, rec: Dict[str, Any]) -> PackedPVQ:
+def _read_packed_blobs(f, rec: Dict[str, Any]) -> Tuple[bytes, bytes]:
+    """File half of the packed-leaf decode: seeks + CRC checks, main thread."""
     blob = _read_checked(
         f, rec["offset"], rec["nbytes"], rec["crc32"], f"pulses of {rec['path']}"
     )
+    sblob = _read_checked(
+        f,
+        rec["scales_offset"],
+        rec["scales_nbytes"],
+        rec["scales_crc32"],
+        f"scales of {rec['path']}",
+    )
+    return blob, sblob
+
+
+def _decode_packed_np(
+    blob: bytes, sblob: bytes, rec: Dict[str, Any]
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Numpy half of the packed-leaf decode (no jax, no file handle) —
+    safe to run on the prefetch worker thread."""
     info = rec["pulse_info"]
     pulse_shape = tuple(rec["pulse_shape"])
     t_dec = time.perf_counter()
@@ -345,17 +354,17 @@ def _decode_packed(f, rec: Dict[str, Any]) -> PackedPVQ:
     _note_codec(
         "decode", info["codec"], int(pulses.size), time.perf_counter() - t_dec
     )
-    sblob = _read_checked(
-        f,
-        rec["scales_offset"],
-        rec["scales_nbytes"],
-        rec["scales_crc32"],
-        f"scales of {rec['path']}",
+    scales = (
+        np.frombuffer(sblob, "<f4").reshape(rec["scales_shape"]).astype(np.float32)
     )
-    scales = np.frombuffer(sblob, "<f4").reshape(rec["scales_shape"])
+    return pulses, scales
+
+
+def _place_packed(rec: Dict[str, Any], pulses: np.ndarray, scales: np.ndarray) -> PackedPVQ:
+    """Device-placement half: jnp conversion stays on the main thread."""
     return PackedPVQ(
         pulses=jnp.asarray(pulses),
-        scales=jnp.asarray(scales.astype(np.float32)),
+        scales=jnp.asarray(scales),
         group=int(rec["group"]),
         k=int(rec["k"]),
         shape=tuple(rec["shape"]),
@@ -363,6 +372,11 @@ def _decode_packed(f, rec: Dict[str, Any]) -> PackedPVQ:
         layout=rec["layout"],
         scale_mode=rec["scale_mode"],
     )
+
+
+def _decode_packed(f, rec: Dict[str, Any]) -> PackedPVQ:
+    blob, sblob = _read_packed_blobs(f, rec)
+    return _place_packed(rec, *_decode_packed_np(blob, sblob, rec))
 
 
 def _decode_raw(f, rec: Dict[str, Any]) -> np.ndarray:
@@ -375,21 +389,54 @@ def _decode_raw(f, rec: Dict[str, Any]) -> np.ndarray:
     return arr
 
 
-def iter_pvqz(path: str | Path) -> Iterator[Tuple[str, Any]]:
+def iter_pvqz(path: str | Path, *, prefetch: bool = True) -> Iterator[Tuple[str, Any]]:
     """Stream (path_key, leaf) pairs, decoding ONE leaf at a time.
 
     Packed leaves come back as bit-exact ``PackedPVQ`` (identical pulses and
     scales to what was exported — no re-encode anywhere); raw leaves as
     numpy arrays.  Peak decode memory is bounded by the largest single leaf,
-    never the whole artifact.
+    never the whole artifact (the prefetch keeps at most one extra decoded
+    leaf in flight).
+
+    With ``prefetch`` (the default) the numpy entropy decode of the next
+    leaf overlaps the device placement of the current one: a single worker
+    thread runs :func:`_decode_packed_np` while the main thread does the
+    file reads, CRC checks, and ``jnp.asarray`` placement.  Exceptions from
+    the worker surface at the corresponding yield.
     """
     toc = read_toc(path)
-    with open(path, "rb") as f:
+    if not prefetch:
+        with open(path, "rb") as f:
+            for rec in toc["leaves"]:
+                if rec["kind"] == "packed":
+                    yield rec["path"], _decode_packed(f, rec)
+                else:
+                    yield rec["path"], _decode_raw(f, rec)
+        return
+    from concurrent.futures import Future, ThreadPoolExecutor
+
+    with open(path, "rb") as f, ThreadPoolExecutor(
+        max_workers=1, thread_name_prefix="pvqz-decode"
+    ) as pool:
+        pending: list[Tuple[Dict[str, Any], Any]] = []
+
+        def emit(rec: Dict[str, Any], ready: Any) -> Tuple[str, Any]:
+            if isinstance(ready, Future):
+                return rec["path"], _place_packed(rec, *ready.result())
+            return rec["path"], ready
+
         for rec in toc["leaves"]:
             if rec["kind"] == "packed":
-                yield rec["path"], _decode_packed(f, rec)
+                blob, sblob = _read_packed_blobs(f, rec)
+                pending.append(
+                    (rec, pool.submit(_decode_packed_np, blob, sblob, rec))
+                )
             else:
-                yield rec["path"], _decode_raw(f, rec)
+                pending.append((rec, _decode_raw(f, rec)))
+            while len(pending) > 1:  # keep exactly one decode in flight
+                yield emit(*pending.pop(0))
+        while pending:
+            yield emit(*pending.pop(0))
 
 
 def load_pvqz(path: str | Path, target: Optional[Any] = None) -> Any:

@@ -12,10 +12,13 @@ Three stream families, all bit-exact round-trips:
   Table-5 ladder: 1 bit for 0, 3 for +/-1, 5 for +/-2..3, ...
 * ``rle``     — (zero-run, nonzero-value) pairs, both Golomb coded; the
   natural fit for N/K >= 5 layers (>= 4/5 zeros guaranteed).
-* ``enum``    — fixed-length Fischer enumeration: per group, the L1 norm
-  k_g in ``ceil(log2(K+1))`` bits then the lexicographic rank within
-  P(N, k_g) in ``index_bits(N, K)`` bits (``repro.core.enumeration``).
-  Optimal-length but O(N*K) bigint work per group — offline/small leaves.
+* ``enum``    — Fischer enumeration over sub-ladders: each group row is
+  split into ``enum_sub_width(N)``-wide sub-rows; the stream is all L1
+  headers (fixed width) then each sub-row's lexicographic rank within
+  P(sub, k_s) in ``index_bits(sub, k_s)`` bits.  Encoded and decoded by the
+  vectorized limb ladder (``repro.core.enumeration``) — near-optimal length
+  at bulk-numpy speed, the default-eligible codec on every leaf whose count
+  tables fit memory.
 
 Chunked streams embed their per-chunk bit-offset table in the blob header
 (``[u32 n_chunks][u64 * n_chunks bit offsets][stream bytes]``) so a blob +
@@ -30,15 +33,23 @@ from typing import Dict, Optional, Tuple
 
 import numpy as np
 
-from .codes import golomb_length, rle_bits, rle_flat_pairs, unzigzag, zigzag
-from .enumeration import index_bits, index_to_vector, vector_to_index
+from .codes import golomb_length, rle_bits, rle_flat_pairs, zigzag
+from .enumeration import (
+    enum_supported,
+    index_bits,
+    index_to_vector_batch,
+    limb_count,
+    vector_to_index_batch,
+)
 
 DEFAULT_CHUNK = 1024
 
-#: max G * group * K bigint ops admitted for the enumeration codec — its
-#: encode is O(N*K) Python bigints per group, so it is only *eligible* on
-#: small leaves even though it is the measured-bits winner almost everywhere
-DEFAULT_ENUM_BUDGET = 500_000
+#: ladder width of the enumeration stream — group rows are split into
+#: contiguous sub-rows of (at most) this many coordinates, each carrying its
+#: own L1 header.  Narrower ladders decode faster (fewer sequential coordinate
+#: rounds, fewer rank limbs) and the per-sub headers act as a crude adaptive
+#: bit allocation, so the split *reduces* total payload bits on real leaves.
+ENUM_SUB = 64
 
 #: deterministic tie-break order for codec selection (paper §VI practicality)
 PULSE_CODECS = ("golomb", "rle", "enum", "nibble", "int8")
@@ -71,11 +82,6 @@ def pack_bits(codes: np.ndarray, lengths: np.ndarray) -> Tuple[np.ndarray, int]:
     return np.packbits(bits), total
 
 
-def unpack_to_bits(blob: bytes | np.ndarray) -> np.ndarray:
-    """Byte blob -> 0/1 uint8 array (length a multiple of 8)."""
-    return np.unpackbits(np.frombuffer(bytes(blob), np.uint8))
-
-
 def _bit_length(x: np.ndarray) -> np.ndarray:
     """Per-element bit length of positive int64 values (vectorized)."""
     # float64 log2 is exact-enough below 2^52: the gap to the next power of
@@ -95,23 +101,36 @@ def golomb_lengths_codes(values: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
     return x1.astype(np.uint64), 2 * nb - 1
 
 
+def auto_chunk(count: int) -> int:
+    """Chunk size targeting ~1.5k parallel chunks (power of two in
+    [64, 4096]): decode wall time scales with the chunk length while numpy
+    per-op overhead amortizes across chunks, so small streams want small
+    chunks.  The choice is baked into the stream's offset table at encode
+    time and travels in its info dict."""
+    c = max(count // 1536, 64)
+    return 1 << min(c.bit_length() - 1, 12)
+
+
 def golomb_encode_chunked(
-    values: np.ndarray, chunk: int = DEFAULT_CHUNK
-) -> Tuple[np.ndarray, np.ndarray, int]:
+    values: np.ndarray, chunk: Optional[int] = None
+) -> Tuple[np.ndarray, np.ndarray, int, int]:
     """Encode to one contiguous bitstream + per-chunk bit offsets.
 
     Returns (packed uint8 array, chunk_offsets uint64 (ceil(count/chunk),),
-    total_bits).  Offsets point at the first bit of symbols 0, chunk,
-    2*chunk, ... — the decoder processes all chunks in parallel.
+    total_bits, chunk).  Offsets point at the first bit of symbols 0, chunk,
+    2*chunk, ... — the decoder processes all chunks in parallel.  ``chunk``
+    defaults to :func:`auto_chunk` of the symbol count.
     """
     codes, lengths = golomb_lengths_codes(values)
+    if chunk is None:
+        chunk = auto_chunk(codes.size)
     if codes.size == 0:
-        return np.zeros(0, np.uint8), np.zeros(0, np.uint64), 0
+        return np.zeros(0, np.uint8), np.zeros(0, np.uint64), 0, chunk
     ends = np.cumsum(lengths)
     n_chunks = -(-codes.size // chunk)
     offsets = np.concatenate([[0], ends[chunk - 1 :: chunk]])[:n_chunks]
     blob, total = pack_bits(codes, lengths)
-    return blob, offsets.astype(np.uint64), total
+    return blob, offsets.astype(np.uint64), total, chunk
 
 
 def golomb_decode_chunked(
@@ -124,39 +143,53 @@ def golomb_decode_chunked(
 
     Every chunk advances one symbol per round; a round is ~a dozen numpy ops
     on (n_chunks,)-sized arrays, so wall time scales with ``chunk``, not with
-    ``count``.  Working set: the unpacked bit array (1 B/bit) plus one
-    next-one index table (4 B/bit for streams under 2^31 bits) — built in
-    place so decode memory stays a small multiple of the compressed blob,
-    not of the dense leaf.
+    ``count``.  Each round reads one big-endian 64-bit byte window per chunk
+    and takes the prefix-zero count, the payload, and the unzigzagged value
+    from it — no per-bit inner loop and no unpacked bit array.  The zero
+    count comes from the float32 exponent of the window's top 24 bits (< 2^24
+    so the conversion is exact); the rare codeword longer than 24 bits falls
+    back to an exact float64 log2 on the top 32.  Chunks that run out of
+    symbols keep walking a 0xFF guard tail (one bit per round, masked off by
+    the final trim), which keeps the rounds branch- and mask-free.  Handles
+    codewords up to 57 bits, with decoded values accumulated in int32
+    (|symbol| <= 2^29 after zigzag — far beyond any pulse value or zero-run
+    the RLE pair stream can produce).
     """
     if count == 0:
         return np.zeros(0, np.int64)
-    bits = unpack_to_bits(blob)
-    # next-one table: smallest index >= i holding a 1 bit (suffix-min in place)
-    idx_dtype = np.int64 if bits.size > np.iinfo(np.int32).max else np.int32
-    nxt = np.where(bits == 1, np.arange(bits.size, dtype=idx_dtype), bits.size)
-    rev = nxt[::-1]
-    np.minimum.accumulate(rev, out=rev)
-    offsets = np.asarray(chunk_offsets, np.int64)
-    n_chunks = offsets.size
-    counts = np.full(n_chunks, chunk, np.int64)
-    counts[-1] = count - chunk * (n_chunks - 1)
-    pos = offsets.copy()
-    out = np.empty(count, np.int64)
-    out_base = np.arange(n_chunks) * chunk
-    for s in range(int(counts.max())):
-        active = counts > s
-        p = pos[active]
-        f = nxt[p]  # leading 1 of the codeword; z = f - p prefix zeros
-        z = f - p
-        val = np.zeros(p.size, np.int64)
-        for j in range(int(z.max()) + 1):
-            take = j <= z
-            bitj = bits[np.minimum(f + j, bits.size - 1)]
-            val = np.where(take, (val << 1) | bitj, val)
-        out[out_base[active] + s] = val - 1
-        pos[active] = f + z + 1
-    return unzigzag(out)
+    u64, u32, i64 = np.uint64, np.uint32, np.int64
+    if isinstance(blob, np.ndarray):
+        data = np.asarray(blob, np.uint8)
+    else:
+        data = np.frombuffer(blob, np.uint8)
+    # guard tail: exhausted chunks park here (z = 0, one bit per round) and
+    # the +8 tail keeps every 8-byte window gather in bounds
+    guard = -(-chunk // 8) + 8
+    p = np.concatenate([data, np.full(guard, 0xFF, np.uint8)])
+    # big-endian 64-bit window starting at every byte, built by doubling:
+    # byte pairs -> 16-bit, pairs of those -> 32-bit, -> 64-bit (3 passes)
+    m = p.size - 7
+    w2 = (p[:-1].astype(np.uint16) << np.uint16(8)) | p[1:]
+    w4 = (w2[: m + 4].astype(u32) << u32(16)) | w2[2 : m + 6]
+    win = (w4[:m].astype(u64) << u64(32)) | w4[4 : m + 4]
+    pos = np.asarray(chunk_offsets, u64).copy()
+    out = np.empty((chunk, pos.size), np.int32)
+    c3, c7, c23, c40, c63, c150 = u64(3), u64(7), u32(23), u64(40), u64(63), u64(150)
+    for s in range(chunk):
+        w = win[pos >> c3] << (pos & c7)  # stream bits from pos
+        # prefix-zero count: exact float32 exponent of the top 24 bits
+        f = (w >> c40).astype(u32).astype(np.float32)
+        z = c150 - (f.view(u32) >> c23).astype(u64)
+        bad = np.flatnonzero(z > u64(23))
+        if bad.size:  # codeword longer than the 24-bit fast window
+            hb = ((w[bad] >> u64(32)) | u64(1)).astype(np.float64)
+            z[bad] = (31 - np.floor(np.log2(hb)).astype(i64)).astype(u64)
+        # payload: drop the z prefix zeros, keep the z+1 code bits; unzigzag
+        # in-round (x1 = u+1; u odd <=> x1 even <=> positive value)
+        x1 = ((w << z) >> (c63 - z)).view(i64)
+        out[s] = (x1 >> 1) * (1 - ((x1 & 1) << 1))
+        pos += (z << u64(1)) + u64(1)
+    return out.T.ravel()[:count].astype(i64)
 
 
 # ---------------------------------------------------------------------------
@@ -165,14 +198,16 @@ def golomb_decode_chunked(
 
 
 def rle_encode_chunked(
-    values: np.ndarray, chunk: int = DEFAULT_CHUNK
-) -> Tuple[np.ndarray, np.ndarray, int, int]:
-    """(blob, chunk_offsets, total_bits, n_pairs) — same pair stream as
-    ``codes.rle_encode`` (and therefore the same exact size), chunk-decodable.
+    values: np.ndarray, chunk: Optional[int] = None
+) -> Tuple[np.ndarray, np.ndarray, int, int, int]:
+    """(blob, chunk_offsets, total_bits, n_pairs, chunk) — same pair stream
+    as ``codes.rle_encode`` (and therefore the same exact size),
+    chunk-decodable; ``chunk`` defaults to :func:`auto_chunk` of the *pair
+    stream* length (the unit the decoder rounds over).
     """
     flat = rle_flat_pairs(values)
-    blob, offsets, nbits = golomb_encode_chunked(flat, chunk)
-    return blob, offsets, nbits, flat.size // 2
+    blob, offsets, nbits, chunk = golomb_encode_chunked(flat, chunk)
+    return blob, offsets, nbits, flat.size // 2, chunk
 
 
 def rle_decode_chunked(
@@ -182,6 +217,10 @@ def rle_decode_chunked(
     total: int,
     chunk: int = DEFAULT_CHUNK,
 ) -> np.ndarray:
+    """Inverse of :func:`rle_encode_chunked`: one chunked-golomb decode of
+    the pair stream (which has ~2 symbols per *nonzero*, so it is usually
+    faster than a golomb stream of the same leaf), then a vectorized
+    scatter of the nonzero values."""
     flat = golomb_decode_chunked(blob, chunk_offsets, 2 * n_pairs, chunk)
     runs, vals = flat[0::2], flat[1::2]
     out = np.zeros(total, np.int64)
@@ -197,50 +236,122 @@ def rle_decode_chunked(
 # ---------------------------------------------------------------------------
 
 
-def enum_bits_per_group(n: int, k_max: int) -> int:
-    """Fixed bits per group: the L1 header plus the P(N, K) rank."""
-    return max(int(k_max).bit_length(), 1) + index_bits(n, k_max)
+def enum_sub_width(n: int) -> int:
+    """Ladder width the enumeration stream uses for N-wide groups.
+
+    Groups are split into equal contiguous sub-rows of at most
+    :data:`ENUM_SUB` coordinates when N divides evenly; otherwise the ladder
+    runs at the full group width."""
+    if n <= ENUM_SUB:
+        return max(n, 1)
+    s = -(-n // ENUM_SUB)
+    return n // s if n % s == 0 else n
+
+
+def _enum_ibits_table(sub: int, k_max: int) -> np.ndarray:
+    """index_bits(sub, k) for k = 0..k_max (rank field width per L1 header)."""
+    return np.asarray([index_bits(sub, t) for t in range(k_max + 1)], np.int64)
+
+
+def enum_stream_bits(groups: np.ndarray, k_max: int) -> int:
+    """Exact payload bits of :func:`enum_encode_groups` without encoding."""
+    groups = np.asarray(groups, np.int64)
+    sub = enum_sub_width(groups.shape[-1])
+    k_sub = np.abs(groups.reshape(-1, sub)).sum(axis=1)
+    kbits = max(int(k_max).bit_length(), 1)
+    return int(k_sub.size * kbits + _enum_ibits_table(sub, k_max)[k_sub].sum())
+
+
+def _extract_fields(data: np.ndarray, start: np.ndarray, width: np.ndarray):
+    """Big-endian bit fields (width <= 32) out of a byte array, vectorized.
+
+    Gathers the 5 bytes covering each field and shifts the field out; rows
+    with ``width == 0`` return 0 regardless of ``start`` (which may then be
+    out of range — the gather wraps harmlessly into the guard tail)."""
+    d = np.concatenate([data, np.zeros(5, np.uint8)])
+    start = np.maximum(start, 0)  # width-0 rows may sit before bit 0
+    byte0 = start >> 3
+    acc = np.zeros(start.shape, np.int64)
+    for t in range(5):
+        acc = (acc << 8) | d[byte0 + t]
+    return (acc >> (40 - (start & 7) - width)) & ((np.int64(1) << width) - 1)
 
 
 def enum_encode_groups(groups: np.ndarray, k_max: int) -> Tuple[bytes, int]:
-    """Fixed-length enumeration stream of a (G, N) group matrix.
+    """Enumeration stream of a (G, N) group matrix, all groups at once.
 
-    Each group may sit on any pyramid P(N, k_g) with k_g <= k_max (zero
-    groups and K>127-clamped groups included): the per-group record is
-    ``k_g`` then the rank of the vector within P(N, k_g).  Returns
-    (blob, bits_per_group); total bits = G * bits_per_group.  O(N*K) bigint
-    work per group — gate by leaf size (see ``.pvqz`` codec selection).
+    Each group row is split into :func:`enum_sub_width` sub-rows; every
+    sub-row may sit on any pyramid P(sub, k_s) with k_s <= k_max (zero
+    sub-rows and K>127-clamped groups included).  The wire format is all L1
+    headers first (fixed ``max(bit_length(k_max), 1)`` bits each), then each
+    sub-row's rank within P(sub, k_s) in ``index_bits(sub, k_s)`` bits,
+    concatenated MSB-first and padded to a byte.  Ranks come from the
+    vectorized limb ladder — no per-group Python work.  Returns
+    (blob, total_bits).
     """
     groups = np.asarray(groups, np.int64)
     g, n = groups.shape
+    sub = enum_sub_width(n)
+    rows = groups.reshape(-1, sub)
+    k_sub = np.abs(rows).sum(axis=1)
+    if int(k_sub.max(initial=0)) > k_max:
+        raise ValueError(
+            f"group L1 {int(k_sub.max(initial=0))} exceeds k_max {k_max}"
+        )
     kbits = max(int(k_max).bit_length(), 1)
-    ibits = index_bits(n, k_max)
-    per = kbits + ibits
-    acc = 0
-    for row in groups:
-        k_g = int(np.abs(row).sum())
-        if k_g > k_max:
-            raise ValueError(f"group L1 {k_g} exceeds k_max {k_max}")
-        acc = (acc << per) | (k_g << ibits) | vector_to_index(row.tolist())
-    nbytes = (per * g + 7) // 8
-    acc <<= nbytes * 8 - per * g  # left-align: stream starts at bit 0
-    return acc.to_bytes(nbytes, "big") if nbytes else b"", per
+    b = _enum_ibits_table(sub, k_max)[k_sub]  # per-sub rank width
+    limbs = vector_to_index_batch(rows, k_max).astype(np.uint64)
+    L = limbs.shape[1]
+    hi = np.arange(L - 1, -1, -1)  # wire order: most significant limb first
+    widths = np.clip(b[:, None] - 32 * hi[None, :], 0, 32)
+    codes = np.concatenate([k_sub.astype(np.uint64), limbs[:, hi].ravel()])
+    lens = np.concatenate(
+        [np.full(k_sub.size, kbits, np.int64), widths.ravel()]
+    )
+    packed, total = pack_bits(codes, lens)
+    return packed.tobytes(), total
 
 
-def enum_decode_groups(blob: bytes, g: int, n: int, k_max: int) -> np.ndarray:
-    kbits = max(int(k_max).bit_length(), 1)
-    ibits = index_bits(n, k_max)
-    per = kbits + ibits
-    acc = int.from_bytes(blob, "big")
-    total_bits = len(blob) * 8
+def enum_decode_groups(
+    blob: bytes, g: int, n: int, k_max: int, sub: Optional[int] = None
+) -> np.ndarray:
+    """Inverse of :func:`enum_encode_groups` — one vectorized pass.
+
+    Header fields are fixed-width (one gather round), the variable-width
+    rank fields are located from the header cumsum and pulled out limb by
+    limb (L <= a handful of 32-bit windows per sub-row), then the whole
+    (G*s, sub) rank matrix goes through the limb-ladder decode at once.
+    ``sub`` pins the ladder width the blob was written with (streams carry
+    it in their info dict); it defaults to the current policy."""
+    sub = enum_sub_width(n) if sub is None else int(sub)
+    gs = g * (n // sub)
     out = np.zeros((g, n), np.int64)
-    for i in range(g):
-        shift = total_bits - per * (i + 1)
-        rec = (acc >> shift) & ((1 << per) - 1)
-        k_g = rec >> ibits
-        idx = rec & ((1 << ibits) - 1)
-        out[i] = index_to_vector(idx, n, k_g)
-    return out
+    if gs == 0:
+        return out
+    data = np.frombuffer(blob, np.uint8)
+    kbits = max(int(k_max).bit_length(), 1)
+    k_sub = _extract_fields(
+        data, np.arange(gs, dtype=np.int64) * kbits, np.full(gs, kbits, np.int64)
+    )
+    if int(k_sub.max(initial=0)) > k_max:
+        raise ValueError(f"corrupt enum stream: L1 header exceeds k_max {k_max}")
+    b = _enum_ibits_table(sub, k_max)[k_sub]
+    starts = gs * kbits + np.cumsum(b) - b
+    L = limb_count(sub, k_max)
+    j = np.arange(L)
+    # all-zero sub-rows (structural group padding, fully-cancelled groups)
+    # carry no rank bits and need no ladder pass: decode the live rows only
+    # and scatter them back
+    live = np.flatnonzero(k_sub)
+    if live.size == 0:
+        return out
+    b, starts = b[live], starts[live]
+    widths = np.clip(b[:, None] - 32 * j[None, :], 0, 32)
+    ends = starts[:, None] + b[:, None] - 32 * j[None, :]
+    limbs = _extract_fields(data, ends - widths, widths).astype(np.uint32)
+    rows = out.reshape(gs, sub)
+    rows[live] = index_to_vector_batch(limbs, k_sub[live], sub, k_max)
+    return rows.reshape(g, n)
 
 
 # ---------------------------------------------------------------------------
@@ -271,7 +382,7 @@ def encode_pulses(
     codec: str,
     *,
     k_max: Optional[int] = None,
-    chunk: int = DEFAULT_CHUNK,
+    chunk: Optional[int] = None,
 ) -> Tuple[bytes, Dict]:
     """Encode a pulse stream (any shape; ``enum`` needs (G, N) groups).
 
@@ -285,24 +396,25 @@ def encode_pulses(
     flat = groups.ravel()
     info: Dict = {"codec": codec, "count": int(flat.size)}
     if codec == "golomb":
-        stream, offsets, nbits = golomb_encode_chunked(flat, chunk)
-        info.update(nbits=int(nbits), chunk=chunk)
+        stream, offsets, nbits, chunk = golomb_encode_chunked(flat, chunk)
+        info.update(nbits=int(nbits), chunk=int(chunk))
         return _wrap_chunked(stream, offsets), info
     if codec == "rle":
-        stream, offsets, nbits, n_pairs = rle_encode_chunked(flat, chunk)
-        info.update(nbits=int(nbits), chunk=chunk, n_pairs=int(n_pairs))
+        stream, offsets, nbits, n_pairs, chunk = rle_encode_chunked(flat, chunk)
+        info.update(nbits=int(nbits), chunk=int(chunk), n_pairs=int(n_pairs))
         return _wrap_chunked(stream, offsets), info
     if codec == "enum":
         if k_max is None:
             raise ValueError("enum codec needs k_max")
         if groups.ndim != 2:
             raise ValueError("enum codec needs a (G, N) group matrix")
-        blob, per = enum_encode_groups(groups, k_max)
+        blob, total = enum_encode_groups(groups, k_max)
         info.update(
-            nbits=int(per * groups.shape[0]),
+            nbits=int(total),
             k_max=int(k_max),
             n_groups=int(groups.shape[0]),
             group=int(groups.shape[1]),
+            sub=enum_sub_width(int(groups.shape[1])),
         )
         return blob, info
     if codec == "nibble":
@@ -336,7 +448,8 @@ def decode_pulses(blob: bytes, info: Dict, group: Optional[int] = None) -> np.nd
         )
     elif codec == "enum":
         return enum_decode_groups(
-            blob, info["n_groups"], info["group"], info["k_max"]
+            blob, info["n_groups"], info["group"], info["k_max"],
+            sub=info.get("sub"),
         )
     elif codec == "nibble":
         from .packing import unpack_nibbles
@@ -359,10 +472,10 @@ def measured_bits(
 
     ``stream`` is the symbol stream the variable-length codecs would encode
     (golomb/rle/nibble/int8); ``group_matrix``/``k_max`` additionally price
-    the fixed-length enumeration stream over the (G, N) group view.  Uses the
-    ``core.codes`` size models — the ``golomb_length`` sum and the RLE pair
-    model are *exact* (identical to the produced streams); the enumeration
-    entry is the fixed-length formula.
+    the enumeration stream over the (G, N) group view.  All entries are
+    *exact*: the ``golomb_length`` sum, the RLE pair model, and the
+    enumeration header + per-sub-row rank widths are identical to the
+    produced streams.
     """
     flat = np.asarray(stream, np.int64).ravel()
     out = {
@@ -373,11 +486,11 @@ def measured_bits(
     if np.abs(flat).max(initial=0) <= 7:
         out["nibble"] = 4.0 * flat.size
     if group_matrix is not None and k_max is not None:
-        n = int(group_matrix.shape[-1])
-        if n <= 4096:
-            out["enum"] = float(
-                enum_bits_per_group(n, k_max) * group_matrix.shape[0]
-            )
+        sub = enum_sub_width(int(group_matrix.shape[-1]))
+        if enum_supported(sub, int(k_max)) and int(
+            np.abs(group_matrix).reshape(-1, sub).sum(axis=1).max(initial=0)
+        ) <= int(k_max):
+            out["enum"] = float(enum_stream_bits(group_matrix, int(k_max)))
     return out
 
 
@@ -385,21 +498,18 @@ def choose_codec(
     stream: np.ndarray,
     groups: np.ndarray,
     k: int,
-    *,
-    enum_budget: int = DEFAULT_ENUM_BUDGET,
 ) -> Tuple[str, Dict[str, float]]:
     """Pick the cheapest codec by measured payload bits — THE ``.pvqz``
     per-leaf selection rule (also applied by ``packed_stats`` so its report
     matches what the artifact actually produces).
 
-    Returns (codec, {codec: bits}).  Enumeration is priced always (it goes
-    in the report) but only *eligible* when the bigint encode work
-    ``G * group * K`` fits the budget.
+    Returns (codec, {codec: bits}).  Every priced codec is eligible:
+    enumeration runs on the vectorized limb ladder, so there is no bigint
+    work budget anymore — it is only absent when its precomputed count
+    tables would not fit :data:`repro.core.enumeration.ENUM_TABLE_MAX_BYTES`
+    (or the limb ladder's float-proxy width cap) at the leaf's sub-ladder
+    geometry, which :func:`measured_bits` already accounts for.
     """
     sizes = measured_bits(stream, group_matrix=groups, k_max=k)
-    eligible = dict(sizes)
-    enum_cost = groups.shape[0] * groups.shape[1] * max(k, 1)
-    if "enum" in eligible and enum_cost > enum_budget:
-        del eligible["enum"]
-    codec = min(eligible, key=lambda c: (eligible[c], PULSE_CODECS.index(c)))
+    codec = min(sizes, key=lambda c: (sizes[c], PULSE_CODECS.index(c)))
     return codec, sizes

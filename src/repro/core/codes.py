@@ -33,7 +33,8 @@ def zigzag(v: np.ndarray) -> np.ndarray:
 
 def unzigzag(u: np.ndarray) -> np.ndarray:
     u = np.asarray(u, dtype=np.int64)
-    return np.where(u % 2 == 1, (u + 1) // 2, -(u // 2))
+    t = (u + 1) >> 1  # == |v| for both parities (u >= 0 by construction)
+    return np.where(u & 1, t, -t)
 
 
 def golomb_length(v: np.ndarray) -> np.ndarray:

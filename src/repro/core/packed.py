@@ -1014,11 +1014,11 @@ def packed_stats(params: Any, *, entropy: bool = True) -> Dict[str, float]:
     Beyond the raw int8+f32 HBM byte counts, ``entropy=True`` (default)
     prices the pulse streams under the paper's §VI codecs with the *exact*
     ``core.codes`` size models.  ``entropy_bits_per_weight`` applies the
-    ``.pvqz`` per-leaf selection rule itself (``bitstream.choose_codec``,
-    enumeration budget gate included), so it reports what ``write_pvqz``
-    would actually produce; the per-codec ``*_bits_per_weight`` keys are
-    whole-tree totals under that single codec (``enum`` is the fixed-length
-    bound regardless of the encode-cost budget).
+    ``.pvqz`` per-leaf selection rule itself (``bitstream.choose_codec``),
+    so it reports what ``write_pvqz`` would actually produce; the per-codec
+    ``*_bits_per_weight`` keys are whole-tree totals under that single
+    codec (``enum`` is the exact sub-ladder stream size wherever its count
+    tables fit memory).
     """
     packed_bytes = 0
     replaced_dense_bytes = 0

@@ -48,7 +48,7 @@ def _sparse_values(rng, n, density=0.25, lo=-130, hi=130):
 @given(n=st.integers(0, 3000), chunk=st.integers(1, 600), seed=st.integers(0, 2**31 - 1))
 def test_prop_golomb_chunked_roundtrip(n, chunk, seed):
     v = _sparse_values(np.random.default_rng(seed), n)
-    blob, offsets, nbits = bitstream.golomb_encode_chunked(v, chunk)
+    blob, offsets, nbits, chunk = bitstream.golomb_encode_chunked(v, chunk)
     # the stream size IS the core.codes size model, bit for bit
     assert nbits == int(codes.golomb_length(v).sum()) if n else nbits == 0
     got = bitstream.golomb_decode_chunked(blob, offsets, n, chunk)
@@ -59,7 +59,7 @@ def test_prop_golomb_chunked_roundtrip(n, chunk, seed):
 @given(n=st.integers(0, 3000), chunk=st.integers(1, 600), seed=st.integers(0, 2**31 - 1))
 def test_prop_rle_chunked_roundtrip(n, chunk, seed):
     v = _sparse_values(np.random.default_rng(seed), n, density=0.1)
-    blob, offsets, nbits, n_pairs = bitstream.rle_encode_chunked(v, chunk)
+    blob, offsets, nbits, n_pairs, chunk = bitstream.rle_encode_chunked(v, chunk)
     _, ref_bits, ref_pairs = codes.rle_encode(v)
     assert (nbits, n_pairs) == (ref_bits, ref_pairs)
     got = bitstream.rle_decode_chunked(blob, offsets, n_pairs, n, chunk)
@@ -71,7 +71,7 @@ def test_golomb_stream_bytes_match_reference_encoder():
     reference encoder in core.codes."""
     rng = np.random.default_rng(0)
     v = _sparse_values(rng, 500)
-    blob, _, nbits = bitstream.golomb_encode_chunked(v, chunk=64)
+    blob, _, nbits, _ = bitstream.golomb_encode_chunked(v, chunk=64)
     ref_blob, ref_bits = codes.golomb_encode(v)
     assert nbits == ref_bits
     assert blob.tobytes() == ref_blob
@@ -98,9 +98,10 @@ def test_prop_enum_groups_roundtrip(g, n, k, seed):
     for i in range(g):
         for _ in range(int(rng.integers(0, k + 1))):
             rows[i, rng.integers(0, n)] += int(rng.choice([-1, 1]))
-    blob, per = bitstream.enum_encode_groups(rows, k)
-    assert per == bitstream.enum_bits_per_group(n, k)
-    got = bitstream.enum_decode_groups(blob, g, n, k)
+    blob, total = bitstream.enum_encode_groups(rows, k)
+    assert total == bitstream.enum_stream_bits(rows, k)
+    assert len(blob) == -(-total // 8)
+    got = bitstream.enum_decode_groups(blob, g, n, k, sub=bitstream.enum_sub_width(n))
     np.testing.assert_array_equal(got, rows)
 
 
@@ -283,12 +284,9 @@ def test_pvqz_auto_picks_measured_minimum():
         group=64, n_over_k=5.0,
     )
     stream, groups = pulse_stream(pk), pulse_groups(pk)
-    codec, sizes = choose_codec(stream, groups, pk.k, enum_budget=0)
-    assert "enum" in sizes  # always priced for the report
-    eligible = {c: b for c, b in sizes.items() if c != "enum"}  # budget 0
-    assert sizes[codec] == min(eligible.values())
-    codec2, _ = choose_codec(stream, groups, pk.k, enum_budget=10**12)
-    assert sizes[codec2] == min(sizes.values())
+    codec, sizes = choose_codec(stream, groups, pk.k)
+    assert "enum" in sizes  # priced alongside the entropy codecs
+    assert sizes[codec] == min(sizes.values())
 
 
 def test_pvqz_crc_detects_corruption(tmp_path):

@@ -176,3 +176,95 @@ def test_packed_nbytes():
     code = pvq_encode_grouped(w, group=256, k=64)
     assert packed_nbytes(code, "nibble") == 512 + 16
     assert packed_nbytes(code, "int8") == 1024 + 16
+
+
+# ---------------------------------------------------------------------------
+# vectorized limb-ladder codec vs the bigint reference (PR 9)
+# ---------------------------------------------------------------------------
+
+
+def _rand_rows(rng, g, n, k, clamp_hi=1):
+    """Random pyramid rows with L1 <= k: mixes all-zero rows, k_g < k rows,
+    and (when clamp_hi > 1) clamped-magnitude pulses beyond int8."""
+    rows = np.zeros((g, n), np.int64)
+    for i in range(g):
+        budget = int(rng.integers(0, k + 1))  # k_g < k headers + all-zero rows
+        while budget > 0:
+            m = int(rng.integers(1, min(budget, clamp_hi) + 1))
+            rows[i, rng.integers(0, n)] += m * int(rng.choice([-1, 1]))
+            budget -= m
+    return rows
+
+
+def _limbs(value, L):
+    """Python bigint -> little-endian uint32 limb row."""
+    return np.asarray(
+        [(value >> (32 * j)) & 0xFFFFFFFF for j in range(L)], np.uint32
+    )
+
+
+@pytest.mark.parametrize(
+    "n,k",
+    [(2, 1), (8, 4), (16, 9), (31, 7), (64, 51), (64, 130), (96, 30)],
+)
+def test_batch_rank_matches_bigint_reference(n, k):
+    """The limb ladder is the bigint Fischer rank, limb for limb — including
+    K > 127 clamped groups (k=130) and groups whose own L1 is below K."""
+    from repro.core.enumeration import limb_count, vector_to_index_batch
+
+    rng = np.random.default_rng(n * 1000 + k)
+    rows = _rand_rows(rng, 40, n, k, clamp_hi=min(k, 130))
+    rows[0] = 0  # force an all-zero group
+    L = limb_count(n, k)
+    got = vector_to_index_batch(rows, k)
+    want = np.stack([_limbs(vector_to_index(r.tolist()), L) for r in rows])
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("n,k", [(8, 4), (16, 9), (64, 51), (64, 130)])
+def test_batch_unrank_matches_bigint_reference(n, k):
+    from repro.core.enumeration import (
+        index_to_vector_batch,
+        limb_count,
+        vector_to_index_batch,
+    )
+
+    rng = np.random.default_rng(n * 7 + k)
+    rows = _rand_rows(rng, 40, n, k, clamp_hi=min(k, 130))
+    k_g = np.abs(rows).sum(axis=1)
+    ranks = vector_to_index_batch(rows, k)
+    got = index_to_vector_batch(ranks, k_g, n, k)
+    np.testing.assert_array_equal(got, rows)
+    # and each row against the scalar bigint decoder
+    L = limb_count(n, k)
+    for i in range(rows.shape[0]):
+        big = sum(int(ranks[i, j]) << (32 * j) for j in range(L))
+        assert index_to_vector(big, n, int(k_g[i])) == rows[i].tolist()
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(2, 48),
+    k=st.integers(1, 40),
+    g=st.integers(1, 12),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_prop_batch_roundtrip(n, k, g, seed):
+    from repro.core.enumeration import index_to_vector_batch, vector_to_index_batch
+
+    rng = np.random.default_rng(seed)
+    rows = _rand_rows(rng, g, n, k, clamp_hi=min(k, 5))
+    ranks = vector_to_index_batch(rows, k)
+    got = index_to_vector_batch(ranks, np.abs(rows).sum(axis=1), n, k)
+    np.testing.assert_array_equal(got, rows)
+
+
+def test_enum_supported_bounds():
+    """Support = cumulative tables fit the cache budget AND the float64
+    rank proxy keeps every limb scale normal (limb_count <= 29)."""
+    from repro.core.enumeration import enum_supported, limb_count
+
+    assert enum_supported(64, 130)  # every sub-ladder the codec emits
+    assert enum_supported(64, 64)
+    assert not enum_supported(4096, 4096)  # table blow-up
+    assert limb_count(64, 130) <= 29
