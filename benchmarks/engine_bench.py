@@ -104,3 +104,86 @@ def bench_engine(arch: str = "smollm-360m", *, n_requests: int = 6,
         "n_pages": eng.n_pages,
     })
     return rows
+
+
+def bench_chunked_prefill(arch: str = "smollm-360m", *, n_requests: int = 6,
+                          n_slots: int = 2, shared_prefix: int = 16,
+                          prompt_lens=(12, 40), gen: int = 8) -> List[Dict]:
+    """Chunked + batched admission vs monolithic prefill on the SAME
+    mixed long/short trace with a shared prompt prefix.
+
+    Two rows land in ``BENCH_engine.json``: the monolithic scheduler
+    (whole-prompt prefill blocks decode for its full duration) and the
+    chunked one (``prefill_chunk`` pages per step interleaved with
+    decode, batched same-bucket admission, prefix page cache).  The
+    columns the trajectory tracks: p99 inter-token latency measured on
+    decode steps that shared an iteration with prefill work
+    (``itl_with_prefill_p99_s`` — the decode-interference gauge), the
+    TTFT decomposition, and the prefix-cache hit rate."""
+    import jax
+
+    from repro.configs import get_config
+    from repro.core.packed import quantize_params
+    from repro.core.quantize import (
+        KVQuant, QuantPolicy, kv_quant_scope,
+    )
+    from repro.launch.engine import PVQEngine, bucket_len, poisson_trace
+
+    cfg = get_config(arch).reduced()
+    from repro.nn.models import build_model
+    model = build_model(cfg)
+    max_prompt = shared_prefix + prompt_lens[1]
+    params = model.init(jax.random.PRNGKey(0), max_seq=2 * (max_prompt + gen))
+    policy = QuantPolicy(
+        rules=(("embedding", cfg.pvq.n_over_k_embed, cfg.pvq.group),
+               ("kernel|experts", cfg.pvq.n_over_k, cfg.pvq.group)),
+        scale_mode="ls",
+    )
+    params = quantize_params(params, policy)
+
+    kvq = KVQuant(block=8, group=16)
+    max_len = bucket_len(max_prompt + gen, kvq.block)
+    variants = (
+        ("monolithic", dict()),
+        ("chunked", dict(prefill_chunk=2, prefill_batch=2)),
+    )
+    rows: List[Dict] = []
+    for name, opts in variants:
+        with kv_quant_scope(kvq):
+            trace = poisson_trace(
+                n_requests, rate=0.0, vocab=cfg.vocab_size,
+                prompt_lens=prompt_lens, max_new=gen, seed=7,
+                shared_prefix=shared_prefix,
+            )
+            eng = PVQEngine(model, params, n_slots=n_slots,
+                            max_len=max_len, **opts)
+            eng.warmup(prompt_lens=[len(r.prompt) for r in trace])
+            res = eng.run(trace)
+            res.pop("outputs")
+        full_pages = sum(len(r.prompt) // eng.page for r in trace)
+        rows.append({
+            "bench": f"engine_prefill:{cfg.name}:{name}",
+            "arch": cfg.name,
+            "scheduler": name,
+            "n_slots": n_slots,
+            "n_requests": n_requests,
+            "shared_prefix": shared_prefix,
+            "tokens_per_s": round(res["tokens_per_s"], 2),
+            "ttft_p50_s": res["ttft_p50_s"],
+            "ttft_p99_s": res["ttft_p99_s"],
+            "queue_wait_p99_s": res["queue_wait_p99_s"],
+            "prefill_compute_p99_s": res["prefill_compute_p99_s"],
+            "chunk_wait_p99_s": res["chunk_wait_p99_s"],
+            "itl_p99_s": res["itl_p99_s"],
+            "itl_with_prefill_p99_s": res["itl_with_prefill_p99_s"],
+            "itl_with_prefill_samples": res["itl_with_prefill_samples"],
+            "chunks": res["chunks"],
+            "prefill_batches": res["prefill_batches"],
+            "prefix_hits": res["prefix_hits"],
+            "prefix_hit_rate": round(
+                res["prefix_hits"] / max(full_pages, 1), 3),
+            "prefix_pages_shared": res["prefix_pages_shared"],
+            "decode_traces": res["trace_counts"]["decode"],
+            "chunk_traces": res["trace_counts"].get("chunk", 0),
+        })
+    return rows

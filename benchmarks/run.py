@@ -47,6 +47,7 @@ def main() -> None:
     run("kernel_pvq_encode", kernel_bench.bench_pvq_encode)
     run("serve_packed", serve_bench.bench_serve_throughput)
     run("engine_continuous_batching", engine_bench.bench_engine)
+    run("engine_chunked_prefill", engine_bench.bench_chunked_prefill)
     run("attn_packed_decode", attn_bench.bench_attention_decode)
     run("moe_packed_experts", moe_bench.bench_moe_experts)
     run("artifact_codecs", artifact_bench.bench_artifact_codecs)

@@ -620,6 +620,32 @@ class PagedKV:
             block=self.page, group=self.group, k=self.k, dtype=self.dtype,
         )
 
+    def gather_slot(self, slot) -> PackedKV:
+        """Single-slot :class:`PackedKV` view through one page-table row
+        (batch 1).  The chunked-prefill read leg attends only to the slot
+        it extends, so gathering the full slot pool per chunk would be
+        ``n_slots`` times the bytes for no extra information."""
+        pt = jax.lax.dynamic_slice_in_dim(
+            self.page_table, jnp.asarray(slot, jnp.int32), 1, axis=0
+        )  # (1, mp)
+        s = int(pt.shape[-1]) * self.page
+
+        def pick(pool):  # (P+1, page, n_kv, X) -> (1, S, n_kv, X)
+            g = pool[pt]
+            return g.reshape(1, s, g.shape[-2], g.shape[-1])
+
+        def row(tail):
+            return jax.lax.dynamic_slice_in_dim(
+                tail, jnp.asarray(slot, jnp.int32), 1, axis=0
+            )
+
+        return PackedKV(
+            k_pulses=pick(self.k_pages), k_scales=pick(self.k_page_scales),
+            v_pulses=pick(self.v_pages), v_scales=pick(self.v_page_scales),
+            tail_k=row(self.tail_k), tail_v=row(self.tail_v),
+            block=self.page, group=self.group, k=self.k, dtype=self.dtype,
+        )
+
     def dense_kv(self, filled, dtype=jnp.float32) -> Tuple[Array, Array]:
         """Exact dense oracle view (via the gathered :class:`PackedKV`)."""
         return self.gather().dense_kv(filled, dtype=dtype)
@@ -689,14 +715,46 @@ class PagedKV:
         PVQ encoding happens HERE, not in the prefill step: the prefill
         runs with a dense cache and the graft encodes only complete
         blocks, which keeps the encode bit-identical to the fixed-batch
-        ``PackedKV.from_dense`` path.
+        ``PackedKV.from_dense`` path.  Implemented as the ``start=0``
+        case of :meth:`graft_chunk`, so the monolithic and chunked
+        prefill paths share one encode and cannot drift apart.
+        """
+        return self.graft_chunk(k_dense, v_dense, slot, page_ids, 0, real_len)
+
+    def graft_chunk(
+        self, k_dense: Array, v_dense: Array, slot, page_ids: Array,
+        start, real_len,
+    ) -> "PagedKV":
+        """Graft one page-aligned prefill *chunk* into decode slot ``slot``.
+
+        ``k_dense``/``v_dense`` hold the chunk's EXACT dense KV
+        ``(1, C, n_kv, hd)`` for absolute positions
+        ``[start, start + C)`` of the slot's context, with ``C`` a page
+        multiple and ``start`` page-aligned (the chunked-prefill
+        scheduler only ever cuts at page boundaries, so a chunk never
+        straddles a partially-filled page).  ``page_ids (C // page,)``
+        are the physical destinations of the chunk's logical blocks
+        ``start // page ..`` — trash-page id for block indices at/after
+        ``real_len // page``.  Blocks are PVQ-encoded with the same
+        ``_kv_encode_planes`` every other write path uses, so running a
+        context through any sequence of chunks leaves the pool (and the
+        tail ring) bit-identical to one whole-prompt ``graft`` /
+        ``PackedKV.from_dense``.
+
+        The tail window write targets ``packed_end(real_len) - start``:
+        only the FINAL chunk (the one containing ``packed_end``) writes
+        meaningful tail rows; earlier chunks write a clamped garbage
+        window that the final chunk overwrites (harmless — tail rings
+        are slot-private and masked by length until then).
         """
         if self._stacked:
             return jax.vmap(
-                lambda s, kd, vd: s.graft(kd, vd, slot, page_ids, real_len)
+                lambda s, kd, vd: s.graft_chunk(
+                    kd, vd, slot, page_ids, start, real_len
+                )
             )(self, k_dense, v_dense)
         page = self.page
-        kf = k_dense[0].astype(jnp.float32)  # (L_b, n_kv, hd)
+        kf = k_dense[0].astype(jnp.float32)  # (C, n_kv, hd)
         vf = v_dense[0].astype(jnp.float32)
         nb = kf.shape[0] // page
         kb = kf.reshape(nb, page, kf.shape[-2], kf.shape[-1])
@@ -705,13 +763,16 @@ class PagedKV:
         pv, sv = _kv_encode_planes(vb, self.group, self.k)
         ids = jnp.asarray(page_ids, jnp.int32)
 
-        # exact tail: the block window starting at packed_end(real_len).
-        # When real_len == L_b the clamped window copies garbage that the
-        # zero tail-valid count masks until appends overwrite it.
-        start = self.packed_end(jnp.asarray(real_len, jnp.int32))
+        # exact tail: the block window starting at packed_end(real_len),
+        # chunk-relative.  dynamic_slice clamps both ends: a mid chunk
+        # (packed_end beyond the chunk) or a fully-packed final chunk
+        # copies garbage that the tail-valid count masks until the real
+        # writer (final chunk / appends) lands.
+        pe = self.packed_end(jnp.asarray(real_len, jnp.int32))
+        off = pe - jnp.asarray(start, jnp.int32)
         tdt = self.tail_k.dtype
-        tk = jax.lax.dynamic_slice_in_dim(kf, start, page, axis=0).astype(tdt)
-        tv = jax.lax.dynamic_slice_in_dim(vf, start, page, axis=0).astype(tdt)
+        tk = jax.lax.dynamic_slice_in_dim(kf, off, page, axis=0).astype(tdt)
+        tv = jax.lax.dynamic_slice_in_dim(vf, off, page, axis=0).astype(tdt)
         upd = jax.lax.dynamic_update_slice_in_dim
         return dataclasses.replace(
             self,

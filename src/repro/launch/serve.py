@@ -352,6 +352,25 @@ def main() -> int:
     ap.add_argument("--min-speedup", type=float, default=None, metavar="S",
                     help="with --engine: exit 1 if engine tokens/s is not "
                     "at least S x the sequential fixed-batch baseline")
+    ap.add_argument("--prefill-chunk", type=int, default=None, metavar="P",
+                    help="with --engine: chunked prefill — prompts longer "
+                    "than P pages stream in P-page chunks interleaved with "
+                    "decode steps (bounds p99 inter-token latency during "
+                    "long-prompt admission); also enables the shared-prefix "
+                    "page cache")
+    ap.add_argument("--prefill-batch", type=int, default=1, metavar="B",
+                    help="with --engine: admit up to B same-bucket waiting "
+                    "requests per step through ONE multi-row prefill compile")
+    ap.add_argument("--no-prefix-cache", action="store_true",
+                    help="with --engine --prefill-chunk: disable the "
+                    "shared-prefix page cache (refcounted page reuse)")
+    ap.add_argument("--shared-prefix", type=int, default=0, metavar="N",
+                    help="with --engine: prepend one common N-token prefix "
+                    "to every trace prompt (shared-system-prompt traffic; "
+                    "exercises the prefix page cache)")
+    ap.add_argument("--min-prefix-hits", type=int, default=None, metavar="H",
+                    help="with --engine: exit 1 if the prefix page cache "
+                    "recorded fewer than H page hits over the run")
     ap.add_argument("--n-over-k", type=float, default=1.0)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument(
@@ -452,6 +471,21 @@ def _serve(args) -> int:
                 (args.engine_slots, d_model, d_ff),
                 (args.engine_slots, d_ff, d_model),
             }
+            if args.prefill_chunk:
+                # chunked-prefill GEMMs: one static row count C per step
+                c_tok = args.prefill_chunk * max(args.kv_block, 1)
+                shapes |= {
+                    (c_tok, d_model, d_model),
+                    (c_tok, d_model, d_ff),
+                    (c_tok, d_ff, d_model),
+                }
+            if args.prefill_batch > 1:
+                # batched-admission prefill GEMM: B rows x the prompt bucket
+                b_tok = args.prefill_batch * bucket_len(
+                    max(args.shared_prefix + args.prompt_len, 1),
+                    max(args.kv_block, 1),
+                )
+                shapes.add((b_tok, d_model, d_ff))
         if cfg.moe is not None:
             # per-expert dispatch-buffer GEMMs (m = groups * capacity): the
             # batched expert matmul keys its shared tiles on exactly these
@@ -493,11 +527,20 @@ def _serve(args) -> int:
                 # engine decode shapes are keyed on the slot-pool geometry:
                 # the gathered plane extent is always max_pages * page,
                 # independent of which sequences are resident
-                s_pool = bucket_len(args.prompt_len + args.gen, blk)
-                for ent in autotune.tune_attn_shapes(
-                    [(m_q, hd, s_pool)], group=g, dtype=jnp.int8
-                ).values():
-                    tuned[f"attn{m_q}x{hd}x{s_pool}:int8:engine"] = {
+                s_pool = bucket_len(
+                    args.shared_prefix + args.prompt_len + args.gen, blk
+                )
+                attn_shapes = [(m_q, hd, s_pool)]
+                if args.prefill_chunk:
+                    # the chunk step's packed leg: C query rows, each
+                    # expanded to grouped rows per kv head, against the
+                    # same slot-pool plane extent
+                    c_tok = args.prefill_chunk * blk
+                    attn_shapes.append((c_tok * m_q, hd, s_pool))
+                autotune.tune_attn_shapes(attn_shapes, group=g, dtype=jnp.int8)
+                for mm, _, ss in attn_shapes:
+                    ent = autotune.autotune_attn(mm, hd, ss, group=g, dtype=jnp.int8)
+                    tuned[f"attn{mm}x{hd}x{ss}:int8:engine"] = {
                         kk: ent[kk] for kk in ("bs", "us")
                     }
         report["tuned_tiles"] = tuned
@@ -614,15 +657,21 @@ def _serve(args) -> int:
     if args.engine:
         from repro.launch.engine import PVQEngine, poisson_trace
 
-        max_len = bucket_len(args.prompt_len + args.gen, args.kv_block)
+        max_len = bucket_len(
+            args.shared_prefix + args.prompt_len + args.gen, args.kv_block
+        )
         trace = poisson_trace(
             args.requests, rate=args.rate, vocab=cfg.vocab_size,
             prompt_lens=(max(args.prompt_len // 2, 1), args.prompt_len),
             max_new=args.gen, seed=args.seed + 2,
+            shared_prefix=args.shared_prefix,
         )
         eng = PVQEngine(
             model, params, n_slots=args.engine_slots, max_len=max_len,
             n_pages=args.engine_pages,
+            prefill_chunk=args.prefill_chunk,
+            prefill_batch=args.prefill_batch,
+            prefix_cache=not args.no_prefix_cache,
         )
         eng.warmup(prompt_lens=[len(r.prompt) for r in trace])
         res = eng.run(trace)
@@ -667,6 +716,16 @@ def _serve(args) -> int:
         if args.min_speedup is not None and speedup < args.min_speedup:
             report["speedup_fail"] = (
                 f"engine speedup {speedup:.3f}x < required {args.min_speedup}x"
+            )
+            print(json.dumps(report))
+            return 1
+        if (
+            args.min_prefix_hits is not None
+            and res["prefix_hits"] < args.min_prefix_hits
+        ):
+            report["prefix_cache_fail"] = (
+                f"prefix cache hits {res['prefix_hits']} < required "
+                f"{args.min_prefix_hits}"
             )
             print(json.dumps(report))
             return 1

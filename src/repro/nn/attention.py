@@ -525,6 +525,91 @@ def attention_decode(
     return y, cache
 
 
+def attention_prefill_chunk(
+    p: Params,
+    x: jax.Array,  # (1, C, d) — one slot's chunk of C = page-multiple tokens
+    cache,  # core.packed.PagedKV (unstacked layer slice)
+    *,
+    slot: jax.Array,
+    start: jax.Array,  # page-aligned absolute position of the chunk's first token
+    page_ids: jax.Array,  # (C // page,) physical destinations, trash-padded
+    real_len: jax.Array,  # total context length (absolute)
+    n_heads: int,
+    n_kv_heads: int,
+    head_dim: int,
+    rope_theta: Optional[float] = 10000.0,
+    softmax_scale: Optional[float] = None,
+) -> tuple[jax.Array, Any]:
+    """Chunked prefill over a partially-packed paged context.
+
+    The chunked-prefill scheduler streams a long prompt through the paged
+    slot pool ``C`` tokens at a time, interleaved with decode steps.  Each
+    chunk call:
+
+    1. projects/ropes the chunk at absolute positions
+       ``start .. start + C - 1``,
+    2. PVQ-grafts its complete blocks straight into the allocator's
+       pre-assigned pages (:meth:`PagedKV.graft_chunk` — bit-identical to
+       the whole-prompt graft; the final chunk's ragged remainder lands
+       exactly in the slot's f32 tail ring),
+    3. attends with two legs merged by online softmax (the same
+       flash-style merge ``decode_attention_packed`` uses):
+
+       * **packed leg** — the slot's prior chunks ``[0, start)`` read
+         through the page table via the kernel-v4 contraction
+         (``ops.pvq_attn_decode`` on a single-slot gather; ``start`` is
+         page-aligned, so there is never a partial tail to read), and
+       * **chunk leg** — exact causal f32 attention within the chunk
+         (padded rows past ``real_len`` compute garbage that stays
+         behind the engine's masks, same as bucketed prefill padding).
+
+    Returns ``(y (1, C, d), updated cache)``.
+    """
+    from repro.kernels import ops
+
+    b, C, _ = x.shape
+    q = dense(p["wq"], x).reshape(b, C, n_heads, head_dim)
+    k = dense(p["wk"], x).reshape(b, C, n_kv_heads, head_dim)
+    v = dense(p["wv"], x).reshape(b, C, n_kv_heads, head_dim)
+    start = jnp.asarray(start, jnp.int32)
+    positions = start + jnp.arange(C)[None, :]
+    if rope_theta is not None:
+        q = apply_rope(q, positions, rope_theta)
+        k = apply_rope(k, positions, rope_theta)
+    scale = softmax_scale if softmax_scale is not None else 1.0 / math.sqrt(head_dim)
+
+    cache = cache.graft_chunk(k, v, slot, page_ids, start, real_len)
+
+    # packed leg: prior context [0, start) — pages the earlier chunks (or
+    # shared-prefix mappings) already wrote.  kv_len == start masks out
+    # this chunk's own freshly-grafted pages and any unwritten ones.
+    acc_p, m_p, l_p = ops.pvq_attn_decode(
+        q, cache.gather_slot(slot), jnp.reshape(start, (1,)), sm_scale=scale
+    )  # (1, C, n_kv, gpr, hd) / (..., 1) / (..., 1)
+
+    # exact causal intra-chunk leg (every query row sees at least its own
+    # diagonal, so the merged denominator is never zero)
+    qg = _group_q(q, n_kv_heads).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s_c = jnp.einsum(
+        "bqhgd,bkhd->bqhgk", qg, kf, preferred_element_type=jnp.float32
+    ) * scale
+    causal = jnp.arange(C)[None, :] <= jnp.arange(C)[:, None]  # (q, k)
+    mask = causal[None, :, None, None, :]
+    s_c = jnp.where(mask, s_c, NEG_INF)
+    m_c = jnp.max(s_c, axis=-1, keepdims=True)
+    m_tot = jnp.maximum(m_p, m_c)
+    p_c = jnp.where(mask, jnp.exp(s_c - m_tot), 0.0)
+    l_c = jnp.sum(p_c, axis=-1, keepdims=True)
+    acc_c = jnp.einsum("bqhgk,bkhd->bqhgd", p_c, vf)
+    alpha = jnp.exp(m_p - m_tot)  # 0 for the first chunk (m_p == NEG_INF)
+    out = (acc_p * alpha + acc_c) / (l_p * alpha + l_c)
+    out = out.reshape(b, C, n_heads, head_dim).astype(q.dtype)
+    y = dense(p["wo"], out.reshape(b, C, n_heads * head_dim))
+    return y, cache
+
+
 # ---------------------------------------------------------------------------
 # Cross attention (enc-dec)
 # ---------------------------------------------------------------------------

@@ -215,6 +215,48 @@ class Model:
         )
         return last, caches
 
+    def prefill_chunk(
+        self, params: Params, cache: Any, tokens: jax.Array, slot: jax.Array,
+        start: jax.Array, page_ids: jax.Array, real_len: jax.Array,
+    ) -> Tuple[jax.Array, Any]:
+        """Chunked-prefill step over the paged slot pool: run ``tokens``
+        ``(1, C)`` (``C`` a page multiple, ``start`` page-aligned) at
+        absolute positions ``start .. start + C - 1`` for decode slot
+        ``slot``, attending to the slot's already-packed context
+        ``[0, start)`` through the page table and PVQ-grafting this
+        chunk's blocks into ``page_ids``.  One static chunk shape serves
+        every prompt length, so the whole run compiles the chunk step
+        ONCE.  Returns ``(logits (1, 1, vocab), cache)`` — the logits are
+        read at ``real_len - 1 - start`` clamped into the chunk and are
+        only meaningful on the FINAL chunk of a context."""
+        cfg = self.cfg
+        b, s = tokens.shape
+        x = self._embed_tokens(params, tokens, pos_offset=0)
+        if cfg.learned_positions:
+            # replace the offset-0 slice with the true chunk positions
+            tab = params["pos"]["pos_embedding"]
+            pe0 = jax.lax.dynamic_slice_in_dim(tab, 0, s, axis=0)
+            posv = jnp.asarray(start, jnp.int32) + jnp.arange(s)
+            pe_t = jnp.take(tab, posv, axis=0)
+            x = x - pe0.astype(x.dtype)[None] + pe_t.astype(x.dtype)[None]
+        new_cache = {}
+        for i, seg in enumerate(self.plan):
+            x, c = T.chunk_segment(
+                cfg, seg, params["segments"][f"seg{i}"], cache[f"seg{i}"],
+                x, slot, start, page_ids, real_len,
+            )
+            new_cache[f"seg{i}"] = c
+        x = T._norm(cfg, params["final_norm"], x)
+        logits = self._head(params, x)
+        idx = jnp.clip(
+            jnp.asarray(real_len, jnp.int32) - 1 - jnp.asarray(start, jnp.int32),
+            0, s - 1,
+        ).reshape(1, 1, 1)
+        last = jnp.take_along_axis(
+            logits, jnp.broadcast_to(idx, (b, 1, logits.shape[-1])), axis=1
+        )
+        return last, new_cache
+
     def decode_step(
         self, params: Params, cache: Any, token: jax.Array, pos: jax.Array
     ) -> Tuple[jax.Array, Any]:

@@ -488,6 +488,85 @@ def decode_segment(
     return x, new_cache
 
 
+def block_chunk(
+    cfg: ModelConfig,
+    spec: BlockSpec,
+    p: Params,
+    x: jax.Array,  # (1, C, d)
+    cache: Dict[str, Any],
+    slot: jax.Array,
+    start: jax.Array,
+    page_ids: jax.Array,
+    real_len: jax.Array,
+) -> Tuple[jax.Array, Dict[str, Any]]:
+    """Chunked-prefill twin of :func:`block_decode`: attention-family only
+    (``init_block_cache(paged=...)`` already rejects every other mixer, so
+    a chunk call can only ever see ``attn`` blocks)."""
+    if spec.mixer != "attn" or spec.cross:
+        raise NotImplementedError(
+            f"chunked prefill supports plain attention blocks only, "
+            f"got mixer={spec.mixer!r} cross={spec.cross}"
+        )
+    new_cache = dict(cache)
+    h = _norm(cfg, p["ln_mix"], x)
+    y, kv = attn_lib.attention_prefill_chunk(
+        p["mixer"], h, cache["kv"], slot=slot, start=start,
+        page_ids=page_ids, real_len=real_len,
+        n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+        head_dim=cfg.resolved_head_dim, rope_theta=cfg.rope_theta,
+    )
+    new_cache["kv"] = kv
+    x = x + y
+
+    if spec.ffn != "none":
+        h = _norm(cfg, p["ln_ffn"], x)
+        if spec.ffn in ("dense", "dense0"):
+            y = L.ffn(p["ffn"], h, cfg.ffn_activation)
+        elif spec.ffn == "moe":
+            y, _ = moe_lib.moe_forward(p["ffn"], h, cfg.moe)
+        else:
+            raise NotImplementedError(f"chunked prefill: ffn {spec.ffn!r}")
+        x = x + y
+    return x, new_cache
+
+
+def chunk_segment(
+    cfg: ModelConfig,
+    seg: Segment,
+    seg_params: Params,
+    seg_cache: Params,
+    x: jax.Array,
+    slot: jax.Array,
+    start: jax.Array,
+    page_ids: jax.Array,
+    real_len: jax.Array,
+):
+    repeats, pattern = seg
+
+    def body(x, pc):
+        p_r, c_r = pc
+        new_c = {}
+        for i, spec in enumerate(pattern):
+            x, c_i = block_chunk(
+                cfg, spec, p_r[f"b{i}"], x, c_r[f"b{i}"],
+                slot, start, page_ids, real_len,
+            )
+            new_c[f"b{i}"] = c_i
+        return x, new_c
+
+    if cfg.unroll_layers:
+        cache_list = []
+        for r in range(repeats):
+            p_r = jax.tree.map(lambda t: t[r], seg_params)
+            c_r = jax.tree.map(lambda t: t[r], seg_cache)
+            x, c = body(x, (p_r, c_r))
+            cache_list.append(c)
+        new_cache = jax.tree.map(lambda *xs: jnp.stack(xs), *cache_list)
+        return x, new_cache
+    x, new_cache = jax.lax.scan(body, x, (seg_params, seg_cache))
+    return x, new_cache
+
+
 def init_plan_cache(
     cfg: ModelConfig, plan: List[Segment], batch: int, cache_len: int, enc_len: int = 0,
     *, paged: Optional[Tuple[int, int]] = None,
